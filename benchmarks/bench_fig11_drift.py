@@ -1,0 +1,81 @@
+"""Figs 11+12: cross-workload drift — static vs adaptive recalibration.
+
+Placement is profiled on one dataset and served on another (SG→SN, SN→SG);
+adaptive ViBE/EPLB recover most of the lost goodput at the cost of brief
+migration stalls (Fig 12's TTFT spikes), with per-event moved-expert counts
+and transfer bytes accounted.
+"""
+
+import numpy as np
+
+from repro.configs import get
+from repro.core import (DriftConfig, ViBEConfig, ViBEController)
+from repro.serving import (EPSimulator, PAPER_SLOS, SimConfig, WORKLOADS,
+                           goodput, routing_profile, sample_requests)
+from .common import emit, paper_cluster, placement_for, profile_W
+
+
+def _sim(model, profile_wl, serve_wl, policy, adaptive, cluster, seed=3):
+    m = get(model)
+    perf = cluster.fit_models()
+    W0 = profile_W(model, profile_wl)
+    cfg = SimConfig(ep_degree=8, seed=seed, max_prefill_tokens=16_384)
+    if adaptive:
+        ctl = ViBEController(
+            m._n_moe_layers(), m.n_experts, 8, perf,
+            ViBEConfig(policy=policy, adaptive=True,
+                       drift=DriftConfig(window=50, interval=10,
+                                         cooldown=20),
+                       expert_bytes=3 * m.d_model * m.moe_d_ff * 2),
+            initial_w=W0)
+        return EPSimulator(m, cluster, WORKLOADS[serve_wl], cfg,
+                           controller=ctl)
+    pl = placement_for(policy, model, profile_wl, cluster)
+    return EPSimulator(m, cluster, WORKLOADS[serve_wl], cfg, placement=pl)
+
+
+def run(model="deepseek-v3-671b", quick=True):
+    cluster = paper_cluster(model, "mi325x")
+    m = get(model)
+    rows = []
+    n_req = 200 if quick else 500
+    cases = [("sonnet", "sonnet", 20.0), ("sharegpt", "sonnet", 20.0),
+             ("sonnet", "sharegpt", 120.0),
+             ("sharegpt", "sharegpt", 120.0)]
+    for prof_wl, serve_wl, qps in cases:
+        slo = PAPER_SLOS[(serve_wl, model)]
+        for policy in ("eplb", "vibe"):
+            for adaptive in ((False, True) if prof_wl != serve_wl
+                             else (False,)):
+                sim = _sim(model, prof_wl, serve_wl, policy, adaptive,
+                           cluster)
+                # serving profile differs from the profiled one → the sim's
+                # own routing profile is the *serving* workload's
+                reqs = sample_requests(WORKLOADS[serve_wl], n_req, qps=qps,
+                                       seed=4)
+                recs = sim.run(reqs, phase="prefill")
+                row = {
+                    "bench": "fig11",
+                    "label": f"{prof_wl[:2]}->{serve_wl[:2]}/{policy}"
+                             + ("/adaptive" if adaptive else "/static"),
+                    "goodput": goodput(recs, slo),
+                }
+                if adaptive and sim.controller is not None:
+                    moved = sum(u.moved_experts
+                                for u in sim.controller.updates)
+                    row.update(
+                        recalibrations=len(sim.controller.updates),
+                        moved_experts=moved,
+                        migration_bytes=sum(
+                            u.migration_bytes
+                            for u in sim.controller.updates),
+                        stall_total_ms=1e3 * sum(
+                            s for s, _, _ in sim.migration_stalls),
+                    )
+                rows.append(row)
+    emit(rows, "fig11_drift")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,53 @@
+"""Figs 13+14: sensitivity to the variability distribution.
+
+Three regimes: MI300X (mild), MI325X (paper main), and the skewed system
+(GPU 0 degraded 13% via a modified V-F curve). Reports the kernel-time
+spread at 4K tokens/expert-group (Fig 13) and the policy frontier (Fig 14).
+"""
+
+import numpy as np
+
+from repro.serving import PAPER_SLOS, WORKLOADS, goodput, sample_requests, \
+    slo_frontier
+from repro.serving.simulator import rank_latency_matrix
+from .common import POLICIES, emit, make_sim, paper_cluster, qps_grid
+
+
+def run(model="deepseek-v3-671b", workload="sonnet", quick=True):
+    rows = []
+    slo = PAPER_SLOS[(workload, model)]
+    for regime in ("mi300x", "mi325x", "skewed"):
+        cluster = paper_cluster(model, regime)
+        eq = np.full((1, 8), 16_384.0)
+        lat = rank_latency_matrix(cluster, eq)[0]
+        rows.append({
+            "bench": "fig13", "label": regime,
+            "kernel_spread_pct": 100 * float(lat.max() / lat.min() - 1),
+        })
+        grid = qps_grid(model, workload, cluster)
+        frontiers = {}
+        for policy in POLICIES:
+            g2q = {}
+            for qps in grid:
+                sim = make_sim(model, workload, policy, regime=regime,
+                               seed=1, cluster=cluster)
+                recs = sim.run(
+                    sample_requests(WORKLOADS[workload],
+                                    150 if quick else 400, qps=qps, seed=2),
+                    phase="prefill")
+                g2q[qps] = goodput(recs, slo)
+            frontiers[policy] = slo_frontier(g2q)
+            rows.append({"bench": "fig13",
+                         "label": f"{regime}/{policy}",
+                         "frontier_qps": frontiers[policy]})
+        rows.append({
+            "bench": "fig13", "label": regime,
+            "vibe_vs_eplb_pct": 100 * (frontiers["vibe"]
+                                       / max(frontiers["eplb"], 1e-9) - 1),
+        })
+    emit(rows, "fig13_sensitivity")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,36 @@
+"""Fig 1: token vs latency imbalance across MoE layers, per policy.
+
+Each MoE layer contributes one point (token max/min ratio across ranks,
+latency max/min ratio). EPLB collapses token imbalance but leaves latency
+imbalance; ViBE targets the latency-balanced regime.
+"""
+
+import numpy as np
+
+from repro.serving.simulator import rank_latency_matrix
+from .common import POLICIES, emit, paper_cluster, placement_for, profile_W
+
+
+def run(model="deepseek-v3-671b", workload="sonnet", quick=True):
+    cluster = paper_cluster(model, "mi325x")
+    W = profile_W(model, workload)
+    rows = []
+    for policy in POLICIES:
+        pl = placement_for(policy, model, workload, cluster)
+        loads = pl.rank_loads(W)
+        lat = rank_latency_matrix(cluster, loads)
+        tok_ratio = loads.max(1) / np.maximum(loads.min(1), 1e-9)
+        lat_ratio = lat.max(1) / lat.min(1)
+        rows.append({
+            "bench": "fig1", "label": policy,
+            "token_ratio_mean": float(tok_ratio.mean()),
+            "token_ratio_p95": float(np.percentile(tok_ratio, 95)),
+            "latency_ratio_mean": float(lat_ratio.mean()),
+            "latency_ratio_p95": float(np.percentile(lat_ratio, 95)),
+        })
+    emit(rows, "fig1_imbalance")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

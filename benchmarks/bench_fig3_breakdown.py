@@ -1,0 +1,40 @@
+"""Fig 3: kernel-time breakdown (MoE FFN / all-to-all / attention+other)
+for prefill and decode under perfect token balance.
+
+Paper: MoE FFN 49% of prefill, 20% of decode; a2a 24.5% / 22.1%.
+"""
+
+import numpy as np
+
+from repro.configs import get
+from .common import emit, make_sim
+
+
+def run(model="deepseek-v3-671b", quick=True):
+    m = get(model)
+    sim = make_sim(model, "sonnet", "eplb")
+    rows = []
+    for phase, tokens, ctx in (("prefill", 16_384, 512), ("decode", 64,
+                                                          1024)):
+        loads = np.full((sim.L, sim.E),
+                        tokens * m.top_k / sim.E)     # perfect balance
+        rank_load = sim.placement.rank_loads(loads)
+        from repro.serving.simulator import rank_latency_matrix
+        moe = float(rank_latency_matrix(sim.cluster,
+                                        rank_load).max(1).sum())
+        a2a = sim.L * sim._a2a_time(tokens)
+        attn = m.n_layers * sim._attn_time(tokens, ctx)
+        total = moe + a2a + attn
+        rows.append({
+            "bench": "fig3", "label": phase,
+            "moe_ffn_frac": moe / total,
+            "a2a_frac": a2a / total,
+            "attn_other_frac": attn / total,
+            "step_ms": total * 1e3,
+        })
+    emit(rows, "fig3_breakdown")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

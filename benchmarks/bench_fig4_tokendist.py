@@ -1,0 +1,31 @@
+"""Fig 4: per-GPU token share under vLLM contiguous placement.
+
+Paper: layer 11 prefill — busiest GPU >24% of tokens, lightest <10%.
+"""
+
+import numpy as np
+
+from .common import emit, paper_cluster, placement_for, profile_W
+
+
+def run(model="deepseek-v3-671b", workload="sonnet", quick=True):
+    cluster = paper_cluster(model, "mi325x")
+    W = profile_W(model, workload)
+    pl = placement_for("contiguous", model, workload, cluster)
+    shares = pl.rank_loads(W)
+    shares = shares / shares.sum(1, keepdims=True)
+    worst = int(np.argmax(shares.max(1)))
+    rows = [{
+        "bench": "fig4", "label": "contiguous",
+        "max_share_mean": float(shares.max(1).mean()),
+        "min_share_mean": float(shares.min(1).mean()),
+        "worst_layer": worst,
+        "worst_layer_max_share": float(shares[worst].max()),
+        "worst_layer_min_share": float(shares[worst].min()),
+    }]
+    emit(rows, "fig4_tokendist")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Fig 6: uniform vs variability-informed token assignment, one MoE layer.
+
+The variability-informed split (speed-proportional, training/elastic.py's
+``elastic_targets``) aligns per-GPU completion times even though token
+counts differ — the paper's core insight in its simplest form. Also applies
+to non-MoE archs' DP batch split (DESIGN.md §5 arch-applicability).
+"""
+
+import numpy as np
+
+from repro.serving.simulator import rank_latency_matrix
+from repro.training import elastic_targets
+from .common import emit, paper_cluster
+
+
+def run(model="deepseek-v3-671b", tokens=16_384, quick=True):
+    cluster = paper_cluster(model, "mi325x")
+    perf = cluster.fit_models()
+    G = cluster.n_devices
+    uniform = np.full((1, G), tokens / G)
+    informed = elastic_targets(perf, tokens, n_ref=tokens / G)[None, :]
+    rows = []
+    for label, loads in (("uniform", uniform),
+                         ("variability-informed", informed.astype(float))):
+        lat = rank_latency_matrix(cluster, loads)[0]
+        rows.append({
+            "bench": "fig6", "label": label,
+            "load_spread": float(loads[0].max() / loads[0].min()),
+            "latency_spread": float(lat.max() / lat.min()),
+            "completion_ms": float(lat.max() * 1e3),
+            "idle_frac": float((lat.max() - lat).mean() / lat.max()),
+        })
+    emit(rows, "fig6_assignment")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Figs 8+9: SLO attainment + TTFT/TPOT percentiles vs request rate.
+
+Sweeps QPS for each (model × dataset × policy), reporting goodput, the
+90%-goodput frontier, and latency percentiles (the paper's two headline
+figures share one sweep).
+"""
+
+from repro.serving import PAPER_SLOS, goodput, sample_requests, \
+    slo_frontier, summarize, WORKLOADS
+from .common import MODELS, POLICIES, emit, make_sim, qps_grid
+
+
+def run(quick=True, phase="prefill"):
+    rows = []
+    combos = ([("deepseek-v3-671b", "sonnet")] if quick else
+              [(m, w) for m in MODELS for w in ("sonnet", "sharegpt")])
+    n_req = 250 if quick else 600
+    for model, workload in combos:
+        slo = PAPER_SLOS[(workload, model)]
+        grid = qps_grid(model, workload)
+        frontiers = {}
+        for policy in POLICIES:
+            g2q = {}
+            for qps in grid:
+                sim = make_sim(model, workload, policy, seed=1)
+                recs = sim.run(sample_requests(WORKLOADS[workload], n_req,
+                                               qps=qps, seed=2),
+                               phase=phase)
+                g2q[qps] = goodput(recs, slo)
+                s = summarize(recs)
+                rows.append({
+                    "bench": "fig8",
+                    "label": f"{model[:8]}/{workload[:6]}/{policy}",
+                    "qps": qps, "goodput": g2q[qps],
+                    "ttft_p50_ms": s["ttft_p50"] * 1e3,
+                    "ttft_p90_ms": s["ttft_p90"] * 1e3,
+                    "ttft_p99_ms": s["ttft_p99"] * 1e3,
+                })
+            frontiers[policy] = slo_frontier(g2q)
+            rows.append({
+                "bench": "fig8",
+                "label": f"{model[:8]}/{workload[:6]}/{policy}",
+                "frontier_qps": frontiers[policy],
+            })
+        if frontiers["eplb"] > 0:
+            rows.append({
+                "bench": "fig8",
+                "label": f"{model[:8]}/{workload[:6]}",
+                "vibe_vs_eplb_frontier_pct":
+                    100 * (frontiers["vibe"] / frontiers["eplb"] - 1),
+                "vibe_vs_vllm_frontier_pct":
+                    100 * (frontiers["vibe"]
+                           / max(frontiers["contiguous"], 1e-9) - 1),
+            })
+    emit(rows, "fig8_slo")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,85 @@
+"""Kernel harness: fused MoE FFN + router vs pure-jnp references.
+
+On this CPU host the Pallas kernels execute in interpret mode (correctness,
+not speed); the wall-clock numbers reported are for the jitted XLA-CPU
+reference path, giving a stable regression metric, plus the kernels'
+VMEM/block accounting for the v5e target.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.kernels.moe_ffn import fused_moe_ffn_pallas
+from .common import emit
+
+SHAPES = [  # (E_loc, C, D, F) — per-device expert shards of the MoE archs
+    ("qwen3", 8, 512, 4096, 1536),
+    ("deepseek", 16, 512, 7168, 2048),
+    ("granite", 3, 512, 1536, 512),
+    ("jamba", 1, 512, 8192, 24576),
+]
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run(quick=True):
+    rows = []
+    jref = jax.jit(ref.moe_ffn_ref)
+    for name, E, C, D, F in SHAPES:
+        if quick and name in ("jamba", "deepseek"):
+            C = 64
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        toks = jax.random.normal(ks[0], (E, C, D)).astype(jnp.bfloat16)
+        w1 = (jax.random.normal(ks[1], (E, D, F)) / np.sqrt(D)).astype(jnp.bfloat16)
+        w3 = (jax.random.normal(ks[2], (E, D, F)) / np.sqrt(D)).astype(jnp.bfloat16)
+        w2 = (jax.random.normal(ks[3], (E, F, D)) / np.sqrt(F)).astype(jnp.bfloat16)
+        us = _time(jref, w1, w3, w2, toks) * 1e6
+        y_ref = np.asarray(jref(w1, w3, w2, toks), np.float32)
+        bm, bf = ops.pick_blocks(D, F)
+        # interpret-mode correctness on a small slice (full jamba is slow)
+        sl = min(C, 32 if quick else 64)
+        y_k = np.asarray(
+            fused_moe_ffn_pallas(w1, w3, w2, toks[:, :sl], bm=min(bm, sl),
+                                 bf=bf, interpret=True), np.float32)
+        err = np.abs(y_k - y_ref[:, :sl]).max() / max(np.abs(y_ref).max(),
+                                                      1e-9)
+        flops = 2 * E * C * D * F * 3
+        resident = (bm * D * 2 + bm * D * 4 + 3 * D * bf * 2 + bm * bf * 4)
+        rows.append({
+            "bench": "kernels", "label": name,
+            "ref_us_per_call": us,
+            "rel_err_vs_ref": float(err),
+            "gflop": flops / 1e9,
+            "block_bm": bm, "block_bf": bf,
+            "vmem_resident_mib": resident / 2**20,
+            "v5e_ideal_us": flops / 197e12 * 1e6,
+        })
+    # router
+    for T, E, K in ((4096, 128, 8), (4096, 256, 8)):
+        logits = jax.random.normal(jax.random.PRNGKey(1), (T, E))
+        jr = jax.jit(lambda l: ref.router_topk_ref(l, K))
+        us = _time(jr, logits) * 1e6
+        w_r, i_r = jr(logits)
+        w_k, i_k = ops.router_topk(logits, K)
+        rows.append({
+            "bench": "kernels", "label": f"router_T{T}_E{E}",
+            "ref_us_per_call": us,
+            "idx_match": bool((np.asarray(i_k) == np.asarray(i_r)).all()),
+        })
+    emit(rows, "kernels")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,107 @@
+"""Shared benchmark scaffolding: paper-setup clusters, profiles, policies.
+
+Every harness reproduces one paper artifact on the DESIGN.md §4 evaluation
+path: real solvers + real routing statistics + the calibrated ground-truth
+variability model, replayed through the discrete-event EP simulator.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs import get
+from repro.core import (ClusterVariability, DriftConfig, ViBEConfig,
+                        ViBEController, make_cluster, solve_model_placement)
+from repro.serving import (EPSimulator, PAPER_SLOS, SimConfig, WORKLOADS,
+                           goodput, routing_profile, sample_requests,
+                           slo_frontier, summarize)
+
+POLICIES = ("contiguous", "eplb", "vibe")
+MODELS = ("deepseek-v3-671b", "qwen3-moe-235b-a22b")
+PROFILE_TOKENS = 16_384            # paper's stressed operating point
+
+
+def paper_cluster(model_name: str, regime: str = "mi325x", ep: int = 8,
+                  seed: int = 0) -> ClusterVariability:
+    m = get(model_name)
+    return make_cluster(ep, regime, d_model=m.d_model, d_ff=m.moe_d_ff,
+                        experts_per_rank=max(m.n_experts // ep, 1),
+                        seed=seed)
+
+
+def profile_W(model_name: str, workload: str, ep: int = 8) -> np.ndarray:
+    m = get(model_name)
+    prof = routing_profile(WORKLOADS[workload], m._n_moe_layers(),
+                           m.n_experts)
+    return prof * PROFILE_TOKENS * m.top_k
+
+
+def placement_for(policy: str, model_name: str, workload: str,
+                  cluster: ClusterVariability, ep: int = 8):
+    W = profile_W(model_name, workload, ep)
+    perf = cluster.fit_models()
+    return solve_model_placement(
+        policy, W, ep, perf_models=perf if policy == "vibe" else None)
+
+
+def make_sim(model_name: str, workload: str, policy: str,
+             regime: str = "mi325x", ep: int = 8, seed: int = 1,
+             adaptive: bool = False, record_layers: bool = False,
+             cluster: Optional[ClusterVariability] = None) -> EPSimulator:
+    m = get(model_name)
+    cluster = cluster or paper_cluster(model_name, regime, ep)
+    sim_cfg = SimConfig(ep_degree=ep, seed=seed, max_prefill_tokens=16_384,
+                        record_layer_stats=record_layers)
+    if adaptive:
+        perf = cluster.fit_models()
+        ctl = ViBEController(
+            m._n_moe_layers(), m.n_experts, ep, perf,
+            ViBEConfig(policy=policy, adaptive=True,
+                       drift=DriftConfig(window=50, interval=10,
+                                         cooldown=20),
+                       expert_bytes=3 * m.d_model * m.moe_d_ff * 2),
+            initial_w=profile_W(model_name, workload, ep))
+        return EPSimulator(m, cluster, WORKLOADS[workload], sim_cfg,
+                           controller=ctl)
+    pl = placement_for(policy, model_name, workload, cluster, ep)
+    return EPSimulator(m, cluster, WORKLOADS[workload], sim_cfg,
+                       placement=pl)
+
+
+def qps_grid(model_name: str, workload: str, cluster=None, n: int = 5):
+    """Capacity-relative QPS grid bracketing the saturation knee."""
+    cluster = cluster or paper_cluster(model_name)
+    sim = EPSimulator(get(model_name), cluster, WORKLOADS[workload],
+                      SimConfig(ep_degree=cluster.n_devices, seed=0,
+                                max_prefill_tokens=16_384),
+                      placement=placement_for("eplb", model_name, workload,
+                                              cluster,
+                                              cluster.n_devices))
+    mean_in = WORKLOADS[workload].mean_in
+    per_step = max(int(16_384 // mean_in), 1)
+    dt = sim.step_time(int(per_step * mean_in), mean_in / 2)
+    capacity = per_step / dt
+    return tuple(round(capacity * f, 1) for f in
+                 np.linspace(0.55, 1.15, n))
+
+
+def emit(rows: List[Dict], name: str) -> None:
+    """CSV to stdout + JSON under results/bench/."""
+    os.makedirs("results/bench", exist_ok=True)
+    with open(f"results/bench/{name}.json", "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+    for r in rows:
+        for k, v in r.items():
+            if k in ("bench", "label"):
+                continue
+            tag = r.get("label", name)
+            if isinstance(v, float):
+                print(f"{name},{tag},{k},{v:.6g}")
+            elif isinstance(v, (int, str)):
+                print(f"{name},{tag},{k},{v}")
+    sys.stdout.flush()

@@ -1,0 +1,59 @@
+"""Benchmark aggregator: one harness per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig8,fig10]
+
+Prints ``bench,label,metric,value`` CSV lines; JSON per harness lands in
+results/bench/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (bench_fig1_imbalance, bench_fig3_breakdown,
+               bench_fig4_tokendist, bench_fig6_assignment, bench_fig8_slo,
+               bench_fig10_gap, bench_fig11_drift, bench_fig13_sensitivity,
+               bench_fig15_scaling, bench_kernels)
+
+HARNESSES = {
+    "fig1": bench_fig1_imbalance.run,
+    "fig3": bench_fig3_breakdown.run,
+    "fig4": bench_fig4_tokendist.run,
+    "fig6": bench_fig6_assignment.run,
+    "fig8": bench_fig8_slo.run,
+    "fig10": bench_fig10_gap.run,
+    "fig11": bench_fig11_drift.run,
+    "fig13": bench_fig13_sensitivity.run,
+    "fig15": bench_fig15_scaling.run,
+    "kernels": bench_kernels.run,
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweeps (slower)")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    failures = 0
+    for name, fn in HARNESSES.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn(quick=not args.full)
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

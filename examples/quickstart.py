@@ -1,0 +1,54 @@
+"""Quickstart: ViBE in 60 lines — profile, place, drift, recalibrate.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import (DriftConfig, ViBEConfig, ViBEController,
+                        eplb_placement, make_cluster, layer_latency_span,
+                        vibe_placement)
+from repro.serving import WORKLOADS, routing_profile
+
+# A ground-truth 8-device cluster in the paper's MI325X regime: nominally
+# identical devices, up to ~7% kernel-time spread under power-limited load.
+cluster = make_cluster(8, "mi325x", d_model=7168, d_ff=2048,
+                       experts_per_rank=32)
+
+# Phase 1a — profile each device once: token count → fused-MoE latency.
+perf_models = cluster.fit_models()
+print("device speeds @stress:",
+      np.round([m.speed(3 * cluster.n_tdp) for m in perf_models], 2))
+
+# Phase 1b — profile expert activation on a representative workload.
+L, E, TOP_K, TOKENS = 61, 256, 8, 16_384
+W = routing_profile(WORKLOADS["sonnet"], L, E) * TOKENS * TOP_K
+
+# Phase 2 — variability-informed placement vs token-balanced EPLB.
+vibe = vibe_placement(W, perf_models)
+eplb = eplb_placement(W, n_ranks=8)
+for name, pl in (("eplb", eplb), ("vibe", vibe)):
+    span = layer_latency_span(pl, W, perf_models)
+    print(f"{name}: predicted layer latency max {span[:, 0].mean() * 1e3:.3f}ms"
+          f"  span {(span[:, 0] - span[:, 2]).mean() * 1e3:.3f}ms")
+
+# Phase 3 — serve with drift-aware recalibration.
+ctl = ViBEController(
+    L, E, 8, perf_models,
+    ViBEConfig(policy="vibe", adaptive=True,
+               drift=DriftConfig(window=50, interval=10, cooldown=20),
+               expert_bytes=3 * 7168 * 2048 * 2),
+    initial_w=W)
+
+rng = np.random.default_rng(0)
+W_drifted = routing_profile(WORKLOADS["sharegpt"], L, E) * TOKENS * TOP_K
+for step in range(200):
+    w_now = (W if step < 80 else W_drifted) * rng.uniform(0.97, 1.03)
+    upd = ctl.observe(w_now, tokens=TOKENS)
+    if upd is not None:
+        print(f"step {step}: drift {upd.event.kind} "
+              f"(cos d={upd.event.max_cos_distance:.3f}) → "
+              f"recalibrated, moved {upd.moved_experts} expert slots "
+              f"({upd.migration_bytes / 2**20:.0f} MiB) "
+              f"{'full re-solve' if upd.full_resolve else 'incremental'}")
+print(f"total recalibrations: {len(ctl.updates)}")

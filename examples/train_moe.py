@@ -1,0 +1,47 @@
+"""Train a ~100M-param MoE LM for a few hundred steps on this host,
+with checkpoints, restart, and the routing statistics that seed ViBE.
+
+    PYTHONPATH=src python examples/train_moe.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+import tempfile
+
+import numpy as np
+
+from repro.configs import get_smoke
+import repro.configs.qwen3_moe_235b as q3
+from repro.launch.train import train
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    # ~100M-param qwen3-family MoE (scaled-up smoke config)
+    cfg = dataclasses.replace(
+        get_smoke("qwen3-moe-235b-a22b"), name="qwen3-moe-100m",
+        n_layers=8, d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+        n_experts=16, top_k=4, moe_d_ff=512, vocab=16384)
+    import repro.configs as C
+    # register so the driver can resolve it
+    C._MODULES["qwen3-moe-100m"] = "qwen3_moe_235b"
+    q3.SMOKE_100M = cfg
+    orig = C.get_smoke
+    C.get_smoke = lambda n: cfg if n == "qwen3-moe-100m" else orig(n)
+    import repro.launch.train as T
+    T.get_smoke = C.get_smoke
+
+    ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix="vibe_train_")
+    params, opt, losses, tallies = train(
+        "qwen3-moe-100m", smoke=True, steps=args.steps, seq_len=128,
+        batch=8, ckpt_dir=ckpt, ckpt_every=50, log_every=20)
+    print(f"loss: {losses[0]:.3f} → {losses[-1]:.3f} over {args.steps} steps")
+    if tallies is not None:
+        per_expert = tallies.sum(0)
+        print(f"router specialization: expert load max/min = "
+              f"{per_expert.max() / max(per_expert.min(), 1):.2f} "
+              f"(this matrix seeds ViBE's Phase 2 placement)")
+    print(f"checkpoints in {ckpt} (restartable: rerun with --ckpt-dir)")

@@ -1,0 +1,27 @@
+# The paper's primary contribution: ViBE — Variability-Informed Binning of
+# Experts. Hardware-aware expert placement for distributed MoE serving.
+from .activation import ActivationProfiler, routing_tally
+from .controller import PlacementUpdate, ViBEConfig, ViBEController
+from .drift import DriftConfig, DriftDetector, DriftEvent, cosine_distance
+from .incremental import IncrementalResult, Swap, incremental_update
+from .perf_model import (DeviceProfile, PerfModel, fit_perf_model,
+                         profile_device)
+from .placement import (Placement, contiguous_placement, eplb_placement,
+                        layer_latency_span, placement_to_permutation,
+                        permutation_to_placement, predicted_layer_latency,
+                        solve_model_placement, vibe_placement)
+from .variability import (REGIMES, ClusterVariability, VariabilityRegime,
+                          make_cluster)
+
+__all__ = [
+    "ActivationProfiler", "routing_tally",
+    "PlacementUpdate", "ViBEConfig", "ViBEController",
+    "DriftConfig", "DriftDetector", "DriftEvent", "cosine_distance",
+    "IncrementalResult", "Swap", "incremental_update",
+    "DeviceProfile", "PerfModel", "fit_perf_model", "profile_device",
+    "Placement", "contiguous_placement", "eplb_placement",
+    "layer_latency_span", "placement_to_permutation",
+    "permutation_to_placement", "predicted_layer_latency",
+    "solve_model_placement", "vibe_placement",
+    "REGIMES", "ClusterVariability", "VariabilityRegime", "make_cluster",
+]

@@ -1,0 +1,148 @@
+"""ViBE end-to-end controller (paper Algorithm 1, Appendix A.1).
+
+Ties the four components together across the three phases:
+
+  Phase 1 (offline):  profile each EP rank → f_g(n); run representative
+                      workload → activation matrix W.
+  Phase 2 (initial):  vibe_placement(W, {f_g}).
+  Phase 3 (online):   every H forward passes check drift; on trigger refresh
+                      W from recent routing, run the incremental solver,
+                      snapshot the reference, cool down.
+
+The controller is engine-agnostic: the serving engine feeds it per-step
+routing tallies + observed batch token counts and asks for the current
+placement; when a recalibration fires, the controller returns a
+:class:`PlacementUpdate` whose swap list doubles as the weight-migration
+plan (bytes accounted for the paper's transfer-volume comparison).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .activation import ActivationProfiler
+from .drift import DriftConfig, DriftDetector, DriftEvent
+from .incremental import IncrementalResult, incremental_update
+from .perf_model import PerfModel
+from .placement import Placement, solve_model_placement
+
+__all__ = ["ViBEConfig", "PlacementUpdate", "ViBEController"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ViBEConfig:
+    policy: str = "vibe"              # "vibe" | "eplb" | "contiguous"
+    adaptive: bool = True             # Phase 3 on/off (paper: static vs adaptive)
+    drift: DriftConfig = dataclasses.field(default_factory=DriftConfig)
+    epsilon: float = 0.03             # incremental solver tolerance
+    expert_bytes: int = 0             # per-expert weight bytes (migration cost)
+    full_resolve_on_stress: bool = True
+    # stress drift changes f_g's operating point → re-solve from scratch is
+    # allowed there (the paper's magnitude-aware recalibration); routing-only
+    # drift uses the minimal-movement incremental solver.
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementUpdate:
+    step: int
+    event: DriftEvent
+    placement: Placement
+    moved_experts: int
+    migration_bytes: int
+    swaps_per_layer: Optional[np.ndarray] = None
+    full_resolve: bool = False
+
+
+class ViBEController:
+    def __init__(
+        self,
+        n_layers: int,
+        n_experts: int,
+        n_ranks: int,
+        perf_models: Sequence[PerfModel],
+        config: ViBEConfig = ViBEConfig(),
+        initial_w: Optional[np.ndarray] = None,
+    ):
+        if len(perf_models) != n_ranks:
+            raise ValueError("one perf model per EP rank required")
+        self.cfg = config
+        self.L, self.E, self.G = n_layers, n_experts, n_ranks
+        self.perf_models = list(perf_models)
+        self.profiler = ActivationProfiler(n_layers, n_experts,
+                                           window=config.drift.window)
+        self.detector = DriftDetector(n_layers, n_experts, config.drift)
+        w0 = (np.atleast_2d(initial_w) if initial_w is not None
+              else np.full((n_layers, n_experts), 1.0 / n_experts))
+        self.placement = solve_model_placement(
+            config.policy, w0, n_ranks,
+            perf_models=self.perf_models if config.policy == "vibe" else None)
+        self._step = 0
+        self.updates: List[PlacementUpdate] = []
+
+    # ------------------------------------------------------------------
+    @property
+    def step(self) -> int:
+        return self._step
+
+    def observe(self, step_counts: np.ndarray,
+                tokens: Optional[float] = None) -> Optional[PlacementUpdate]:
+        """Feed one forward pass; returns an update when recalibration fires.
+
+        ``step_counts``: (L, E) routing tallies for this pass.
+        ``tokens``: batch token count (defaults to layer-0 tally sum).
+        """
+        self._step += 1
+        step_counts = np.asarray(step_counts, dtype=np.float64)
+        self.profiler.update(step_counts)
+        if tokens is None:
+            tokens = float(step_counts[0].sum())
+        if not self.cfg.adaptive or self.cfg.policy == "contiguous":
+            # still track (so static-vs-adaptive comparisons share stats)
+            self.detector.observe(step_counts, tokens)
+            return None
+        event = self.detector.observe(step_counts, tokens)
+        if event is None:
+            return None
+        return self._recalibrate(event)
+
+    # ------------------------------------------------------------------
+    def _recalibrate(self, event: DriftEvent) -> PlacementUpdate:
+        w = self.profiler.window_matrix()
+        old = self.placement
+        if event.kind == "stress" and self.cfg.full_resolve_on_stress:
+            # magnitude shift: operating point of every f_g moved → full
+            # re-solve at the new stress level (still same machinery)
+            new = solve_model_placement(
+                self.cfg.policy, w, self.G,
+                perf_models=self.perf_models if self.cfg.policy == "vibe" else None)
+            moved = new.moved_experts(old)
+            upd = PlacementUpdate(
+                step=self._step, event=event, placement=new,
+                moved_experts=moved,
+                migration_bytes=moved * self.cfg.expert_bytes,
+                full_resolve=True)
+        else:
+            if self.cfg.policy == "vibe":
+                res: IncrementalResult = incremental_update(
+                    old, w, self.perf_models, epsilon=self.cfg.epsilon)
+                new, moved = res.placement, res.moved_expert_count()
+                upd = PlacementUpdate(
+                    step=self._step, event=event, placement=new,
+                    moved_experts=moved,
+                    migration_bytes=moved * self.cfg.expert_bytes,
+                    swaps_per_layer=res.per_layer_swaps)
+            else:  # eplb-style full greedy re-solve (the paper's contrast)
+                new = solve_model_placement(self.cfg.policy, w, self.G)
+                moved = new.moved_experts(old)
+                upd = PlacementUpdate(
+                    step=self._step, event=event, placement=new,
+                    moved_experts=moved,
+                    migration_bytes=moved * self.cfg.expert_bytes,
+                    full_resolve=True)
+        self.placement = upd.placement
+        self.detector.snapshot()
+        self.updates.append(upd)
+        return upd

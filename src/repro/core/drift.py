@@ -1,0 +1,135 @@
+"""Drift detection (paper §4.2.4 "Drift-triggered recalibration", Alg 1 Phase 3).
+
+ViBE monitors two signals rather than recalibrating on a fixed cadence:
+
+1. **Routing drift** — cosine distance between the current windowed mean
+   per-layer expert-load vector w and the reference snapshot ŵ recorded at
+   the last rearrangement:
+
+       d_l = 1 − (w·ŵ)/(‖w‖‖ŵ‖)
+
+   checked every H forward passes (default 10) over a 100-sample window;
+   trigger when max_l d_l > δ_cos (default 0.05).
+
+2. **Stress drift** — unlike EPLB, ViBE also tracks absolute token
+   *magnitude*, because hardware variability is stress-dependent: the same
+   routing ratios at 4× the batch tokens push devices into steeper regions
+   of f_g(n). We trigger when the windowed mean batch token count deviates
+   from the reference by more than ``delta_mag`` (relative).
+
+After a rearrangement a cooldown of H forward passes suppresses spurious
+re-triggers from the transient load burst caused by the rearrangement itself
+(paper Appendix A.1).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, Optional
+
+import numpy as np
+
+__all__ = ["DriftConfig", "DriftDetector", "DriftEvent"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftConfig:
+    delta_cos: float = 0.05      # cosine-distance threshold (paper default)
+    delta_mag: float = 0.5       # relative token-magnitude threshold
+    window: int = 100            # samples in the rolling mean (paper: 100)
+    interval: int = 10           # H — check every H forward passes
+    cooldown: int = 10           # forward passes suppressed after a trigger
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftEvent:
+    step: int
+    kind: str                    # "routing" | "stress"
+    max_cos_distance: float
+    layer: int                   # argmax layer for routing drift (-1 stress)
+    magnitude_ratio: float
+
+
+def cosine_distance(a: np.ndarray, b: np.ndarray) -> float:
+    na, nb = float(np.linalg.norm(a)), float(np.linalg.norm(b))
+    if na == 0.0 or nb == 0.0:
+        return 0.0 if na == nb else 1.0
+    return float(1.0 - np.dot(a, b) / (na * nb))
+
+
+class DriftDetector:
+    """Stateful monitor fed one observation per forward pass.
+
+    ``observe(w_step, tokens)`` with w_step the (L, E) per-layer expert load
+    of this step and ``tokens`` the batch token count. Returns a DriftEvent
+    when recalibration should fire, else None.
+    """
+
+    def __init__(self, n_layers: int, n_experts: int,
+                 config: DriftConfig = DriftConfig()):
+        self.cfg = config
+        self.L, self.E = n_layers, n_experts
+        self._win: Deque[np.ndarray] = collections.deque(maxlen=config.window)
+        self._tok_win: Deque[float] = collections.deque(maxlen=config.window)
+        self._ref: Optional[np.ndarray] = None       # (L, E) snapshot ŵ
+        self._ref_tokens: Optional[float] = None
+        self._step = 0
+        self._cooldown_until = -1
+        self.events = []
+
+    # -- reference management -------------------------------------------
+
+    def snapshot(self) -> None:
+        """Record current window mean as the reference ŵ (after rearrange)."""
+        if self._win:
+            self._ref = self.window_mean()
+            self._ref_tokens = float(np.mean(self._tok_win))
+        self._cooldown_until = self._step + self.cfg.cooldown
+
+    def window_mean(self) -> np.ndarray:
+        return np.mean(np.stack(self._win), axis=0)
+
+    @property
+    def reference(self) -> Optional[np.ndarray]:
+        return self._ref
+
+    # -- main entry point -------------------------------------------------
+
+    def observe(self, w_step: np.ndarray, tokens: float) -> Optional[DriftEvent]:
+        w_step = np.asarray(w_step, dtype=np.float64)
+        if w_step.shape != (self.L, self.E):
+            raise ValueError(f"expected ({self.L},{self.E}), got {w_step.shape}")
+        self._win.append(w_step)
+        self._tok_win.append(float(tokens))
+        self._step += 1
+
+        if self._ref is None:
+            # bootstrap: snapshot once the window has filled
+            if len(self._win) >= self.cfg.window:
+                self.snapshot()
+            return None
+        if self._step <= self._cooldown_until:
+            return None
+        if self._step % self.cfg.interval != 0:
+            return None
+        if len(self._win) < self.cfg.window:
+            return None
+
+        mean = self.window_mean()
+        # routing drift: max per-layer cosine distance
+        dists = np.array([cosine_distance(mean[l], self._ref[l])
+                          for l in range(self.L)])
+        l_max = int(np.argmax(dists))
+        d_max = float(dists[l_max])
+        mag_ratio = (float(np.mean(self._tok_win)) /
+                     max(self._ref_tokens, 1e-9))
+
+        event = None
+        if d_max > self.cfg.delta_cos:
+            event = DriftEvent(self._step, "routing", d_max, l_max, mag_ratio)
+        elif abs(mag_ratio - 1.0) > self.cfg.delta_mag:
+            event = DriftEvent(self._step, "stress", d_max, -1, mag_ratio)
+        if event is not None:
+            self.events.append(event)
+        return event

@@ -1,0 +1,193 @@
+"""Device-specific performance models (paper §4.2.1).
+
+Each EP rank g gets a model ``f_g(n)`` mapping token load ``n`` to expected
+fused-MoE kernel latency. The paper profiles each GPU once with the fused MoE
+kernel across a token-count sweep and notes the load→latency relationship is
+stable over time, so a fitted model can be retained for the serving lifetime.
+
+We model the physically-motivated two-regime shape observed on both GPUs and
+TPUs:
+
+  latency(n) = max(t_mem(n), t_compute(n)) + t_base
+
+* ``t_base``    — kernel launch / dispatch overhead (device-independent-ish).
+* ``t_mem``     — weight + activation traffic; for small n the expert weights
+                  dominate and latency is ~flat in n (memory-bound floor).
+* ``t_compute`` — MXU/SIMD time, linear in n, with a device-specific speed
+                  factor; near the power envelope the effective slope grows
+                  (DVFS throttling), which we capture with a piecewise-linear
+                  fit rather than a single slope.
+
+The public surface is small:
+
+  * :class:`PerfModel` — immutable fitted model; ``__call__(n) -> seconds``;
+    ``speed(n_ref)`` = 1/f_g(n_ref) (the paper's s_g).
+  * :func:`fit_perf_model` — least-squares piecewise-linear fit from
+    (token_count, latency) samples, as produced by the profiling harness.
+  * :class:`DeviceProfile` — the profiling sweep record for one device.
+
+Everything here is plain numpy — this is control-plane code that runs on the
+host next to the serving engine, exactly as in the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "PerfModel",
+    "DeviceProfile",
+    "fit_perf_model",
+    "profile_device",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfModel:
+    """Piecewise-linear token-load → latency model for one device.
+
+    ``knots``  — increasing token counts (K,), first is 0.
+    ``lat``    — latency (seconds) at each knot (K,).
+    Between knots latency is linear; beyond the last knot it extrapolates
+    with the final segment's slope. This representation subsumes the paper's
+    "assume f_g monotone" requirement and captures the memory-bound floor +
+    power-throttled steep region without committing to a parametric form.
+    """
+
+    knots: np.ndarray
+    lat: np.ndarray
+    device_id: int = 0
+
+    def __post_init__(self):
+        k = np.asarray(self.knots, dtype=np.float64)
+        l = np.asarray(self.lat, dtype=np.float64)
+        if k.ndim != 1 or k.shape != l.shape or k.size < 2:
+            raise ValueError("knots/lat must be matching 1-D arrays, >=2 points")
+        if not np.all(np.diff(k) > 0):
+            raise ValueError("knots must be strictly increasing")
+        if np.any(l <= 0):
+            raise ValueError("latencies must be positive")
+        object.__setattr__(self, "knots", k)
+        object.__setattr__(self, "lat", l)
+
+    def __call__(self, n) -> np.ndarray:
+        """Predicted latency (seconds) at token load ``n`` (scalar or array)."""
+        n = np.asarray(n, dtype=np.float64)
+        k, l = self.knots, self.lat
+        # linear extrapolation beyond last knot using the final slope
+        out = np.interp(n, k, l)
+        last_slope = (l[-1] - l[-2]) / (k[-1] - k[-2])
+        over = n > k[-1]
+        out = np.where(over, l[-1] + (n - k[-1]) * last_slope, out)
+        return out if out.ndim else float(out)
+
+    def speed(self, n_ref: float) -> float:
+        """Paper's s_g = 1 / f_g(n_ref)."""
+        return 1.0 / float(self(n_ref))
+
+    def throughput(self, n: float) -> float:
+        """Tokens per second at load n (marginal, from local slope)."""
+        eps = max(1.0, 0.01 * n)
+        return 2 * eps / (float(self(n + eps)) - float(self(n - eps)) + 1e-30)
+
+    def scaled(self, factor: float) -> "PerfModel":
+        """A copy with all latencies scaled (e.g. to model degradation)."""
+        return PerfModel(self.knots.copy(), self.lat * factor, self.device_id)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """Raw profiling sweep for one device: latency at each token count."""
+
+    device_id: int
+    token_counts: np.ndarray  # (S,)
+    latencies: np.ndarray     # (S,) seconds
+
+    def __post_init__(self):
+        object.__setattr__(self, "token_counts",
+                           np.asarray(self.token_counts, dtype=np.float64))
+        object.__setattr__(self, "latencies",
+                           np.asarray(self.latencies, dtype=np.float64))
+
+
+def fit_perf_model(profile: DeviceProfile, n_knots: int = 8) -> PerfModel:
+    """Fit a monotone piecewise-linear model to a profiling sweep.
+
+    Knots are placed at quantiles of the sampled token counts; latency at
+    each knot is an isotonic-regularized local mean, guaranteeing the fitted
+    f_g is monotone non-decreasing (physical requirement — more tokens never
+    finish faster).
+    """
+    tc, lt = profile.token_counts, profile.latencies
+    order = np.argsort(tc)
+    tc, lt = tc[order], lt[order]
+    if tc.size < 2:
+        raise ValueError("need at least 2 profile samples")
+    n_knots = int(min(n_knots, tc.size))
+    qs = np.linspace(0.0, 1.0, n_knots)
+    knots = np.quantile(tc, qs)
+    # de-duplicate knots (quantiles of few samples can repeat)
+    knots = np.unique(knots)
+    if knots.size < 2:
+        knots = np.array([tc.min(), tc.max() + 1.0])
+    # local mean latency per knot via nearest-knot binning
+    idx = np.abs(tc[:, None] - knots[None, :]).argmin(axis=1)
+    lat = np.array([lt[idx == i].mean() if np.any(idx == i) else np.nan
+                    for i in range(knots.size)])
+    # fill empty bins by interpolation
+    bad = np.isnan(lat)
+    if bad.any():
+        lat[bad] = np.interp(knots[bad], knots[~bad], lat[~bad])
+    # isotonic pass (pool adjacent violators, simple O(K^2) is fine for K<=16)
+    lat = _pava(lat)
+    # strictly positive floor
+    lat = np.maximum(lat, 1e-9)
+    return PerfModel(knots, lat, device_id=profile.device_id)
+
+
+def _pava(y: np.ndarray) -> np.ndarray:
+    """Pool-adjacent-violators: smallest monotone non-decreasing fit."""
+    y = y.astype(np.float64).copy()
+    n = y.size
+    w = np.ones(n)
+    # classic stack-based PAVA
+    vals = [y[0]]
+    wts = [w[0]]
+    for i in range(1, n):
+        vals.append(y[i])
+        wts.append(w[i])
+        while len(vals) > 1 and vals[-2] > vals[-1]:
+            v = (vals[-2] * wts[-2] + vals[-1] * wts[-1]) / (wts[-2] + wts[-1])
+            wt = wts[-2] + wts[-1]
+            vals = vals[:-2] + [v]
+            wts = wts[:-2] + [wt]
+    out = []
+    for v, wt in zip(vals, wts):
+        out.extend([v] * int(round(wt)))
+    return np.asarray(out[:n])
+
+
+def profile_device(
+    latency_fn,
+    device_id: int,
+    token_counts: Sequence[int] = (64, 128, 256, 512, 1024, 2048, 4096, 8192),
+    repeats: int = 3,
+) -> DeviceProfile:
+    """Run the profiling sweep: call ``latency_fn(device_id, n)`` (seconds).
+
+    In production ``latency_fn`` times the fused MoE kernel on the real
+    device (after a warm-up to steady-state thermals, per the paper); in this
+    repo the serving simulator and tests inject synthetic device behaviour.
+    The median over ``repeats`` is recorded per token count.
+    """
+    tc, lat = [], []
+    for n in token_counts:
+        samples = [float(latency_fn(device_id, int(n))) for _ in range(repeats)]
+        tc.append(float(n))
+        lat.append(float(np.median(samples)))
+    return DeviceProfile(device_id=device_id,
+                         token_counts=np.asarray(tc),
+                         latencies=np.asarray(lat))

@@ -1,0 +1,264 @@
+"""Expert placement solvers (paper §4.2.3, Table 2c, Alg 1 Phase 2).
+
+Three policies, matching the paper's evaluation matrix:
+
+* :func:`contiguous_placement` — vLLM baseline: logical experts partitioned
+  contiguously, expert e → rank e // (E/G). No workload or hardware awareness.
+* :func:`eplb_placement` — EPLB baseline: greedy token-count balancing.
+  Identical machinery to ViBE but with the implicit assumption f_g(n) = n
+  (paper: "EPLB implicitly assumes f_g(n)=n, so it cannot compensate for
+  hardware throughput differences").
+* :func:`vibe_placement` — the paper's contribution. Per layer:
+    1. speed estimate  s_g = 1 / f_g(n_ref),  n_ref = N / E (mean per-expert
+       token load),
+    2. token target    τ_g = N · s_g / Σ_h s_h,
+    3. experts assigned in descending load order to the rank farthest below
+       its target (most remaining target capacity), subject to the uniform
+       slot constraint (same #experts per rank — paper §5.1 keeps memory
+       uniform; non-uniform allocation is future work there, optional here).
+
+A placement for one layer is an integer array ``assign`` of shape (E,) with
+``assign[e] = rank``; for the whole model a (L, E) matrix. Helpers convert to
+the logical→physical permutation used by the JAX MoE layer (models/moe.py).
+
+All solvers are pure numpy host code (control plane).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from .perf_model import PerfModel
+
+__all__ = [
+    "Placement",
+    "contiguous_placement",
+    "eplb_placement",
+    "vibe_placement",
+    "solve_model_placement",
+    "placement_to_permutation",
+    "permutation_to_placement",
+    "predicted_layer_latency",
+    "layer_latency_span",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Expert→rank assignment for every MoE layer.
+
+    ``assign``: (L, E) int array, assign[l, e] = EP rank of logical expert e.
+    ``perm``:   (L, E) int array, perm[l, p] = logical expert held in physical
+                slot p (slots are rank-major: rank g owns slots
+                [g*E_loc, (g+1)*E_loc)). This is what the JAX layer consumes.
+    """
+
+    assign: np.ndarray
+    n_ranks: int
+
+    def __post_init__(self):
+        a = np.asarray(self.assign, dtype=np.int32)
+        if a.ndim == 1:
+            a = a[None, :]
+        object.__setattr__(self, "assign", a)
+        L, E = a.shape
+        if E % self.n_ranks != 0:
+            raise ValueError(f"E={E} not divisible by n_ranks={self.n_ranks}")
+        counts = np.apply_along_axis(np.bincount, 1, a, minlength=self.n_ranks)
+        if not np.all(counts == E // self.n_ranks):
+            raise ValueError("placement violates uniform slots-per-rank")
+
+    @property
+    def n_layers(self) -> int:
+        return self.assign.shape[0]
+
+    @property
+    def n_experts(self) -> int:
+        return self.assign.shape[1]
+
+    @property
+    def experts_per_rank(self) -> int:
+        return self.n_experts // self.n_ranks
+
+    @property
+    def perm(self) -> np.ndarray:
+        return placement_to_permutation(self.assign, self.n_ranks)
+
+    def rank_loads(self, w: np.ndarray) -> np.ndarray:
+        """Per-rank token loads (L, G) given per-expert loads w (L, E)."""
+        w = np.atleast_2d(np.asarray(w, dtype=np.float64))
+        L, E = self.assign.shape
+        out = np.zeros((L, self.n_ranks))
+        for l in range(L):
+            np.add.at(out[l], self.assign[l], w[l])
+        return out
+
+    def moved_experts(self, other: "Placement") -> int:
+        """Number of (layer, expert) pairs whose rank differs vs ``other``."""
+        return int(np.sum(self.assign != other.assign))
+
+
+def placement_to_permutation(assign: np.ndarray, n_ranks: int) -> np.ndarray:
+    """(L,E) assign → (L,E) perm with perm[l,p] = logical expert in slot p.
+
+    Slots are rank-major; within a rank, logical experts are ordered by id
+    (deterministic so repeated solves with equal assignment produce identical
+    physical layouts — minimizes spurious weight movement).
+    """
+    assign = np.atleast_2d(assign)
+    L, E = assign.shape
+    e_loc = E // n_ranks
+    perm = np.empty((L, E), dtype=np.int32)
+    for l in range(L):
+        for g in range(n_ranks):
+            experts = np.flatnonzero(assign[l] == g)
+            perm[l, g * e_loc:(g + 1) * e_loc] = experts
+    return perm
+
+
+def permutation_to_placement(perm: np.ndarray, n_ranks: int) -> np.ndarray:
+    perm = np.atleast_2d(perm)
+    L, E = perm.shape
+    e_loc = E // n_ranks
+    assign = np.empty((L, E), dtype=np.int32)
+    for l in range(L):
+        for p in range(E):
+            assign[l, perm[l, p]] = p // e_loc
+    return assign
+
+
+# ---------------------------------------------------------------------------
+# Policies
+# ---------------------------------------------------------------------------
+
+def contiguous_placement(n_layers: int, n_experts: int, n_ranks: int) -> Placement:
+    """vLLM default: expert e on rank e // (E/G), identical at every layer."""
+    e_loc = n_experts // n_ranks
+    row = np.arange(n_experts, dtype=np.int32) // e_loc
+    return Placement(np.tile(row, (n_layers, 1)), n_ranks)
+
+
+def _greedy_target_assign(
+    w_layer: np.ndarray,           # (E,) per-expert token load
+    targets: np.ndarray,           # (G,) token targets τ_g
+    n_ranks: int,
+) -> np.ndarray:
+    """Paper Alg 1 Phase 2 inner loop with the uniform-slot constraint.
+
+    Experts in descending load order go to argmax_g (τ_g − n_g) among ranks
+    with free slots.
+    """
+    E = w_layer.size
+    e_loc = E // n_ranks
+    order = np.argsort(-w_layer, kind="stable")
+    load = np.zeros(n_ranks)
+    slots = np.full(n_ranks, e_loc, dtype=np.int64)
+    assign = np.empty(E, dtype=np.int32)
+    for e in order:
+        gap = targets - load
+        gap[slots == 0] = -np.inf
+        g = int(np.argmax(gap))
+        assign[e] = g
+        load[g] += w_layer[e]
+        slots[g] -= 1
+    return assign
+
+
+def eplb_placement(
+    w: np.ndarray,                 # (L, E) activation matrix
+    n_ranks: int,
+) -> Placement:
+    """EPLB: equalize token counts. τ_g = N/G for all g (f_g(n)=n)."""
+    w = np.atleast_2d(np.asarray(w, dtype=np.float64))
+    L, E = w.shape
+    assign = np.empty((L, E), dtype=np.int32)
+    for l in range(L):
+        N = w[l].sum()
+        targets = np.full(n_ranks, N / n_ranks)
+        assign[l] = _greedy_target_assign(w[l], targets, n_ranks)
+    return Placement(assign, n_ranks)
+
+
+def vibe_placement(
+    w: np.ndarray,                 # (L, E) activation matrix
+    perf_models: Sequence[PerfModel],
+    n_ref_mode: str = "rank",
+) -> Placement:
+    """ViBE (paper Alg 1 Phase 2): speed-proportional targets, greedy fill.
+
+    ``n_ref_mode`` picks the operating point for the speed estimate
+    s_g = 1/f_g(n_ref):
+
+    * ``"rank"`` (default) — n_ref = N/G, the mean per-*rank* token load.
+      f_g maps whole-device kernel load to latency, so this evaluates each
+      device at the load it will actually run — where power-limited
+      variability is expressed (paper Fig 5).
+    * ``"expert"`` — n_ref = N/E, Algorithm 1's literal text. At low
+      per-expert loads f_g sits in the unstressed regime where all devices
+      look identical, degenerating to EPLB (see DESIGN.md §3 fidelity note).
+    """
+    w = np.atleast_2d(np.asarray(w, dtype=np.float64))
+    L, E = w.shape
+    G = len(perf_models)
+    assign = np.empty((L, E), dtype=np.int32)
+    for l in range(L):
+        N = float(w[l].sum())
+        n_ref = max(N / (G if n_ref_mode == "rank" else E), 1.0)
+        s = np.array([m.speed(n_ref) for m in perf_models])
+        targets = N * s / s.sum()
+        assign[l] = _greedy_target_assign(w[l], targets, n_ranks=G)
+    return Placement(assign, G)
+
+
+def solve_model_placement(
+    policy: str,
+    w: np.ndarray,
+    n_ranks: int,
+    perf_models: Optional[Sequence[PerfModel]] = None,
+) -> Placement:
+    """Uniform entry point used by the serving engine and benchmarks."""
+    w = np.atleast_2d(w)
+    if policy == "contiguous":
+        return contiguous_placement(w.shape[0], w.shape[1], n_ranks)
+    if policy == "eplb":
+        return eplb_placement(w, n_ranks)
+    if policy == "vibe":
+        if perf_models is None:
+            raise ValueError("vibe placement requires perf_models")
+        if len(perf_models) != n_ranks:
+            raise ValueError("need one perf model per rank")
+        return vibe_placement(w, perf_models)
+    raise ValueError(f"unknown policy {policy!r}")
+
+
+# ---------------------------------------------------------------------------
+# Objective evaluation (paper §4.2.3 problem formulation)
+# ---------------------------------------------------------------------------
+
+def predicted_layer_latency(
+    assign_layer: np.ndarray,      # (E,)
+    w_layer: np.ndarray,           # (E,)
+    perf_models: Sequence[PerfModel],
+) -> np.ndarray:
+    """Per-rank predicted latencies f_g(n_g) for one layer → (G,)."""
+    G = len(perf_models)
+    load = np.zeros(G)
+    np.add.at(load, assign_layer, w_layer)
+    return np.array([perf_models[g](load[g]) for g in range(G)])
+
+
+def layer_latency_span(
+    placement: Placement,
+    w: np.ndarray,
+    perf_models: Sequence[PerfModel],
+) -> np.ndarray:
+    """Per-layer (T_max, T_mean, T_min) → (L, 3). T = max is layer latency."""
+    w = np.atleast_2d(w)
+    out = np.empty((placement.n_layers, 3))
+    for l in range(placement.n_layers):
+        lat = predicted_layer_latency(placement.assign[l], w[l], perf_models)
+        out[l] = (lat.max(), lat.mean(), lat.min())
+    return out

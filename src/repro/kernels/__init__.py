@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the paper's compute hot-spot: the fused grouped
+# MoE expert FFN (the kernel whose per-device latency ViBE balances) and the
+# router gating that feeds it. ops.py = jit'd wrappers; ref.py = oracles.
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,55 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On a TPU backend the kernels compile natively; elsewhere (this CPU host)
+they run in ``interpret=True`` mode, which executes the kernel body exactly
+— so the same call sites work in smoke tests and in production.
+
+``pick_blocks`` chooses MXU-aligned block shapes under the v5e VMEM budget
+(~16 MiB usable): resident set = x(bm,D) + acc(bm,D,f32) + 3 weight blocks
+(D·bf or bf·D) + h(bm,bf).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .moe_ffn import fused_moe_ffn_pallas
+from .router import router_topk_pallas
+
+__all__ = ["fused_moe_ffn", "router_topk", "pick_blocks"]
+
+_VMEM_BUDGET = 14 * 1024 * 1024     # leave headroom under 16 MiB
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pick_blocks(D: int, F: int, dtype_bytes: int = 2) -> Tuple[int, int]:
+    """(bm, bf) fitting the VMEM budget, preferring large MXU-aligned tiles."""
+    for bm in (512, 256, 128):
+        for bf in (1024, 512, 256, 128):
+            resident = (bm * D * dtype_bytes          # x block
+                        + bm * D * 4                  # fp32 accumulator
+                        + 3 * D * bf * dtype_bytes    # w1/w3/w2 blocks
+                        + bm * bf * 4)                # h in fp32
+            if resident <= _VMEM_BUDGET:
+                return bm, min(bf, F)
+    return 128, 128
+
+
+def fused_moe_ffn(w1, w3, w2, toks):
+    """Drop-in replacement for models.moe.expert_ffn_ref (same signature)."""
+    E, C, D = toks.shape
+    F = w1.shape[-1]
+    bm, bf = pick_blocks(D, F)
+    return fused_moe_ffn_pallas(w1, w3, w2, toks, bm=bm, bf=bf,
+                                interpret=not _on_tpu())
+
+
+def router_topk(logits, top_k: int):
+    return router_topk_pallas(logits, top_k, interpret=not _on_tpu())

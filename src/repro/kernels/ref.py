@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert_allclose vs these)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["moe_ffn_ref", "router_topk_ref"]
+
+
+def moe_ffn_ref(w1: jnp.ndarray, w3: jnp.ndarray, w2: jnp.ndarray,
+                toks: jnp.ndarray) -> jnp.ndarray:
+    """Grouped SwiGLU expert FFN. toks (E, C, D) → (E, C, D).
+
+    Matches models.moe.expert_ffn_ref exactly (the EP dispatch oracle).
+    """
+    h = jnp.einsum("ecd,edf->ecf", toks, w1)
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", toks, w3)
+    return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+def router_topk_ref(logits: jnp.ndarray, top_k: int):
+    """Softmax → top-k → renormalize. logits (T, E) → ((T,K) f32, (T,K) i32)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, idx = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    return weights, idx.astype(jnp.int32)

@@ -1,0 +1,66 @@
+"""Fused softmax + top-k router gating kernel.
+
+The router itself is small, but on the serving path it sits between the
+attention output and the MoE dispatch on every layer; fusing softmax,
+iterative top-k selection and renormalization avoids three HBM round-trips
+of the (T, E) probability tensor. Top-k is realized as K unrolled
+max/argmax/mask sweeps — K ≤ 8 for every assigned arch, and each sweep is a
+row reduction the VPU handles natively.
+
+Validated on CPU with ``interpret=True`` against ``ref.router_topk_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["router_topk_pallas"]
+
+
+def _kernel(logits_ref, w_ref, idx_ref, *, top_k):
+    x = logits_ref[...].astype(jnp.float32)              # (bt, E)
+    bt, E = x.shape
+    m = jnp.max(x, axis=-1, keepdims=True)
+    p = jnp.exp(x - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)           # softmax
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bt, E), 1)
+    total = jnp.zeros((bt, 1), jnp.float32)
+    sel_w = []
+    sel_i = []
+    for k in range(top_k):                               # unrolled: K ≤ 8
+        w = jnp.max(p, axis=-1, keepdims=True)           # (bt, 1)
+        i = jnp.argmax(p, axis=-1).astype(jnp.int32)     # (bt,)
+        sel_w.append(w)
+        sel_i.append(i[:, None])
+        total = total + w
+        p = jnp.where(cols == i[:, None], -1.0, p)       # mask the winner
+    w_all = jnp.concatenate(sel_w, axis=-1)              # (bt, K)
+    w_ref[...] = w_all / jnp.maximum(total, 1e-9)
+    idx_ref[...] = jnp.concatenate(sel_i, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("top_k", "bt", "interpret"))
+def router_topk_pallas(logits, top_k: int, *, bt: int = 256,
+                       interpret: bool = False):
+    """logits (T, E) → (weights (T, K) f32, idx (T, K) i32)."""
+    T, E = logits.shape
+    bt = min(bt, T)
+    pt = (-T) % bt
+    if pt:
+        logits = jnp.pad(logits, ((0, pt), (0, 0)))
+    Tp = T + pt
+    w, idx = pl.pallas_call(
+        functools.partial(_kernel, top_k=top_k),
+        grid=(Tp // bt,),
+        in_specs=[pl.BlockSpec((bt, E), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((bt, top_k), lambda i: (i, 0)),
+                   pl.BlockSpec((bt, top_k), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((Tp, top_k), jnp.float32),
+                   jax.ShapeDtypeStruct((Tp, top_k), jnp.int32)],
+        interpret=interpret,
+    )(logits)
+    return (w[:T], idx[:T]) if pt else (w, idx)

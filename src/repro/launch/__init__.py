@@ -1,0 +1,7 @@
+# Launch layer: production mesh builders, per-arch sharding rules, the
+# multi-pod dry-run, roofline analysis, and runnable train/serve drivers.
+# NOTE: dryrun.py sets XLA_FLAGS at import — import it only in dry-run
+# processes, never from tests or benches.
+from .mesh import make_mesh, make_production_mesh
+
+__all__ = ["make_mesh", "make_production_mesh"]

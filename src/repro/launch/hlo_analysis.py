@@ -1,0 +1,355 @@
+"""Trip-count-aware cost analysis of compiled HLO (roofline provenance).
+
+``compiled.cost_analysis()`` counts every ``while`` body **once** (verified
+experimentally on this backend — see EXPERIMENTS.md §Roofline provenance),
+which under-counts every ``lax.scan``: the layer stack, flash-attention
+chunk loops, chunked-loss loops. This module re-derives the three roofline
+inputs from ``compiled.as_text()`` with loop multipliers:
+
+1. split the HLO module into named computations,
+2. build the call graph (fusion `calls=`, while `body=`/`condition=`,
+   conditional branches),
+3. extract each while's trip count from the largest integer constant in its
+   condition computation (XLA canonicalizes scan conditions to
+   ``lt(counter, constant(N))``),
+4. propagate multipliers from ENTRY and accumulate per-computation:
+   * FLOPs   — ``dot``/``convolution`` ops (2 · result elems · contracted
+     elems); elementwise flops are ignored (⪅1% for these models),
+   * bytes   — operand + result bytes of HBM-touching ops (fusion, dot,
+     copy, gather/scatter, dynamic slices, custom-call, reduce, sort),
+   * collective bytes — operand bytes of all-gather / all-reduce /
+     reduce-scatter / all-to-all / collective-permute (+ ragged variants).
+
+All sizes are *per-device* (SPMD-partitioned module). The parser is
+intentionally conservative: unknown shapes contribute zero rather than
+raising mid-sweep; ``parse_hlo(..., strict=True)`` raises instead (tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HloCosts", "parse_hlo", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+#: ops whose operands+results approximate HBM traffic post-fusion.
+#: View-like / usually-fused ops (broadcast, reshape, transpose, slice,
+#: pad, iota, concatenate) are excluded — when XLA leaves them top-level
+#: they are layout no-ops or tiny; counting them inflated the memory term
+#: ~5× on the flash-attention inner loops.
+_HBM_OPS = {"fusion", "dot", "convolution", "copy", "gather", "scatter",
+            "dynamic-slice", "dynamic-update-slice", "custom-call",
+            "sort"} | set(_COLLECTIVES)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of a (possibly tuple) shape string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(shape_str: str) -> int:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    shape: str
+    opcode: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: List[_Op]
+    defs: Dict[str, str]              # op name → result shape string
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    while_trip_counts: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+
+    def add(self, other: "HloCosts", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes_accessed += other.bytes_accessed * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.collective_by_kind.items():
+            self.collective_by_kind[k] = (
+                self.collective_by_kind.get(k, 0.0) + v * mult)
+
+
+def _split_computations(text: str) -> Tuple[Dict[str, _Computation], str]:
+    comps: Dict[str, _Computation] = {}
+    entry_name: Optional[str] = None
+    cur: Optional[_Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            # computation headers start at column 0 (optionally "ENTRY"),
+            # contain "->" and open a brace; param lists can nest parens.
+            s = line.rstrip()
+            if (s.endswith("{") and "->" in s and line[:1] not in " \t"
+                    and (s.startswith("%") or s.startswith("ENTRY"))):
+                is_entry = s.startswith("ENTRY")
+                name = s.split()[1] if is_entry else s.split()[0]
+                name = name.lstrip("%").split("(")[0].rstrip()
+                cur = _Computation(name, [], {})
+                if is_entry:
+                    entry_name = name
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        dm = _DEF_RE.match(line)
+        if dm:
+            name, shape, opcode = dm.group(1), dm.group(2), dm.group(3)
+            # operands: names inside the first (...) after the opcode
+            after = line.split(opcode + "(", 1)
+            operands = []
+            if len(after) == 2:
+                depth, buf = 1, []
+                for ch in after[1]:
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            break
+                    buf.append(ch)
+                operands = _OPERAND_RE.findall("".join(buf))
+            op = _Op(name, shape, opcode, operands, line)
+            cur.ops.append(op)
+            cur.defs[name] = shape
+    return comps, entry_name or ""
+
+
+def _local_costs(comp: _Computation, comps: Dict[str, _Computation],
+                 strict: bool) -> Tuple[HloCosts, List[Tuple[str, str]]]:
+    """(costs of this computation alone, [(callee, kind), ...])."""
+    c = HloCosts()
+    calls: List[Tuple[str, str]] = []
+    for op in comp.ops:
+        code = op.opcode
+        if code in ("parameter", "constant", "tuple", "get-tuple-element",
+                    "bitcast", "after-all", "partition-id", "replica-id"):
+            continue
+        if code == "while":
+            b = _BODY_RE.search(op.line)
+            cn = _COND_RE.search(op.line)
+            if b:
+                calls.append((b.group(1), "while"))
+            if cn:
+                calls.append((cn.group(1), "while-cond:" + (b.group(1) if b else "")))
+            continue
+        if code == "conditional":
+            m = _BRANCH_RE.search(op.line)
+            if m:
+                for name in m.group(1).split(","):
+                    calls.append((name.strip().lstrip("%"), "call"))
+            continue
+        if code in ("fusion", "call", "map", "reduce", "reduce-window",
+                    "scatter", "sort", "select-and-scatter", "custom-call",
+                    "all-reduce", "reduce-scatter"):
+            for m in (_CALLS_RE.search(op.line), _TO_APPLY_RE.search(op.line)):
+                if m:
+                    calls.append((m.group(1), "call"))
+        # flops
+        if code in ("dot", "convolution"):
+            out_elems = _shape_elems(op.shape)
+            contract = 1
+            cm = _CONTRACT_RE.search(op.line)
+            if cm and op.operands:
+                lhs_shape = comp.defs.get(op.operands[0], "")
+                sm = _SHAPE_RE.search(lhs_shape)
+                if sm:
+                    dims = [int(d) for d in sm.group(2).split(",") if d]
+                    for ci in cm.group(1).split(","):
+                        if ci and int(ci) < len(dims):
+                            contract *= dims[int(ci)]
+                elif strict:
+                    raise ValueError(f"unknown lhs shape for {op.line}")
+            c.flops += 2.0 * out_elems * contract
+        # bytes
+        if code in _HBM_OPS:
+            if code == "dynamic-slice":
+                # reads only the slice (plus writes it) — billing the whole
+                # operand would charge every scan step the full stacked array
+                b = 2 * _shape_bytes(op.shape)
+            elif code == "dynamic-update-slice":
+                # in-place when aliased: reads+writes the update region only
+                upd = (comp.defs.get(op.operands[1], "")
+                       if len(op.operands) > 1 else op.shape)
+                b = 2 * _shape_bytes(upd)
+            elif code == "scatter":
+                # touches the scattered rows, not the whole buffer
+                upd = (comp.defs.get(op.operands[-1], "")
+                       if len(op.operands) >= 3 else op.shape)
+                b = 2 * _shape_bytes(upd)
+            elif code == "fusion":
+                cm = _CALLS_RE.search(op.line)
+                callee = comps.get(cm.group(1)) if cm else None
+                b = _fusion_result_bytes(callee, _shape_bytes(op.shape))
+                for i, o in enumerate(op.operands):
+                    full = _shape_bytes(comp.defs.get(o, ""))
+                    b += min(full, _fusion_param_read(callee, i, full))
+            else:
+                b = _shape_bytes(op.shape)
+                for o in op.operands:
+                    b += _shape_bytes(comp.defs.get(o, ""))
+            c.bytes_accessed += b
+        # collectives
+        for kind in _COLLECTIVES:
+            if code == kind or code == kind + "-start":
+                cb = sum(_shape_bytes(comp.defs.get(o, ""))
+                         for o in op.operands)
+                if cb == 0:                      # e.g. operands are params
+                    cb = _shape_bytes(op.shape)
+                c.collective_bytes += cb
+                c.collective_by_kind[kind] = (
+                    c.collective_by_kind.get(kind, 0.0) + cb)
+                break
+    return c, calls
+
+
+def _fusion_param_read(callee: Optional[_Computation], idx: int,
+                       full: float) -> float:
+    """Bytes a fusion actually reads of parameter ``idx``.
+
+    When every consumer of the parameter inside the fusion body is a
+    dynamic-slice (the lax.scan xs access pattern), only the slices are
+    read — billing the whole stacked operand would charge each scan step
+    the full (n_blocks, …) array.
+    """
+    if callee is None:
+        return full
+    pname = None
+    for op in callee.ops:
+        if op.opcode == "parameter" and f"parameter({idx})" in op.line:
+            pname = op.name
+            break
+    if pname is None:
+        return full
+    sliced = 0.0
+    for op in callee.ops:
+        if pname in op.operands:
+            if op.opcode == "dynamic-slice" and op.operands[0] == pname:
+                sliced += _shape_bytes(op.shape)
+            elif (op.opcode == "dynamic-update-slice"
+                  and op.operands[0] == pname):
+                upd = (callee.defs.get(op.operands[1], "")
+                       if len(op.operands) > 1 else "")
+                sliced += _shape_bytes(upd)
+            else:
+                return full                    # consumed elsewhere: full read
+    return sliced if sliced > 0 else full
+
+
+def _fusion_result_bytes(callee: Optional[_Computation],
+                         default: float) -> float:
+    """Bytes a fusion actually writes.
+
+    A fusion whose ROOT is a dynamic-update-slice reports the full updated
+    buffer as its result shape, but (with aliasing) writes only the update
+    region — e.g. the scan ys write-back of a KV cache stack.
+    """
+    if callee is None:
+        return default
+    root = next((op for op in callee.ops if "ROOT" in op.line), None)
+    if root is None:
+        return default
+    # follow a trailing bitcast to the real producer
+    if root.opcode in ("bitcast", "copy") and root.operands:
+        prod = next((op for op in callee.ops
+                     if op.name == root.operands[0]), None)
+        root = prod or root
+    if root.opcode == "dynamic-update-slice" and len(root.operands) > 1:
+        upd = callee.defs.get(root.operands[1], "")
+        if upd:
+            return _shape_bytes(upd)
+    return default
+
+
+def _trip_count(cond: _Computation) -> int:
+    consts = [int(m) for op in cond.ops
+              for m in _CONST_RE.findall(op.line)]
+    return max(consts) if consts else 1
+
+
+def parse_hlo(text: str, strict: bool = False) -> HloCosts:
+    comps, entry = _split_computations(text)
+    if entry not in comps:
+        if strict:
+            raise ValueError("no ENTRY computation found")
+        return HloCosts()
+    local: Dict[str, Tuple[HloCosts, List[Tuple[str, str]]]] = {}
+    for name, comp in comps.items():
+        local[name] = _local_costs(comp, comps, strict)
+
+    total = HloCosts()
+    seen_guard: Dict[str, float] = {}
+
+    def visit(name: str, mult: float, depth: int = 0) -> None:
+        if name not in local or depth > 64:
+            return
+        costs, calls = local[name]
+        total.add(costs, mult)
+        for callee, kind in calls:
+            if kind == "while":
+                # the matching condition computation rode along in `calls`
+                cond_name = next((c for c, k in calls
+                                  if k == "while-cond:" + callee), None)
+                trips = _trip_count(comps[cond_name]) \
+                    if cond_name in comps else 1
+                total.while_trip_counts[callee] = trips
+                visit(callee, mult * trips, depth + 1)
+            elif kind.startswith("while-cond:"):
+                visit(callee, mult, depth + 1)   # condition cost ~negligible
+            else:
+                visit(callee, mult, depth + 1)
+
+    visit(entry, 1.0)
+    return total

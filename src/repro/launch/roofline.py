@@ -1,0 +1,123 @@
+"""Roofline analysis from dry-run records (EXPERIMENTS.md §Roofline).
+
+Hardware constants (TPU v5e target): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI. The dry-run stores *per-device* quantities (the compiled
+module is SPMD-partitioned), so
+
+    compute    = flops_per_device    / peak
+    memory     = bytes_per_device    / hbm_bw
+    collective = coll_bytes_per_device / ici_bw
+
+equal the spec's global-quantity-over-(chips × rate) formulas exactly.
+
+MODEL_FLOPS uses 6·N·T (train) / 2·N·T (prefill) / 2·N_active·B (decode),
+N = active params; the ratio MODEL_FLOPS/HLO_FLOPS exposes remat recompute,
+the causal-flash masked half, dense-dispatch overcompute, etc.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.roofline --dir results/dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES, get
+
+__all__ = ["PEAK_FLOPS", "HBM_BW", "ICI_BW", "roofline_terms", "load_records",
+           "format_table"]
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link (1 effective link, conservative)
+
+
+def model_flops_per_device(rec: Dict) -> float:
+    cfg = get(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    n_act = cfg.n_active_params()
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    if shape.kind == "train":
+        total = 6.0 * n_act * shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        total = 2.0 * n_act * shape.global_batch * shape.seq_len
+    else:                                      # decode: one token per seq
+        total = 2.0 * n_act * shape.global_batch
+    return total / chips
+
+
+def roofline_terms(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok" or "hlo" not in rec:
+        return None
+    h = rec["hlo"]
+    compute = h["flops_per_device"] / PEAK_FLOPS
+    memory = h["bytes_per_device"] / HBM_BW
+    coll = h["collective_bytes_per_device"] / ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec)
+    bound = max(terms.values())
+    return {
+        **terms,
+        "dominant": dom.replace("_s", ""),
+        "model_flops_per_device": mf,
+        "useful_ratio": mf / max(h["flops_per_device"], 1.0),
+        # fraction of the bound the *useful* compute represents: how close
+        # the useful work runs to the roofline given all three ceilings
+        "roofline_fraction": (mf / PEAK_FLOPS) / max(bound, 1e-12),
+        "mem_gib": rec.get("memory", {}).get("per_device_total_bytes", 0)
+        / 2**30,
+    }
+
+
+def load_records(directory: str) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def format_table(recs: List[Dict], mesh: str = "16x16") -> str:
+    hdr = ("| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | useful | roofline frac | mem GiB |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for rec in recs:
+        if rec.get("mesh") != mesh:
+            continue
+        if rec.get("status") == "skipped":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                         f"skipped: {rec['reason']} | — | — | — |")
+            continue
+        t = roofline_terms(rec)
+        if t is None:
+            lines.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                         f"ERROR | — | — | — |")
+            continue
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} "
+            f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | {t['dominant']} "
+            f"| {t['useful_ratio']:.2f} | {t['roofline_fraction']:.3f} "
+            f"| {t['mem_gib']:.2f} |")
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    recs = load_records(args.dir)
+    print(format_table(recs, args.mesh))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,164 @@
+"""GQA attention: train/prefill (optionally sliding-window) + KV-cache decode.
+
+Sharding modes (DESIGN.md §5) are expressed as GSPMD constraints so the same
+code lowers on 1 device and on the production mesh:
+
+* ``heads``   — q/kv heads sharded over the TP axis (divisible archs).
+* ``context`` — q sharded over sequence, K/V gathered (non-divisible heads:
+  smollm 15H, gemma3 8H, starcoder2 36H, granite 24H). XLA inserts the
+  all-gather; decode shards the KV *cache* over sequence and the softmax
+  reductions become cross-shard psums (flash-decode structure, GSPMD-native).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import apply_rope, dense_init, maybe_constrain, rope_tables
+
+__all__ = ["AttnSharding", "attn_init", "attention", "decode_attention",
+           "init_kv_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSharding:
+    mode: str = "none"               # "heads" | "context" | "none"
+    dp: tuple = ("pod", "data")      # batch axes
+    tp: str = "model"                # head/TP axis
+
+    @property
+    def q_spec(self):                # (B, S, H, hd)
+        if self.mode == "heads":
+            return P(self.dp, None, self.tp, None)
+        if self.mode == "context":
+            return P(self.dp, self.tp, None, None)
+        return P(self.dp, None, None, None)
+
+    @property
+    def kv_spec(self):               # (B, S, KV, hd) — gathered in context mode
+        if self.mode == "heads":
+            return P(self.dp, None, self.tp, None)
+        return P(self.dp, None, None, None)
+
+    @property
+    def cache_spec(self):            # (B, S_max, KV, hd): decode KV cache
+        if self.mode == "heads":
+            return P(self.dp, None, self.tp, None)
+        if self.mode == "context":
+            return P(self.dp, self.tp, None, None)   # seq-sharded cache
+        return P(self.dp, None, None, None)
+
+
+def attn_init(key, d: int, n_heads: int, n_kv: int, hd: int,
+              dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, n_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, n_kv * hd, dtype),
+        "wv": dense_init(ks[2], d, n_kv * hd, dtype),
+        "wo": dense_init(ks[3], n_heads * hd, d, dtype),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def attention(p, x: jnp.ndarray, *, n_heads: int, n_kv: int, hd: int,
+              rope_theta: float, causal: bool = True,
+              window: Optional[jnp.ndarray] = None,
+              sharding: AttnSharding = AttnSharding(),
+              positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill).
+
+    ``window``: scalar (possibly traced) sliding-window size; None/0 = full.
+    Window is data, not structure, so local/global gemma3 layers share one
+    scanned HLO body.
+    """
+    B, S, D = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]                    # (1, S)
+    cos, sin = rope_tables(positions, hd, rope_theta)
+
+    q = _split_heads(jnp.einsum("bsd,dh->bsh", x, p["wq"]), n_heads, hd)
+    k = _split_heads(jnp.einsum("bsd,dh->bsh", x, p["wk"]), n_kv, hd)
+    v = _split_heads(jnp.einsum("bsd,dh->bsh", x, p["wv"]), n_kv, hd)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = maybe_constrain(q, sharding.q_spec)
+    k = maybe_constrain(k, sharding.kv_spec)
+    v = maybe_constrain(v, sharding.kv_spec)
+
+    group = n_heads // n_kv
+    qg = q.reshape(B, S, n_kv, group, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+
+    qpos = positions[:, :, None] if positions.ndim == 2 else positions[..., None]
+    kpos = positions[:, None, :] if positions.ndim == 2 else positions[..., None, :]
+    mask = jnp.ones((B if positions.shape[0] == B else 1, S, S), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        w = jnp.asarray(window)
+        mask = mask & jnp.where(w > 0, (qpos - kpos) < w, True)
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v).reshape(B, S, n_heads * hd)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"])
+
+
+def init_kv_cache(n_layers: int, batch: int, max_seq: int, n_kv: int,
+                  hd: int, dtype=jnp.bfloat16):
+    shape = (n_layers, batch, max_seq, n_kv, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention(p, x: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, pos: jnp.ndarray, *,
+                     n_heads: int, n_kv: int, hd: int, rope_theta: float,
+                     window: Optional[jnp.ndarray] = None,
+                     sharding: AttnSharding = AttnSharding()):
+    """One-token decode against a (B, S_max, KV, hd) cache at position ``pos``.
+
+    Returns (out (B, 1, D), new_k, new_v). The new K/V row is written with a
+    dynamic_update_slice; masking handles the not-yet-filled tail. In
+    ``context`` mode the cache is sequence-sharded and the softmax reductions
+    lower to cross-shard psums (flash-decode).
+    """
+    B, one, D = x.shape
+    S_max = k_cache.shape[1]
+    cos, sin = rope_tables(pos[None, None], hd, rope_theta)   # (1,1,hd/2)
+
+    q = _split_heads(jnp.einsum("bsd,dh->bsh", x, p["wq"]), n_heads, hd)
+    k_new = _split_heads(jnp.einsum("bsd,dh->bsh", x, p["wk"]), n_kv, hd)
+    v_new = _split_heads(jnp.einsum("bsd,dh->bsh", x, p["wv"]), n_kv, hd)
+    q = apply_rope(q, cos, sin)
+    k_new = apply_rope(k_new, cos, sin)
+
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new, (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new, (0, pos, 0, 0))
+    k_cache = maybe_constrain(k_cache, sharding.cache_spec)
+    v_cache = maybe_constrain(v_cache, sharding.cache_spec)
+
+    group = n_heads // n_kv
+    qg = q.reshape(B, n_kv, group, hd)                        # (B,KV,G,hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+
+    kpos = jnp.arange(S_max)
+    valid = kpos <= pos
+    if window is not None:
+        w = jnp.asarray(window)
+        valid = valid & jnp.where(w > 0, (pos - kpos) < w, True)
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, v_cache)
+    out = out.reshape(B, 1, n_heads * hd)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), k_cache, v_cache

@@ -1,0 +1,133 @@
+"""Shared model building blocks (pure JAX, pytree params).
+
+Conventions:
+* params are nested dicts of jnp arrays; stacked-layer weights carry a
+  leading L dim and are consumed by ``lax.scan``.
+* compute dtype is bf16, accumulation/normalization in fp32.
+* sharding is expressed with ``maybe_constrain`` — a no-op outside a mesh
+  context, a ``with_sharding_constraint`` inside one (so the same model code
+  runs on 1 CPU device and on the production mesh).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "maybe_constrain", "rms_norm", "rope_tables", "apply_rope",
+    "dense_init", "mlp", "mlp_init", "softmax_xent_chunked", "cast",
+]
+
+
+def maybe_constrain(x: jnp.ndarray, spec: Optional[P]):
+    """with_sharding_constraint when a mesh is active, identity otherwise."""
+    if spec is None:
+        return x
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return x
+    if mesh is None or mesh.empty:
+        return x
+    # drop axis names the current mesh doesn't have (e.g. "pod" on 2-D mesh)
+    names = set(mesh.axis_names)
+
+    def keep(part):
+        if part is None:
+            return None
+        if isinstance(part, tuple):
+            kept = tuple(p for p in part if p in names)
+            return kept if kept else None
+        return part if part in names else None
+
+    spec2 = P(*[keep(p) for p in spec])
+    return jax.lax.with_sharding_constraint(x, spec2)
+
+
+def cast(x: jnp.ndarray, dtype) -> jnp.ndarray:
+    return x.astype(dtype) if x.dtype != dtype else x
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rope_tables(positions: jnp.ndarray, head_dim: int,
+                theta: float = 10000.0):
+    """cos/sin tables for the given positions → ((..., hd/2), (..., hd/2))."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, H, hd); cos/sin: (..., S, hd/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(jnp.float32)
+    s = sin[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16) -> jnp.ndarray:
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d_in, jnp.float32))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def mlp_init(key, d: int, f: int, gated: bool, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    p = {"w1": dense_init(ks[0], d, f, dtype), "w2": dense_init(ks[1], f, d, dtype)}
+    if gated:
+        p["w3"] = dense_init(ks[2], d, f, dtype)
+    return p
+
+
+def mlp(p, x: jnp.ndarray, gated: bool, tp_spec: Optional[P] = None) -> jnp.ndarray:
+    """SwiGLU (gated) or GELU (2-matrix) MLP; hidden optionally TP-sharded."""
+    h = jnp.einsum("...d,df->...f", x, p["w1"])
+    if gated:
+        h = jax.nn.silu(h) * jnp.einsum("...d,df->...f", x, p["w3"])
+    else:
+        h = jax.nn.gelu(h)
+    if tp_spec is not None:
+        h = maybe_constrain(h, tp_spec)
+    return jnp.einsum("...f,fd->...d", h, p["w2"])
+
+
+def softmax_xent_chunked(hidden: jnp.ndarray, w_unemb: jnp.ndarray,
+                         labels: jnp.ndarray, n_chunks: int = 8,
+                         logits_spec: Optional[P] = None) -> jnp.ndarray:
+    """Mean token cross-entropy without materializing (B,S,V) at once.
+
+    The sequence axis is processed in ``n_chunks`` scan steps so peak logits
+    memory is (B, S/n_chunks, V) — the production trick that keeps the
+    262k-vocab archs inside HBM at train_4k (DESIGN.md §5).
+    """
+    B, S, D = hidden.shape
+    if S % n_chunks != 0:
+        n_chunks = 1
+    C = S // n_chunks
+    h = hidden.reshape(B, n_chunks, C, D).swapaxes(0, 1)     # (n, B, C, D)
+    y = labels.reshape(B, n_chunks, C).swapaxes(0, 1)        # (n, B, C)
+
+    def chunk_loss(carry, hc_yc):
+        hc, yc = hc_yc
+        logits = jnp.einsum("bcd,dv->bcv", hc, w_unemb).astype(jnp.float32)
+        if logits_spec is not None:
+            logits = maybe_constrain(logits, logits_spec)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.float32(0.0), (h, y))
+    return total / (B * S)

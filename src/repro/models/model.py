@@ -1,0 +1,563 @@
+"""Model assembly: every assigned architecture as one scanned-block program.
+
+The model is a ``lax.scan`` over *super-blocks*. A super-block is the
+smallest repeating structural unit of the architecture:
+
+* dense / moe / audio / vlm : 1 layer  (gemma3's local/global pattern is
+  *data* — a per-layer window array — not structure)
+* jamba  : 8 layers (1 attention + 7 Mamba; MoE on odd positions)
+* xlstm  : ``slstm_every`` layers (1 sLSTM + rest mLSTM)
+
+All per-block params carry a leading ``n_blocks`` axis, so XLA compiles one
+block body regardless of depth — essential for 94-layer dry-run compiles.
+
+Three entry points (the dry-run lowers exactly these):
+
+* :func:`loss_fn`     — training forward → (loss, (tallies, aux))
+* :func:`prefill_fn`  — (tokens → last-position logits, filled cache)
+* :func:`decode_fn`   — (one token + cache → logits, cache)  [serve_step]
+
+MoE placement enters as the ``moe_tables`` *input* (slot lookup arrays), so
+ViBE recalibration never recompiles — see models/moe.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from .attention import attn_init
+from .common import apply_rope, dense_init, mlp, mlp_init, rms_norm, \
+    rope_tables, softmax_xent_chunked
+from .flash import flash_attention, flash_decode
+from .moe import (default_perm_a2a, default_perm_replicated, moe_init,
+                  moe_layer, n_slots_a2a)
+from .sharding import ShardingRules, build_slots_of
+from . import ssm
+
+__all__ = [
+    "LayerSpec", "block_layout", "init_params", "make_moe_tables",
+    "loss_fn", "prefill_fn", "decode_fn", "init_cache", "moe_perm_shape",
+    "count_params",
+]
+
+
+# ---------------------------------------------------------------------------
+# structural layout
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str                       # attn | mamba | mlstm | slstm
+    ffn: str                         # dense | moe | none
+
+
+def block_layout(cfg: ArchConfig) -> Tuple[int, List[LayerSpec]]:
+    """(n_blocks, per-position layer specs)."""
+    if cfg.family == "ssm":
+        bs = cfg.slstm_every or 1
+    elif cfg.attn_every:
+        bs = math.lcm(cfg.attn_every, cfg.moe_every if cfg.is_moe else 1)
+    else:
+        bs = 1
+    if cfg.n_layers % bs:
+        raise ValueError(f"{cfg.name}: n_layers={cfg.n_layers} % block={bs}")
+    specs = []
+    for i in range(bs):
+        if cfg.family == "ssm":
+            mixer = "slstm" if (cfg.slstm_every and i % cfg.slstm_every == 0) \
+                else "mlstm"
+        elif cfg.attn_every and i % cfg.attn_every != 0:
+            mixer = "mamba"
+        else:
+            mixer = "attn"
+        if cfg.is_moe and i % cfg.moe_every == cfg.moe_offset:
+            ffn = "moe"
+        elif cfg.d_ff:
+            ffn = "dense"
+        else:
+            ffn = "none"
+        specs.append(LayerSpec(mixer, ffn))
+    return cfg.n_layers // bs, specs
+
+
+def _windows(cfg: ArchConfig) -> Optional[np.ndarray]:
+    """(n_blocks, block_size) sliding-window sizes (0 = full attention)."""
+    nb, specs = block_layout(cfg)
+    if cfg.window <= 0:
+        return None
+    win = np.zeros((cfg.n_layers,), np.int32)
+    for l in range(cfg.n_layers):
+        is_global = cfg.global_every and (l % cfg.global_every
+                                          == cfg.global_every - 1)
+        win[l] = 0 if is_global else cfg.window
+    return win.reshape(nb, len(specs))
+
+
+def moe_perm_shape(cfg: ArchConfig, rules: Optional[ShardingRules],
+                   phase: str) -> Tuple[int, int]:
+    """(n_moe_layers, n_slots) for building placement permutations."""
+    nb, specs = block_layout(cfg)
+    n_moe = nb * sum(1 for s in specs if s.ffn == "moe")
+    if rules is None or rules.mesh is None:
+        return n_moe, cfg.n_experts
+    if phase == "decode":
+        fleet = (rules.ep_size if rules.decode_expert_tp
+                 else rules.ep_all_size)
+        e_loc = max(1, -(-cfg.n_experts // max(fleet, 1)))
+        return n_moe, e_loc * max(fleet, 1)
+    return n_moe, n_slots_a2a(cfg.n_experts, rules.ep_size)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, key, rules: Optional[ShardingRules] = None,
+                phase: str = "train", dtype=jnp.bfloat16) -> Dict[str, Any]:
+    nb, specs = block_layout(cfg)
+    _, n_slots = moe_perm_shape(cfg, rules, phase) if cfg.is_moe else (0, 0)
+    d, hd = cfg.d_model, cfg.hd
+    keys = jax.random.split(key, 8 + len(specs))
+
+    def stacked(init_one, k):
+        ks = jax.random.split(k, nb)
+        return jax.vmap(init_one)(ks)
+
+    layers = []
+    for i, spec in enumerate(specs):
+        ki = keys[8 + i]
+
+        def init_layer(k, spec=spec):
+            sub = dict(ln1=jnp.zeros((d,), jnp.float32))
+            kk = jax.random.split(k, 3)
+            if spec.mixer == "attn":
+                sub["mixer"] = attn_init(kk[0], d, cfg.n_heads,
+                                         cfg.n_kv_heads, hd, dtype)
+            elif spec.mixer == "mamba":
+                sub["mixer"] = ssm.mamba_init(
+                    kk[0], d, expand=cfg.ssm_expand, d_state=cfg.ssm_d_state,
+                    d_conv=cfg.ssm_conv, dtype=dtype)
+            elif spec.mixer == "mlstm":
+                sub["mixer"] = ssm.mlstm_init(
+                    kk[0], d, n_heads=cfg.n_heads, expand=cfg.ssm_expand,
+                    dtype=dtype)
+            else:
+                sub["mixer"] = ssm.slstm_init(
+                    kk[0], d, n_heads=cfg.n_heads, expand=cfg.ssm_expand,
+                    dtype=dtype)
+            if spec.ffn != "none":
+                sub["ln2"] = jnp.zeros((d,), jnp.float32)
+            if spec.ffn == "dense":
+                sub["ffn"] = mlp_init(kk[1], d, cfg.d_ff, cfg.mlp_gated, dtype)
+            elif spec.ffn == "moe":
+                sub["ffn"] = moe_init(kk[1], d=d, f=cfg.moe_d_ff,
+                                      n_experts=cfg.n_experts,
+                                      n_slots=n_slots, dtype=dtype)
+                if cfg.n_shared_experts:
+                    sub["shared"] = mlp_init(
+                        kk[2], d, cfg.n_shared_experts * cfg.moe_d_ff,
+                        cfg.mlp_gated, dtype)
+            return sub
+
+        layers.append(stacked(init_layer, ki))
+
+    params: Dict[str, Any] = {
+        "embed": dense_init(keys[0], cfg.vocab, d, dtype),
+        "final_norm": jnp.zeros((d,), jnp.float32),
+        "blocks": layers,
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(keys[1], d, cfg.vocab, dtype)
+    if cfg.frontend_dim:
+        params["frontend"] = dense_init(keys[2], cfg.frontend_dim, d, dtype)
+    return params
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+
+
+def make_moe_tables(cfg: ArchConfig, rules: Optional[ShardingRules],
+                    perm: Optional[np.ndarray] = None,
+                    phase: str = "train"):
+    """Build the (slots_of, n_copies) scan inputs from a slot permutation.
+
+    ``perm``: (n_moe_layers, n_slots) — logical expert per physical slot
+    (from a ViBE/EPLB/contiguous Placement); None = contiguous default.
+    Returns arrays shaped (n_blocks, moe_per_block, E, r) / (…, E), or None
+    for non-MoE archs.
+    """
+    if not cfg.is_moe:
+        return None
+    nb, specs = block_layout(cfg)
+    m = sum(1 for s in specs if s.ffn == "moe")
+    n_moe, n_slots = moe_perm_shape(cfg, rules, phase)
+    if perm is None:
+        if rules is not None and rules.mesh is not None and phase == "decode":
+            fleet = (rules.ep_size if rules.decode_expert_tp
+                     else rules.ep_all_size)
+            perm = default_perm_replicated(n_moe, cfg.n_experts, fleet)
+        else:
+            ep = rules.ep_size if (rules and rules.mesh is not None) else 1
+            perm = default_perm_a2a(n_moe, cfg.n_experts, ep)
+    perm = np.atleast_2d(perm)
+    if perm.shape != (n_moe, n_slots):
+        raise ValueError(f"perm shape {perm.shape} != {(n_moe, n_slots)}")
+    slots_of, n_copies = build_slots_of(perm, cfg.n_experts, n_slots)
+    r = slots_of.shape[-1]
+    return (jnp.asarray(slots_of.reshape(nb, m, cfg.n_experts, r)),
+            jnp.asarray(n_copies.reshape(nb, m, cfg.n_experts)))
+
+
+# ---------------------------------------------------------------------------
+# block body
+# ---------------------------------------------------------------------------
+
+def _attn_specs(cfg, rules: ShardingRules):
+    """(q_spec, kv_spec) activation constraints for the chosen TP mode."""
+    if rules is None:
+        return None, None
+    if rules.attn_mode == "heads" and cfg.n_heads % max(rules.axis_size(rules.tp), 1) == 0 \
+            and cfg.n_kv_heads % max(rules.axis_size(rules.tp), 1) == 0:
+        return (P(rules.dp, None, rules.tp, None),
+                P(rules.dp, None, rules.tp, None))
+    # context mode: sequence-sharded q, replicated kv (flash gathers chunks)
+    return (P(rules.dp, rules.tp, None, None),
+            P(rules.dp, None, None, None))
+
+
+def _run_attention(p, x, cfg, rules, window, positions, cache=None,
+                   pos=None, kv_valid=None):
+    """Returns (out, (k, v)) for prefill/train or (out, new_cache) decode."""
+    B, S, D = x.shape
+    hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    G = H // KV
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, KV, G, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(B, S, KV, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(B, S, KV, hd)
+    if cache is None:
+        cos, sin = rope_tables(positions[None, :], hd, cfg.rope_theta)
+        q = apply_rope(q.reshape(B, S, KV * G, hd), cos, sin) \
+            .reshape(B, S, KV, G, hd)
+        k = apply_rope(k, cos, sin)
+        tp_size = 1 if rules is None else rules.axis_size(rules.tp)
+        use_cp = (rules is not None and rules.mesh is not None
+                  and rules.attn_mode == "context" and S % tp_size == 0
+                  and tp_size > 1)
+        if use_cp:
+            # context-parallel flash (§Perf): each TP rank holds a q
+            # sequence shard and the (small, GQA) kv replicated — fully
+            # local attention. Constraining alone does NOT survive the
+            # chunking reshapes (XLA re-replicates q → S² score traffic).
+            dp_sz = max(rules.axis_size(rules.dp), 1)
+            b_ax = rules.dp if B % dp_sz == 0 else None
+            qspec = rules.spec(b_ax, rules.tp, None, None, None)
+            kvspec = rules.spec(b_ax, None, None, None)
+            win = window if window is not None else jnp.int32(0)
+
+            def body(q, k, v, qpos, kpos, win):
+                return flash_attention(q, k, v, causal=cfg.causal,
+                                       window=win, q_positions=qpos,
+                                       kv_positions=kpos)
+
+            out = jax.shard_map(
+                body, mesh=rules.mesh,
+                in_specs=(qspec, kvspec, kvspec, rules.spec(rules.tp),
+                          P(), P()),
+                out_specs=qspec, check_vma=False,
+            )(q, k, v, positions, positions, win)
+        else:
+            if rules is not None:
+                qs, kvs = _attn_specs(cfg, rules)
+                if qs is not None:
+                    q = rules.constrain(q.reshape(B, S, H, hd), *qs)\
+                        .reshape(B, S, KV, G, hd)
+                    k = rules.constrain(k, *kvs)
+                    v = rules.constrain(v, *kvs)
+            out = flash_attention(q, k, v, causal=cfg.causal, window=window,
+                                  q_positions=positions,
+                                  kv_positions=positions)
+        out = out.reshape(B, S, H * hd)
+        return jnp.einsum("bsh,hd->bsd", out, p["wo"]), (k, v)
+    # decode: single token per sequence at per-sequence positions (B,)
+    k_cache, v_cache = cache
+    S_max = k_cache.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos), (B,))
+    cos, sin = rope_tables(pos[:, None], hd, cfg.rope_theta)    # (B,1,hd/2)
+    q = apply_rope(q.reshape(B, S, KV * G, hd), cos, sin) \
+        .reshape(B, KV, G, hd)
+    k = apply_rope(k, cos, sin)
+    tp_size = 1 if rules is None else rules.axis_size(rules.tp)
+    use_cp = (rules is not None and rules.mesh is not None
+              and rules.attn_mode == "context" and tp_size > 1
+              and S_max % tp_size == 0)
+    if use_cp:
+        # context-parallel flash-decode (§Perf): the cache stays
+        # sequence-sharded; each TP rank updates/attends its shard and a
+        # psum merges the online-softmax stats — no cache gather/halo.
+        dp_sz = max(rules.axis_size(rules.dp), 1)
+        b_ax = rules.dp if B % dp_sz == 0 else None
+        cspec = rules.spec(b_ax, rules.tp, None, None)
+        qspec = rules.spec(b_ax, None, None, None)
+        s_loc = S_max // tp_size
+
+        def body(q, k1, v1, kc, vc, pos):
+            rank = jax.lax.axis_index(rules.tp)
+            off = rank * s_loc
+            upd = pos - off
+            owned = (upd >= 0) & (upd < s_loc)
+            safe = jnp.clip(upd, 0, s_loc - 1)
+            bi = jnp.arange(q.shape[0])
+            kc = kc.at[bi, safe].set(
+                jnp.where(owned[:, None, None], k1[:, 0], kc[bi, safe]))
+            vc = vc.at[bi, safe].set(
+                jnp.where(owned[:, None, None], v1[:, 0], vc[bi, safe]))
+            acc, m, l = flash_decode(q, kc, vc, pos, window=window,
+                                     kpos_offset=off, return_stats=True)
+            m_g = jax.lax.pmax(m, rules.tp)
+            scale = jnp.exp(m - m_g)
+            num = jax.lax.psum(acc * scale[..., None], rules.tp)
+            den = jax.lax.psum(l * scale, rules.tp)
+            out = (num / jnp.maximum(den, 1e-30)[..., None]).astype(q.dtype)
+            return out, kc, vc
+
+        out, k_cache, v_cache = jax.shard_map(
+            body, mesh=rules.mesh,
+            in_specs=(qspec, qspec, qspec, cspec, cspec,
+                      rules.spec(b_ax)),
+            out_specs=(qspec, cspec, cspec), check_vma=False,
+        )(q, k, v, k_cache, v_cache, pos)
+    else:
+        k_cache = k_cache.at[jnp.arange(B), pos].set(k[:, 0])
+        v_cache = v_cache.at[jnp.arange(B), pos].set(v[:, 0])
+        if rules is not None:
+            cspec = P(rules.dp, None, rules.tp, None)
+            k_cache = rules.constrain(k_cache, *cspec)
+            v_cache = rules.constrain(v_cache, *cspec)
+        out = flash_decode(q, k_cache, v_cache, pos, window=window)
+    out = out.reshape(B, 1, H * hd)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), (k_cache, v_cache)
+
+
+def _block_body(cfg, rules, specs, bp, x, *, windows_blk, moe_tables_blk,
+                positions, phase, cache_blk=None, pos=None):
+    """One super-block forward. Returns (x, tallies, aux, new_cache_blk)."""
+    tallies, aux_total = [], jnp.float32(0.0)
+    new_cache = []
+    moe_i = 0
+    for i, spec in enumerate(specs):
+        sub = bp[i]
+        h = rms_norm(x, sub["ln1"], cfg.norm_eps)
+        if spec.mixer == "attn":
+            window = None
+            if windows_blk is not None:
+                window = windows_blk[i]
+            cache = None if cache_blk is None else cache_blk[i]
+            h, st = _run_attention(sub["mixer"], h, cfg, rules, window,
+                                   positions, cache=cache, pos=pos)
+            new_cache.append(st)
+        else:
+            st_in = None if cache_blk is None else cache_blk[i]
+            fn = {"mamba": ssm.mamba_seq, "mlstm": ssm.mlstm_seq,
+                  "slstm": ssm.slstm_seq}[spec.mixer]
+            if phase == "decode":
+                fn = {"mamba": ssm.mamba_step, "mlstm": ssm.mlstm_step,
+                      "slstm": ssm.slstm_step}[spec.mixer]
+            h, st = fn(sub["mixer"], h, st_in)
+            new_cache.append(st)
+        x = x + h
+        if spec.ffn != "none":
+            h2 = rms_norm(x, sub["ln2"], cfg.norm_eps)
+            if spec.ffn == "dense":
+                tp = None if rules is None else P(rules.dp, None, rules.tp)
+                h2 = mlp(sub["ffn"], h2, cfg.mlp_gated, tp_spec=tp)
+            else:
+                so = nc = None
+                if moe_tables_blk is not None:
+                    so = moe_tables_blk[0][moe_i]
+                    nc = moe_tables_blk[1][moe_i]
+                y, tally, aux = moe_layer(
+                    sub["ffn"], h2, top_k=cfg.top_k,
+                    n_experts=cfg.n_experts, rules=rules,
+                    slots_of=so, n_copies=nc, phase=phase)
+                if cfg.n_shared_experts:
+                    tp = None if rules is None else P(rules.dp, None, rules.tp)
+                    y = y + mlp(sub["shared"], h2, cfg.mlp_gated, tp_spec=tp)
+                tallies.append(tally)
+                aux_total = aux_total + aux
+                moe_i += 1
+                h2 = y
+            x = x + h2
+    tall = (jnp.stack(tallies) if tallies
+            else jnp.zeros((0, max(cfg.n_experts, 1)), jnp.float32))
+    return x, tall, aux_total, new_cache
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def _embed(cfg, params, batch, rules):
+    """Token/feature embedding → (x (B,S,D), labels_offset)."""
+    d = cfg.d_model
+    if cfg.frontend == "audio":
+        x = jnp.einsum("bsf,fd->bsd", batch["feats"],
+                       params["frontend"])
+        return x, 0
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.frontend == "vision" and "patches" in batch:    # decode: text only
+        patches = jnp.einsum("bpf,fd->bpd", batch["patches"],
+                             params["frontend"])
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+        off = cfg.n_patches
+    else:
+        off = 0
+    if rules is not None:
+        x = rules.constrain(x, rules.dp, None, None)
+    return x, off
+
+
+def _unembed_w(cfg, params):
+    return params["embed"].T if cfg.tie_embeddings else params["head"]
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def _scan_blocks(cfg, rules, params, x, *, phase, moe_tables, positions,
+                 cache=None, pos=None):
+    nb, specs = block_layout(cfg)
+    win = _windows(cfg)
+    win = None if win is None else jnp.asarray(win)
+
+    # sequence parallelism: the residual stream (and the remat-saved block
+    # inputs) live sequence-sharded over the TP axis; attention/MLP gather
+    # internally (Megatron-SP). Decode has S=1 — skip.
+    seq_ok = (rules is not None and phase != "decode"
+              and x.shape[1] % max(rules.axis_size(rules.tp), 1) == 0)
+
+    def body(x, xs):
+        bp, wb, mt, cb = xs
+        if seq_ok:
+            x = rules.constrain(x, rules.dp, rules.tp, None)
+        fn = lambda x_: _block_body(cfg, rules, specs, bp, x_,
+                                    windows_blk=wb, moe_tables_blk=mt,
+                                    positions=positions, phase=phase,
+                                    cache_blk=cb, pos=pos)
+        if rules is not None and rules.remat and phase == "train":
+            x, tall, aux, nc = jax.checkpoint(fn)(x)
+        else:
+            x, tall, aux, nc = fn(x)
+        if seq_ok:
+            x = rules.constrain(x, rules.dp, rules.tp, None)
+        if phase == "train":
+            nc = []        # don't materialize stacked states during training
+        return x, (tall, aux, nc)
+
+    xs = (params["blocks"], win, moe_tables, cache)
+    x, (tallies, aux, new_cache) = jax.lax.scan(body, x, xs)
+    # tallies (nb, m, E) → (n_moe_layers, E); aux summed
+    tallies = tallies.reshape(-1, tallies.shape[-1])
+    return x, tallies, aux.sum(), new_cache
+
+
+def loss_fn(cfg: ArchConfig, rules: Optional[ShardingRules] = None,
+            aux_weight: float = 0.01):
+    """Training loss: mean token xent + MoE load-balance aux."""
+
+    def fn(params, batch, moe_tables=None):
+        x, off = _embed(cfg, params, batch, rules)
+        S = x.shape[1]
+        positions = jnp.arange(S)
+        x, tallies, aux, _ = _scan_blocks(
+            cfg, rules, params, x, phase="train", moe_tables=moe_tables,
+            positions=positions)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if off:
+            x = x[:, off:]
+        logits_spec = None
+        if rules is not None and cfg.vocab % max(
+                rules.axis_size(rules.tp), 1) == 0:
+            logits_spec = P(rules.dp, None, rules.tp)
+        loss = softmax_xent_chunked(x, _unembed_w(cfg, params),
+                                    batch["labels"], logits_spec=logits_spec)
+        return loss + aux_weight * aux, (tallies, aux)
+
+    return fn
+
+
+def prefill_fn(cfg: ArchConfig, rules: Optional[ShardingRules] = None):
+    """(params, batch) → (last-position logits, cache, tallies)."""
+
+    def fn(params, batch, moe_tables=None):
+        x, off = _embed(cfg, params, batch, rules)
+        S = x.shape[1]
+        positions = jnp.arange(S)
+        x, tallies, _, cache = _scan_blocks(
+            cfg, rules, params, x, phase="prefill", moe_tables=moe_tables,
+            positions=positions)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
+                            _unembed_w(cfg, params).astype(jnp.float32))
+        return logits, cache, tallies
+
+    return fn
+
+
+def decode_fn(cfg: ArchConfig, rules: Optional[ShardingRules] = None):
+    """(params, token (B,1), cache, pos) → (logits, new cache, tallies)."""
+
+    def fn(params, token, cache, pos, moe_tables=None):
+        """``pos``: (B,) per-sequence positions (continuous batching)."""
+        x, _ = _embed(cfg, params, {"tokens": token}, rules)
+        pos = jnp.broadcast_to(jnp.asarray(pos), (token.shape[0],))
+        x, tallies, _, new_cache = _scan_blocks(
+            cfg, rules, params, x, phase="decode", moe_tables=moe_tables,
+            positions=pos, cache=cache, pos=pos)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
+                            _unembed_w(cfg, params).astype(jnp.float32))
+        return logits, new_cache, tallies
+
+    return fn
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               rules: Optional[ShardingRules] = None, dtype=jnp.bfloat16):
+    """Stacked per-block cache pytree matching the scan layout."""
+    nb, specs = block_layout(cfg)
+    per_pos = []
+    for spec in specs:
+        if spec.mixer == "attn":
+            shape = (nb, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+            per_pos.append((jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)))
+        elif spec.mixer == "mamba":
+            st = ssm.mamba_state_init(batch, cfg.d_model,
+                                      expand=cfg.ssm_expand,
+                                      d_state=cfg.ssm_d_state,
+                                      d_conv=cfg.ssm_conv, dtype=dtype)
+            per_pos.append(jax.tree.map(
+                lambda a: jnp.zeros((nb,) + a.shape, a.dtype), st))
+        elif spec.mixer == "mlstm":
+            st = ssm.mlstm_state_init(batch, cfg.d_model,
+                                      n_heads=cfg.n_heads,
+                                      expand=cfg.ssm_expand)
+            per_pos.append(jax.tree.map(
+                lambda a: jnp.zeros((nb,) + a.shape, a.dtype), st))
+        else:
+            st = ssm.slstm_state_init(batch, cfg.d_model,
+                                      n_heads=cfg.n_heads,
+                                      expand=cfg.ssm_expand)
+            per_pos.append(jax.tree.map(
+                lambda a: jnp.zeros((nb,) + a.shape, a.dtype), st))
+    return per_pos

@@ -1,0 +1,449 @@
+"""Mixture-of-Experts layer with expert-parallel dispatch (paper Fig 2b).
+
+Three dispatch paths, all semantically identical (modulo capacity drops):
+
+* ``dense``      — reference: every expert computed on every token, masked
+                   combine. Differentiable oracle for tests; used when no
+                   mesh is active (CPU smoke).
+* ``a2a``        — production train/prefill path: tokens sharded over the EP
+                   axis, capacity-bucketed per physical expert slot, two
+                   ``lax.all_to_all`` exchanges around the grouped expert FFN
+                   inside ``jax.shard_map`` — the paper's synchronized EP
+                   execution, layer latency = slowest rank (§2).
+* ``replicated`` — production decode path: with one token per sequence the
+                   token tensor is tiny, so tokens are replicated across the
+                   *full* device fleet, each device computes only the tokens
+                   routed to its local expert slot(s), and a single ``psum``
+                   combines. Experts are *replicated* across slots when the
+                   fleet is larger than E (the paper's §5.5 "selective expert
+                   duplication" future work, realized here as uniform
+                   round-robin duplication).
+
+**Placement is positional** (DESIGN.md §3): the stacked expert weights live
+in *physical slot* order; the router produces *logical* expert ids; the
+``slots_of`` lookup (built from a ViBE/EPLB/contiguous ``Placement``) maps
+logical → physical at runtime. Because ``slots_of`` is a plain array input,
+recalibration changes placement *without recompilation* — only the weight
+migration gather (:func:`apply_placement`) touches the expert tensors.
+
+Phantom padding: when E does not divide the EP degree (granite: 40 experts,
+16 ranks) the slot count is padded to the next multiple (48); phantom slots
+never receive tokens. This keeps the full ViBE placement freedom at any mesh
+instead of degrading to expert-TP.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .common import dense_init
+from .sharding import ShardingRules, build_slots_of
+
+__all__ = [
+    "moe_init", "moe_layer", "route", "expert_ffn_ref",
+    "default_perm_a2a", "default_perm_replicated", "n_slots_a2a",
+    "apply_placement", "placement_gather_indices", "expand_experts",
+]
+
+
+# ---------------------------------------------------------------------------
+# init / slot layout helpers
+# ---------------------------------------------------------------------------
+
+def n_slots_a2a(n_experts: int, ep_size: int) -> int:
+    """Physical slot count for a2a dispatch: E padded to a multiple of EP."""
+    return ((n_experts + ep_size - 1) // ep_size) * ep_size
+
+
+def default_perm_a2a(n_layers: int, n_experts: int, ep_size: int) -> np.ndarray:
+    """Identity (contiguous) slot permutation; phantoms at the tail."""
+    ns = n_slots_a2a(n_experts, ep_size)
+    return np.tile(np.arange(ns, dtype=np.int32), (n_layers, 1))
+
+
+def default_perm_replicated(n_layers: int, n_experts: int,
+                            fleet: int) -> np.ndarray:
+    """Round-robin replication: slot p holds logical expert p % E."""
+    e_loc = max(1, -(-n_experts // max(fleet, 1)))
+    ns = e_loc * max(fleet, 1)
+    return np.tile(np.arange(ns, dtype=np.int32) % n_experts, (n_layers, 1))
+
+
+def moe_init(key, *, d: int, f: int, n_experts: int, n_slots: int,
+             dtype=jnp.bfloat16):
+    """Router (logical order) + stacked expert weights (physical slot order)."""
+    ks = jax.random.split(key, 4)
+    shape = lambda a, b: (n_slots, a, b)
+    init = lambda k, a, b: (jax.random.normal(k, shape(a, b), jnp.float32)
+                            / np.sqrt(a)).astype(dtype)
+    return {
+        "router": dense_init(ks[0], d, n_experts, jnp.float32),
+        "w1": init(ks[1], d, f),
+        "w3": init(ks[2], d, f),
+        "w2": init(ks[3], f, d),
+    }
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+def route(router_w: jnp.ndarray, xf: jnp.ndarray, top_k: int):
+    """Softmax-then-top-k routing (Mixtral/Qwen convention).
+
+    Returns gate weights (t, K) f32 renormalized over the selected experts,
+    indices (t, K) i32 (logical), and mean full-softmax probs (E,) f32 for
+    the load-balance aux loss.
+    """
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    return weights, idx.astype(jnp.int32), probs.mean(axis=0)
+
+
+def expert_ffn_ref(w1, w3, w2, toks):
+    """Grouped SwiGLU FFN: toks (E_loc, C, D) → (E_loc, C, D). Pure jnp."""
+    h = jnp.einsum("ecd,edf->ecf", toks, w1)
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", toks, w3)
+    return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+def _get_ffn(rules: Optional[ShardingRules]) -> Callable:
+    if rules is not None and rules.use_kernel:
+        from repro.kernels import ops
+        return ops.fused_moe_ffn
+    return expert_ffn_ref
+
+
+def _bucket_positions(slot_flat: jnp.ndarray, n_slots: int,
+                      active: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Arrival position of each assignment within its slot's bucket.
+
+    ``slot_flat``: (A,) slot id per assignment; ``active``: (A,) bool mask —
+    inactive assignments consume no capacity. O(A × n_slots) int ops.
+    """
+    oh = jax.nn.one_hot(slot_flat, n_slots, dtype=jnp.int32)
+    if active is not None:
+        oh = oh * active.astype(jnp.int32)[:, None]
+    pos = jnp.cumsum(oh, axis=0) - 1
+    return jnp.take_along_axis(pos, slot_flat[:, None], axis=1)[:, 0]
+
+
+def _select_slots(idx: jnp.ndarray, slots_of: jnp.ndarray,
+                  n_copies: jnp.ndarray) -> jnp.ndarray:
+    """Map logical ids (t, K) to physical slots, hashing across replicas."""
+    t, K = idx.shape
+    r_max = slots_of.shape[-1]
+    if r_max == 1:
+        return slots_of[:, 0][idx]
+    copy = (jnp.arange(t * K, dtype=jnp.int32).reshape(t, K)) % n_copies[idx]
+    return slots_of[idx, copy]
+
+
+# ---------------------------------------------------------------------------
+# dense (reference) dispatch
+# ---------------------------------------------------------------------------
+
+def _dense_dispatch(p, xf, *, top_k, n_experts, slots_of, n_copies):
+    weights, idx, mean_prob = route(p["router"], xf, top_k)
+    slots = _select_slots(idx, slots_of, n_copies)          # (t, K) physical
+    n_slots = p["w1"].shape[0]
+    # scatter gate weights into a (t, n_slots) combine matrix
+    comb = jnp.zeros((xf.shape[0], n_slots), jnp.float32).at[
+        jnp.arange(xf.shape[0])[:, None], slots].add(weights)
+    y = expert_ffn_ref(p["w1"], p["w3"], p["w2"],
+                       jnp.broadcast_to(xf, (n_slots,) + xf.shape))
+    out = jnp.einsum("te,etd->td", comb, y.astype(jnp.float32))
+    tally = jax.nn.one_hot(idx, n_experts, dtype=jnp.float32).sum((0, 1))
+    aux = _aux_loss(tally, mean_prob, n_experts)
+    return out.astype(xf.dtype), tally, aux
+
+
+def _aux_loss(tally, mean_prob, n_experts):
+    frac = tally / jnp.maximum(tally.sum(), 1.0)
+    return n_experts * jnp.dot(frac, mean_prob)
+
+
+# ---------------------------------------------------------------------------
+# a2a dispatch (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _a2a_body(xb, router_w, w1, w3, w2, slots_of, n_copies, *,
+              top_k, n_experts, n_slots, capacity, ep_axes, dp_axes,
+              fsdp_axes, ffn):
+    """Per-device block of the a2a EP MoE layer.
+
+    xb: (B_loc, S_loc, D). Expert weights arrive sharded (E_loc, D/f, F)
+    with axis 1 FSDP-sharded; gathered here (ZeRO-3, transposes to
+    reduce-scatter in the backward).
+    """
+    Bl, Sl, D = xb.shape
+    ep = 1
+    for a in ep_axes:
+        ep *= jax.lax.axis_size(a)
+    e_loc = n_slots // ep
+    if fsdp_axes:
+        w1 = jax.lax.all_gather(w1, fsdp_axes, axis=1, tiled=True)
+        w3 = jax.lax.all_gather(w3, fsdp_axes, axis=1, tiled=True)
+        w2 = jax.lax.all_gather(w2, fsdp_axes, axis=1, tiled=True)
+
+    xf = xb.reshape(Bl * Sl, D)
+    t = xf.shape[0]
+    weights, idx, mean_prob = route(router_w, xf, top_k)
+    slots = _select_slots(idx, slots_of, n_copies)          # (t, K)
+    slot_flat = slots.reshape(-1)
+    wgt_flat = weights.reshape(-1)
+    tok_flat = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)
+
+    pos = _bucket_positions(slot_flat, n_slots)
+    keep = pos < capacity
+    dest = slot_flat * capacity + jnp.where(keep, pos, 0)
+    send = jnp.zeros((n_slots * capacity, D), xf.dtype)
+    send = send.at[dest].add(xf[tok_flat] * keep[:, None].astype(xf.dtype))
+
+    # dispatch: (ep, E_loc, C, D) — chunk i goes to EP rank i
+    send = send.reshape(ep, e_loc, capacity, D)
+    a2a_axes = ep_axes[0] if len(ep_axes) == 1 else ep_axes
+    recv = jax.lax.all_to_all(send, a2a_axes, split_axis=0, concat_axis=0)
+    # recv[j] = tokens from source rank j for my local experts
+    toks = jnp.moveaxis(recv, 0, 1).reshape(e_loc, ep * capacity, D)
+    y = ffn(w1, w3, w2, toks)                                # (E_loc, ep·C, D)
+    y = jnp.moveaxis(y.reshape(e_loc, ep, capacity, D), 1, 0)
+    back = jax.lax.all_to_all(y, a2a_axes, split_axis=0, concat_axis=0)
+    back = back.reshape(n_slots * capacity, D)               # my sends, processed
+
+    contrib = (back[dest].astype(jnp.float32)
+               * (wgt_flat * keep)[:, None])
+    out = jnp.zeros((t, D), jnp.float32).at[tok_flat].add(contrib)
+
+    tally = jax.nn.one_hot(idx, n_experts, dtype=jnp.float32).sum((0, 1))
+    tally = jax.lax.psum(tally, ep_axes + dp_axes)
+    mean_prob = jax.lax.pmean(mean_prob, ep_axes + dp_axes)
+    aux = _aux_loss(tally, mean_prob, n_experts)
+    return out.astype(xb.dtype).reshape(Bl, Sl, D), tally, aux
+
+
+# ---------------------------------------------------------------------------
+# replicated dispatch (decode)
+# ---------------------------------------------------------------------------
+
+def _replicated_body(xb, router_w, w1, w3, w2, slots_of, n_copies, *,
+                     top_k, n_experts, n_slots, capacity, ep_axes, ffn,
+                     psum_axes=None):
+    """Tokens replicated fleet-wide; each device computes its slots only.
+
+    With expert-TP (big experts) the local w1/w3 carry an F-slice and w2 the
+    matching rows: y is a partial sum over F, folded in by the wider psum.
+    """
+    B, S, D = xb.shape
+    e_loc = w1.shape[0]
+    psum_axes = psum_axes or ep_axes
+    my_rank = jnp.int32(0)
+    for a in ep_axes:
+        my_rank = my_rank * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+
+    xf = xb.reshape(B * S, D)
+    t = xf.shape[0]
+    weights, idx, mean_prob = route(router_w, xf, top_k)
+    slots = _select_slots(idx, slots_of, n_copies)
+    slot_flat = slots.reshape(-1)
+    wgt_flat = weights.reshape(-1)
+    tok_flat = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)
+
+    mine = (slot_flat // e_loc) == my_rank
+    loc = slot_flat % e_loc
+    pos = _bucket_positions(loc, e_loc, active=mine)
+    keep = mine & (pos >= 0) & (pos < capacity)
+    dest = loc * capacity + jnp.where(keep, pos, 0)
+    buckets = jnp.zeros((e_loc * capacity, D), xf.dtype)
+    buckets = buckets.at[dest].add(xf[tok_flat] * keep[:, None].astype(xf.dtype))
+
+    y = ffn(w1, w3, w2, buckets.reshape(e_loc, capacity, D))
+    y = y.reshape(e_loc * capacity, D)
+    contrib = y[dest].astype(jnp.float32) * (wgt_flat * keep)[:, None]
+    out = jnp.zeros((t, D), jnp.float32).at[tok_flat].add(contrib)
+    out = jax.lax.psum(out, psum_axes)
+
+    tally = jax.nn.one_hot(idx, n_experts, dtype=jnp.float32).sum((0, 1))
+    aux = _aux_loss(tally, mean_prob, n_experts)
+    return out.astype(xb.dtype).reshape(B, S, D), tally, aux
+
+
+# ---------------------------------------------------------------------------
+# public layer
+# ---------------------------------------------------------------------------
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def moe_layer(
+    p,
+    x: jnp.ndarray,                    # (B, S, D)
+    *,
+    top_k: int,
+    n_experts: int,
+    rules: Optional[ShardingRules] = None,
+    slots_of: Optional[jnp.ndarray] = None,     # (E, r_max) physical lookup
+    n_copies: Optional[jnp.ndarray] = None,     # (E,)
+    phase: str = "train",              # "train" | "prefill" | "decode"
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,S,D), tally (E,) logical-expert counts, aux_loss)."""
+    B, S, D = x.shape
+    n_slots = p["w1"].shape[0]
+    if slots_of is None:
+        slots_of = jnp.arange(n_experts, dtype=jnp.int32)[:, None]
+    if n_copies is None:
+        n_copies = jnp.ones((n_experts,), jnp.int32)
+
+    mode = "dense"
+    if rules is not None and rules.mesh is not None:
+        if rules.moe_dispatch in ("a2a", "replicated", "dense"):
+            mode = rules.moe_dispatch
+        elif phase == "decode":
+            mode = "replicated"
+        else:
+            mode = "a2a"
+        if mode == "a2a" and S % max(rules.ep_size, 1) != 0:
+            mode = "replicated"
+
+    if mode == "dense":
+        out, tally, aux = _dense_dispatch(
+            p, x.reshape(B * S, D), top_k=top_k, n_experts=n_experts,
+            slots_of=slots_of, n_copies=n_copies)
+        return out.reshape(B, S, D), tally, aux
+
+    cf = rules.capacity_factor
+    ffn = _get_ffn(rules)
+    mesh = rules.mesh
+    if mode == "a2a":
+        ep_axes, dp_axes = rules.ep_axes, rules.dp_axes
+        fsdp_axes = tuple(a for a in ((rules.fsdp,) if isinstance(rules.fsdp, str)
+                                      else (rules.fsdp or ()))
+                          if a in mesh.axis_names)
+        ep = rules.ep_size
+        t_loc = (B // max(rules.axis_size(dp_axes), 1)) * (S // ep)
+        capacity = _round_up(max(int(np.ceil(t_loc * top_k / n_slots * cf)), 1), 4)
+        x = rules.constrain(x, rules.dp, rules.ep[0] if len(rules.ep) == 1 else rules.ep, None)
+        body = functools.partial(
+            _a2a_body, top_k=top_k, n_experts=n_experts, n_slots=n_slots,
+            capacity=capacity, ep_axes=ep_axes, dp_axes=dp_axes,
+            fsdp_axes=fsdp_axes, ffn=ffn)
+        ep_spec = ep_axes[0] if len(ep_axes) == 1 else ep_axes
+        w_spec = P(ep_spec, fsdp_axes if fsdp_axes else None, None)
+        out, tally, aux = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(dp_axes if dp_axes else None, ep_spec, None),
+                      P(None, None), w_spec, w_spec,
+                      P(ep_spec, fsdp_axes if fsdp_axes else None, None),
+                      P(None, None), P(None)),
+            out_specs=(P(dp_axes if dp_axes else None, ep_spec, None),
+                       P(None), P()),
+            check_vma=False,
+        )(x, p["router"], p["w1"], p["w3"], p["w2"], slots_of, n_copies)
+        return out, tally, aux
+
+    # replicated decode: one-or-few slots per device across the whole fleet
+    # (expert-TP variant: slots over `ep` only, F sliced over the dp axes)
+    if rules.decode_expert_tp:
+        ep_axes = rules.ep_axes
+        ftp_axes = tuple(a for a in rules.ep_all_axes if a not in ep_axes)
+    else:
+        ep_axes = rules.ep_all_axes
+        ftp_axes = ()
+    fleet = rules.axis_size(ep_axes)
+    e_loc = n_slots // max(fleet, 1)
+    t = B * S
+    capacity = _round_up(
+        max(int(np.ceil(t * top_k / n_slots * max(cf, 2.0))), 4), 4)
+    ep_spec = ep_axes if len(ep_axes) > 1 else (ep_axes[0] if ep_axes else None)
+    ftp_spec = (ftp_axes if len(ftp_axes) > 1 else
+                (ftp_axes[0] if ftp_axes else None))
+    body = functools.partial(
+        _replicated_body, top_k=top_k, n_experts=n_experts, n_slots=n_slots,
+        capacity=capacity, ep_axes=ep_axes, ffn=ffn,
+        psum_axes=ep_axes + ftp_axes)
+    out, tally, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, None, None), P(None, None),
+                  P(ep_spec, None, ftp_spec), P(ep_spec, None, ftp_spec),
+                  P(ep_spec, ftp_spec, None), P(None, None), P(None)),
+        out_specs=(P(None, None, None), P(None), P()),
+        check_vma=False,
+    )(x, p["router"], p["w1"], p["w3"], p["w2"], slots_of, n_copies)
+    return out, tally, aux
+
+
+# ---------------------------------------------------------------------------
+# placement application (weight migration)
+# ---------------------------------------------------------------------------
+
+def placement_gather_indices(old_perm: np.ndarray,
+                             new_perm: np.ndarray) -> np.ndarray:
+    """gather_idx[l, p] = old slot whose weights must land in new slot p."""
+    old_perm = np.atleast_2d(old_perm)
+    new_perm = np.atleast_2d(new_perm)
+    L, NS = old_perm.shape
+    idx = np.empty((L, NS), dtype=np.int32)
+    for l in range(L):
+        inv = np.full(NS, -1, dtype=np.int32)
+        for q in range(NS):
+            if inv[old_perm[l, q]] < 0:
+                inv[old_perm[l, q]] = q
+        for pslot in range(NS):
+            src = inv[new_perm[l, pslot]]
+            idx[l, pslot] = src if src >= 0 else pslot
+    return idx
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def _gather_experts(leaf: jnp.ndarray, gather_idx: jnp.ndarray) -> jnp.ndarray:
+    # leaf (L, n_slots, ...) ← leaf[l, gather_idx[l]]
+    return jnp.take_along_axis(
+        leaf, gather_idx.reshape(gather_idx.shape + (1,) * (leaf.ndim - 2)),
+        axis=1)
+
+
+def apply_placement(expert_params: dict, old_perm: np.ndarray,
+                    new_perm: np.ndarray) -> Tuple[dict, int]:
+    """Migrate stacked expert weights from one slot permutation to another.
+
+    Returns (new params, number of (layer, slot) tensors that moved) — the
+    paper's weight-transfer volume; the incremental solver's swap list makes
+    this O(#swaps) instead of O(L·E).
+    """
+    gi = placement_gather_indices(old_perm, new_perm)
+    moved = int((gi != np.arange(gi.shape[1])[None, :]).sum())
+    out = dict(expert_params)
+    for k in ("w1", "w2", "w3"):
+        if k in out:
+            out[k] = _gather_experts(out[k], jnp.asarray(gi))
+    return out, moved
+
+
+def expand_experts(expert_params: dict, perm_a2a: np.ndarray,
+                   perm_dec: np.ndarray) -> dict:
+    """Build decode-fleet expert tensors (replicated slots) from the a2a
+    layout: decode slot p holds logical expert perm_dec[l, p], fetched from
+    the a2a slot holding that expert."""
+    L, ns_dec = np.atleast_2d(perm_dec).shape
+    perm_a2a = np.atleast_2d(perm_a2a)
+    gi = np.empty((L, ns_dec), dtype=np.int32)
+    for l in range(L):
+        inv = {int(e): q for q, e in reversed(list(enumerate(perm_a2a[l])))}
+        for pslot in range(ns_dec):
+            gi[l, pslot] = inv[int(perm_dec[l, pslot])]
+    out = dict(expert_params)
+    for k in ("w1", "w2", "w3"):
+        if k in out:
+            out[k] = jnp.take_along_axis(
+                out[k], jnp.asarray(gi).reshape(gi.shape + (1,) * (out[k].ndim - 2)),
+                axis=1)
+    return out

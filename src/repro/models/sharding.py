@@ -1,0 +1,139 @@
+"""Sharding rules threaded through model code (DESIGN.md §5).
+
+One :class:`ShardingRules` instance describes how a model maps onto a mesh:
+which axes carry data parallelism, tensor parallelism, expert parallelism and
+FSDP weight sharding, plus per-phase MoE dispatch choices. Model code only
+consumes the rules — the launcher builds them per (arch × mesh × phase).
+
+With ``mesh=None`` every constraint is a no-op and MoE uses the dense
+reference dispatch: the same model code runs on a bare CPU device (smoke
+tests) and on the production mesh (dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = ["ShardingRules", "build_slots_of"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """How one model maps onto one mesh.
+
+    ``ep``   — mesh axes forming the EP group for a2a dispatch (paper: the
+               TP/"model" axis; dense layers TP, MoE layers EP — §5.1).
+    ``ep_all`` — axes forming the EP group for replicated-dispatch decode
+               (all axes: one expert slot per device, tokens replicated).
+    ``fsdp`` — axis weights are additionally sharded over (ZeRO-3 style);
+               gathered per layer inside the scan body.
+    """
+
+    mesh: Optional[Mesh] = None
+    dp: Tuple[str, ...] = ("pod", "data")
+    tp: str = "model"
+    ep: Tuple[str, ...] = ("model",)
+    ep_all: Tuple[str, ...] = ("pod", "data", "model")
+    fsdp: Optional[str] = "data"
+    attn_mode: str = "heads"            # "heads" | "context"
+    moe_dispatch: str = "auto"          # "auto" | "a2a" | "replicated" | "dense"
+    capacity_factor: float = 1.25
+    remat: bool = True                  # checkpoint each scanned layer block
+    use_kernel: bool = False            # Pallas fused MoE FFN (TPU target)
+    decode_expert_tp: bool = False      # big experts: slots over `ep` only,
+    # per-expert F sharded over the dp axes (partial-sum psum combine) —
+    # avoids both weight replication and per-layer weight gathering.
+
+    # -- mesh helpers -----------------------------------------------------
+
+    def _names(self) -> set:
+        return set(self.mesh.axis_names) if self.mesh is not None else set()
+
+    def axis_size(self, axes) -> int:
+        if self.mesh is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        size = 1
+        for a in axes:
+            if a in self.mesh.axis_names:
+                size *= self.mesh.shape[a]
+        return size
+
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.dp if a in self._names())
+
+    @property
+    def ep_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.ep if a in self._names())
+
+    @property
+    def ep_all_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.ep_all if a in self._names())
+
+    @property
+    def ep_size(self) -> int:
+        return self.axis_size(self.ep_axes)
+
+    @property
+    def ep_all_size(self) -> int:
+        return self.axis_size(self.ep_all_axes)
+
+    def spec(self, *parts) -> P:
+        """PartitionSpec with axis names filtered to the active mesh."""
+        names = self._names()
+
+        def keep(part):
+            if part is None:
+                return None
+            if isinstance(part, (tuple, list)):
+                kept = tuple(x for x in part if x in names)
+                return kept if kept else None
+            return part if part in names else None
+
+        return P(*[keep(p) for p in parts])
+
+    def constrain(self, x, *parts):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.spec(*parts))
+
+
+def build_slots_of(perm: np.ndarray, n_experts: int,
+                   n_slots: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Logical-expert → physical-slot lookup tables from a slot permutation.
+
+    ``perm``: (L, n_slots) int — logical expert held in each physical slot
+    (entries ≥ n_experts are phantom padding; entries may repeat = replicas).
+    Returns ``slots_of`` (L, E, r_max) int32 (padded with the first copy so
+    any hash lands on a valid slot) and ``n_copies`` (L, E) int32.
+    """
+    perm = np.atleast_2d(perm)
+    L = perm.shape[0]
+    counts = np.zeros((L, n_experts), dtype=np.int32)
+    for l in range(L):
+        for p in range(n_slots):
+            e = perm[l, p]
+            if e < n_experts:
+                counts[l, e] += 1
+    if np.any(counts == 0):
+        raise ValueError("some logical expert has no physical slot")
+    r_max = int(counts.max())
+    slots_of = np.zeros((L, n_experts, r_max), dtype=np.int32)
+    fill = np.zeros((L, n_experts), dtype=np.int32)
+    for l in range(L):
+        for p in range(n_slots):
+            e = perm[l, p]
+            if e < n_experts:
+                slots_of[l, e, fill[l, e]] = p
+                fill[l, e] += 1
+        for e in range(n_experts):
+            slots_of[l, e, counts[l, e]:] = slots_of[l, e, 0]
+    return slots_of, counts

@@ -1,0 +1,348 @@
+"""Recurrent sequence mixers: Mamba (S6) for jamba, mLSTM/sLSTM for xLSTM.
+
+Training/prefill use chunk-parallel forms so the backward pass saves only
+chunk-boundary states (O(S/W) not O(S)); decode is a single-step recurrence
+against a tiny carried state — this is what makes the ``long_500k`` shape
+tractable for these families (DESIGN.md §5 skip matrix).
+
+Sharding: every state tensor is per-channel (d_inner) or per-head, so TP
+shards the channel/head axis and the scan carries stay local; the only
+cross-device reductions are the in/out projections (GSPMD-inserted).
+
+Numerics: states and gate accumulations in fp32, activations bf16.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import dense_init, rms_norm
+
+__all__ = [
+    "mamba_init", "mamba_seq", "mamba_step", "mamba_state_init",
+    "mlstm_init", "mlstm_seq", "mlstm_step", "mlstm_state_init",
+    "slstm_init", "slstm_seq", "slstm_step", "slstm_state_init",
+]
+
+
+# ---------------------------------------------------------------------------
+# Mamba (S6) — selective state space, as used by Jamba
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, d: int, *, expand: int = 2, d_state: int = 16,
+               d_conv: int = 4, dtype=jnp.bfloat16):
+    di = expand * d
+    dt_rank = max(16, d // 16)
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, di), jnp.float32)
+                   / np.sqrt(d_conv)).astype(dtype),
+        "x_proj": dense_init(ks[2], di, dt_rank + 2 * d_state, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, di, jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jax.random.uniform(ks[4], (di,), jnp.float32,
+                                        1e-3, 1e-1), 1e-4))),
+        "A_log": jnp.log(jnp.tile(
+            jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :], (di, 1))),
+        "D_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], di, d, dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv over sequence. x (B,S,di), w (k,di).
+
+    ``state``: previous (B, k-1, di) tail for decode continuation. Returns
+    (y, new_state).
+    """
+    B, S, di = x.shape
+    k = w.shape[0]
+    pad = (jnp.zeros((B, k - 1, di), x.dtype) if state is None
+           else state.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)                    # (B, S+k-1, di)
+    y = sum(xp[:, i:i + S, :] * w[i][None, None, :] for i in range(k))
+    return y, xp[:, -(k - 1):, :] if k > 1 else jnp.zeros((B, 0, di), x.dtype)
+
+
+def _ssm_comb(l, r):
+    """Associative element for h_t = a_t·h_{t-1} + b_t."""
+    return (r[0] * l[0], r[0] * l[1] + r[1])
+
+
+def mamba_state_init(batch: int, d: int, *, expand: int = 2,
+                     d_state: int = 16, d_conv: int = 4, dtype=jnp.bfloat16):
+    di = expand * d
+    return {"h": jnp.zeros((batch, di, d_state), jnp.float32),
+            "conv": jnp.zeros((batch, d_conv - 1, di), dtype)}
+
+
+def _mamba_core(p, x):
+    """Shared pre-scan computation. x (B,S,D) → (u, z, dt, Bm, Cm, conv_tail)."""
+    di = p["conv_w"].shape[1]
+    ds = p["A_log"].shape[1]
+    uz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    u, z = jnp.split(uz, 2, axis=-1)
+    return u, z, di, ds
+
+
+def mamba_seq(p, x: jnp.ndarray, state=None, chunk: int = 128):
+    """Full-sequence Mamba mixer. Returns (y (B,S,D), new_state).
+
+    The (B, W, di, ds) discretized tensors exist only *inside* the chunk
+    scan body (checkpointed) — materializing them for the full sequence is
+    ~TBs at jamba scale.
+    """
+    B, S, D = x.shape
+    u, z, di, ds = _mamba_core(p, x)
+    conv_state = None if state is None else state["conv"]
+    u, conv_tail = _causal_conv(u, p["conv_w"], conv_state)
+    u = jax.nn.silu(u)
+    A = -jnp.exp(p["A_log"])                                  # (di, ds)
+    dt_rank = p["dt_proj"].shape[0]
+
+    W = min(chunk, S)
+    while S % W:
+        W //= 2
+    n = S // W
+    u_c = jnp.moveaxis(u.reshape(B, n, W, di), 1, 0)          # (n,B,W,di)
+
+    @jax.checkpoint
+    def one_chunk(h, u_w):
+        proj = jnp.einsum("bwi,ie->bwe", u_w,
+                          p["x_proj"]).astype(jnp.float32)
+        dt_in, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+        dt = jax.nn.softplus(
+            jnp.einsum("bwr,ri->bwi", dt_in, p["dt_proj"]) + p["dt_bias"])
+        a = jnp.exp(dt[..., None] * A[None, None])            # (B,W,di,ds)
+        bx = (dt[..., None] * Bm[:, :, None, :]
+              * u_w.astype(jnp.float32)[..., None])
+        aa, bb = jax.lax.associative_scan(_ssm_comb, (a, bx), axis=1)
+        h_all = aa * h[:, None] + bb                          # (B,W,di,ds)
+        y_w = (h_all * Cm[:, :, None, :]).sum(-1)             # (B,W,di)
+        y_w = y_w + p["D_skip"][None, None, :] * u_w.astype(jnp.float32)
+        return h_all[:, -1], y_w.astype(x.dtype)
+
+    h0 = (jnp.zeros((B, di, ds), jnp.float32) if state is None
+          else state["h"])
+    h_last, y = jax.lax.scan(one_chunk, h0, u_c)              # (n,B,W,di)
+    y = jnp.moveaxis(y, 0, 1).reshape(B, S, di)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, {"h": h_last, "conv": conv_tail}
+
+
+def mamba_step(p, x: jnp.ndarray, state):
+    """Single-token decode. x (B,1,D) → (y (B,1,D), new_state)."""
+    out, new_state = mamba_seq(p, x, state, chunk=1)
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM — matrix-memory LSTM (xLSTM), chunkwise-parallel form
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, d: int, *, n_heads: int, expand: int = 2,
+               dtype=jnp.bfloat16):
+    di = expand * d
+    hd = di // n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "up": dense_init(ks[0], d, 2 * di, dtype),
+        "wq": dense_init(ks[1], di, di, dtype),
+        "wk": dense_init(ks[2], di, di, dtype),
+        "wv": dense_init(ks[3], di, di, dtype),
+        "w_if": dense_init(ks[4], di, 2 * n_heads, jnp.float32),
+        "ln_scale": jnp.zeros((di,), jnp.float32),
+        "down": dense_init(ks[5], di, d, dtype),
+    }
+
+
+def mlstm_state_init(batch: int, d: int, *, n_heads: int, expand: int = 2):
+    di = expand * d
+    hd = di // n_heads
+    return {"C": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, n_heads, hd), jnp.float32),
+            "m": jnp.full((batch, n_heads), -1e30, jnp.float32)}
+
+
+def _mlstm_chunk(q, k, v, log_i, log_f, C0, n0, m0):
+    """One chunk of stabilized chunkwise mLSTM.
+
+    q/k/v: (B,H,W,hd); log_i/log_f: (B,H,W) fp32. State (C0,n0,m0).
+    Returns (h (B,H,W,hd), C1, n1, m1).
+    """
+    B, H, W, hd = q.shape
+    scale = 1.0 / np.sqrt(hd)
+    b = jnp.cumsum(log_f, axis=-1)                            # (B,H,W) inclusive
+    # intra-chunk log-weights: A[t,s] = b_t − b_s + ι_s for s ≤ t
+    A = b[..., :, None] - b[..., None, :] + log_i[..., None, :]
+    mask = jnp.tril(jnp.ones((W, W), bool))
+    A = jnp.where(mask, A, -jnp.inf)
+    m_intra = A.max(axis=-1)                                  # (B,H,W)
+    m_inter = b + m0[..., None]
+    m_t = jnp.maximum(m_intra, m_inter)                       # running stabilizer
+    # intra scores
+    S = jnp.einsum("bhwd,bhsd->bhws", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    P = jnp.where(mask, S * jnp.exp(A - m_t[..., None]), 0.0)
+    h_intra = jnp.einsum("bhws,bhsd->bhwd", P, v.astype(jnp.float32))
+    # inter-chunk: decayed state contribution
+    dec = jnp.exp(m_inter - m_t)[..., None]                   # (B,H,W,1)
+    h_inter = jnp.einsum("bhwd,bhde->bhwe", q.astype(jnp.float32) * scale,
+                         C0) * dec
+    n_q = (jnp.einsum("bhwd,bhd->bhw", q.astype(jnp.float32) * scale, n0)
+           [..., None] * dec)
+    num = h_intra + h_inter
+    # normalizer: q·n_t = Σ_s exp(A−m)·(q·k_s·scale) = row-sum of P (intra)
+    # + decayed q·n0 (inter) — consistent across chunk boundaries
+    den_vec = P.sum(-1, keepdims=True) + n_q
+    den = jnp.maximum(jnp.abs(den_vec), jnp.exp(-m_t)[..., None])
+    h = num / den
+    # state update to chunk end
+    bW = b[..., -1:]
+    m1 = jnp.maximum(bW + m0[..., None], (bW - b + log_i).max(-1, keepdims=True))
+    w_upd = jnp.exp(bW - b + log_i - m1)                      # (B,H,W)
+    dec1 = jnp.exp(bW + m0[..., None] - m1)                   # (B,H,1)
+    C1 = (dec1[..., None] * C0
+          + jnp.einsum("bhw,bhwd,bhwe->bhde", w_upd,
+                       k.astype(jnp.float32), v.astype(jnp.float32)))
+    n1 = dec1 * n0 + jnp.einsum("bhw,bhwd->bhd", w_upd,
+                                k.astype(jnp.float32))
+    return h, C1, n1, m1[..., -1]
+
+
+def mlstm_seq(p, x: jnp.ndarray, state=None, chunk: int = 128):
+    """Full-sequence mLSTM block. x (B,S,D) → (y (B,S,D), new_state)."""
+    B, S, D = x.shape
+    di = p["down"].shape[0]
+    H = p["w_if"].shape[1] // 2
+    hd = di // H
+    uz = jnp.einsum("bsd,de->bse", x, p["up"])
+    u, z = jnp.split(uz, 2, axis=-1)
+    q = jnp.einsum("bsi,ij->bsj", u, p["wq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsi,ij->bsj", u, p["wk"]).reshape(B, S, H, hd)
+    v = jnp.einsum("bsi,ij->bsj", u, p["wv"]).reshape(B, S, H, hd)
+    gates = jnp.einsum("bsi,ig->bsg", u.astype(jnp.float32), p["w_if"])
+    log_i, log_f = gates[..., :H], gates[..., H:]
+    log_f = -jax.nn.softplus(-log_f)                          # log sigmoid
+
+    W = min(chunk, S)
+    while S % W:
+        W //= 2
+    n = S // W
+    # layout (B,H,S,hd): heads first, then chunk the sequence
+    qh = jnp.moveaxis(q, 2, 1)                                # (B,H,S,hd)
+    kh = jnp.moveaxis(k, 2, 1)
+    vh = jnp.moveaxis(v, 2, 1)
+    gi = jnp.moveaxis(log_i, 2, 1)                            # (B,H,S)
+    gf = jnp.moveaxis(log_f, 2, 1)
+    ch = lambda t: jnp.moveaxis(
+        t.reshape(B, H, n, W, *t.shape[3:]), 2, 0)
+
+    st = (mlstm_state_init(B, D, n_heads=H, expand=di // D) if state is None
+          else state)
+
+    @jax.checkpoint
+    def one_chunk(carry, inp):
+        C0, n0, m0 = carry
+        qw, kw, vw, iw, fw = inp
+        h, C1, n1, m1 = _mlstm_chunk(qw, kw, vw, iw, fw, C0, n0, m0)
+        return (C1, n1, m1), h
+
+    (C1, n1, m1), h = jax.lax.scan(
+        one_chunk, (st["C"], st["n"], st["m"]),
+        (ch(qh), ch(kh), ch(vh), ch(gi), ch(gf)))
+    h = jnp.moveaxis(h, 0, 2).reshape(B, H, S, hd)            # (B,H,S,hd)
+    h = jnp.moveaxis(h, 1, 2).reshape(B, S, di)
+    h = rms_norm(h.astype(x.dtype), p["ln_scale"])
+    y = h * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["down"])
+    return out, {"C": C1, "n": n1, "m": m1}
+
+
+def mlstm_step(p, x: jnp.ndarray, state):
+    return mlstm_seq(p, x, state, chunk=1)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — scalar-memory LSTM with exponential gating (recurrent only)
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, d: int, *, n_heads: int, expand: int = 2,
+               dtype=jnp.bfloat16):
+    di = expand * d
+    hd = di // n_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "up": dense_init(ks[0], d, di, dtype),
+        "w_gates": dense_init(ks[1], di, 4 * di, dtype),      # i, f, z, o
+        "r_gates": (jax.random.normal(ks[2], (n_heads, hd, 4 * hd), jnp.float32)
+                    / np.sqrt(hd)).astype(dtype),             # recurrent, per head
+        "down": dense_init(ks[3], di, d, dtype),
+    }
+
+
+def slstm_state_init(batch: int, d: int, *, n_heads: int, expand: int = 2):
+    di = expand * d
+    hd = di // n_heads
+    z = lambda: jnp.zeros((batch, n_heads, hd), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(),
+            "m": jnp.full((batch, n_heads, hd), -1e30, jnp.float32)}
+
+
+def _slstm_cell(p, u_t, st, n_heads, hd):
+    """One sLSTM step. u_t (B, di); state pytree of (B,H,hd)."""
+    B = u_t.shape[0]
+    gx = jnp.einsum("bi,ig->bg", u_t, p["w_gates"]).reshape(B, n_heads, 4 * hd)
+    gh = jnp.einsum("bhe,heg->bhg", st["h"].astype(u_t.dtype), p["r_gates"])
+    g = (gx + gh).astype(jnp.float32)
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)                 # (B,H,hd) each
+    log_f = -jax.nn.softplus(-gf)
+    m_new = jnp.maximum(log_f + st["m"], gi)
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(log_f + st["m"] - m_new)
+    c = f * st["c"] + i * jnp.tanh(gz)
+    n = f * st["n"] + i
+    h = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_seq(p, x: jnp.ndarray, state=None, chunk: int = 256):
+    """Sequential sLSTM (non-linear recurrence has no parallel form)."""
+    B, S, D = x.shape
+    di = p["down"].shape[0]
+    H, hd4 = p["r_gates"].shape[0], p["r_gates"].shape[2]
+    hd = hd4 // 4
+    u = jnp.einsum("bsd,di->bsi", x, p["up"])
+    st = slstm_state_init(B, D, n_heads=H, expand=di // D) if state is None \
+        else state
+
+    W = min(chunk, S)
+    while S % W:
+        W //= 2
+    n_chunks = S // W
+    u_c = jnp.moveaxis(u.reshape(B, n_chunks, W, di), 1, 0)
+
+    @jax.checkpoint
+    def one_chunk(carry, u_w):
+        def cell(c, u_t):
+            c2 = _slstm_cell(p, u_t, c, H, hd)
+            return c2, c2["h"]
+        carry2, hs = jax.lax.scan(cell, carry, jnp.moveaxis(u_w, 1, 0))
+        return carry2, hs                                      # (W, B, H, hd)
+
+    st_fin, hs = jax.lax.scan(one_chunk, st, u_c)              # (n, W, B, H, hd)
+    h = jnp.moveaxis(hs.reshape(S, B, H, hd), 0, 1).reshape(B, S, di)
+    out = jnp.einsum("bsi,id->bsd", h.astype(x.dtype), p["down"])
+    return out, st_fin
+
+
+def slstm_step(p, x: jnp.ndarray, state):
+    return slstm_seq(p, x, state, chunk=1)

@@ -1,0 +1,17 @@
+# Serving substrate: workload generation, SLO metrics, the discrete-event
+# multi-device EP simulator, and the JAX continuous-batching engine.
+from .engine import Engine, EngineStats
+from .metrics import PAPER_SLOS, SLO, RequestRecord, goodput, slo_frontier, \
+    summarize
+from .simulator import EPSimulator, LayerStats, SimConfig, rank_latency_matrix
+from .workload import WORKLOADS, Request, WorkloadSpec, routing_profile, \
+    sample_requests, step_loads
+
+__all__ = [
+    "Engine", "EngineStats",
+    "PAPER_SLOS", "SLO", "RequestRecord", "goodput", "slo_frontier",
+    "summarize",
+    "EPSimulator", "LayerStats", "SimConfig", "rank_latency_matrix",
+    "WORKLOADS", "Request", "WorkloadSpec", "routing_profile",
+    "sample_requests", "step_loads",
+]

@@ -1,0 +1,235 @@
+"""JAX serving engine: continuous batching + KV cache + ViBE integration.
+
+This is the *real-system* integration layer: the actual JAX model runs
+(prefill + batched decode with per-slot positions), the router's tallies
+feed the ViBE controller, and a placement update migrates the stacked
+expert weights via :func:`repro.models.moe.apply_placement` and swaps the
+slot-lookup tables **without recompiling** the step functions.
+
+Because this host has one CPU device, wall-clock here is meaningless for
+multi-rank behaviour; the engine keeps a *virtual clock* driven by the same
+ground-truth cluster model the simulator uses (DESIGN.md §4), applied to
+the *real* per-step routing tallies the model just produced. On a real
+multi-chip deployment the virtual clock is replaced by measured step times;
+nothing else changes.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import ClusterVariability, Placement, ViBEController
+from repro.models import (ShardingRules, decode_fn, init_cache, init_params,
+                          make_moe_tables, moe_perm_shape, prefill_fn)
+from repro.models.model import block_layout
+from repro.models.moe import apply_placement
+from .metrics import RequestRecord
+from .simulator import rank_latency_matrix
+from .workload import Request
+
+__all__ = ["Engine", "EngineStats"]
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    prefill_steps: int = 0
+    decode_steps: int = 0
+    migrations: int = 0
+    migrated_slots: int = 0
+    migration_bytes: int = 0
+    virtual_time: float = 0.0
+
+
+class Engine:
+    """Continuous-batching engine for one (smoke-scale) model."""
+
+    def __init__(self, cfg: ArchConfig, *,
+                 rules: Optional[ShardingRules] = None,
+                 controller: Optional[ViBEController] = None,
+                 cluster: Optional[ClusterVariability] = None,
+                 max_batch: int = 4, max_seq: int = 64,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.rules = rules
+        self.controller = controller
+        self.cluster = cluster
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.stats = EngineStats()
+        key = jax.random.PRNGKey(seed)
+        self.params = init_params(cfg, key, rules)
+        self.n_moe, self.n_slots = (moe_perm_shape(cfg, rules, "train")
+                                    if cfg.is_moe else (0, 0))
+        self._perm = (np.tile(np.arange(self.n_slots, dtype=np.int32),
+                              (self.n_moe, 1)) if cfg.is_moe else None)
+        if controller is not None:
+            self._apply_perm(self._controller_perm(), charge=False)
+        self.moe_tables = make_moe_tables(
+            cfg, rules, perm=self._perm) if cfg.is_moe else None
+        self._prefill = jax.jit(prefill_fn(cfg, rules))
+        self._decode = jax.jit(decode_fn(cfg, rules))
+        # slot state
+        self.cache = init_cache(cfg, max_batch, max_seq, rules)
+        self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
+        self.pos = np.zeros(max_batch, np.int64)
+        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self.slot_left = np.zeros(max_batch, np.int64)
+        self.records: Dict[int, RequestRecord] = {}
+        self.waiting: collections.deque = collections.deque()
+
+    # -- placement plumbing -------------------------------------------------
+
+    def _controller_perm(self) -> np.ndarray:
+        pl = self.controller.placement
+        perm = pl.perm                                  # (n_moe, n_slots)
+        if perm.shape != (self.n_moe, self.n_slots):
+            raise ValueError(f"controller placement {perm.shape} != "
+                             f"{(self.n_moe, self.n_slots)}")
+        return perm
+
+    def _apply_perm(self, new_perm: np.ndarray, charge: bool = True) -> int:
+        """Migrate expert weights + slot tables to a new permutation."""
+        nb, specs = block_layout(self.cfg)
+        m = self.n_moe // nb
+        moved_total = 0
+        for j, spec in enumerate(s for s in specs if s.ffn == "moe"):
+            pass
+        moe_positions = [i for i, s in enumerate(specs) if s.ffn == "moe"]
+        for jj, i in enumerate(moe_positions):
+            old_j = self._perm[jj::m] if m else self._perm
+            new_j = new_perm[jj::m]
+            leaf = self.params["blocks"][i]["ffn"]
+            migrated, moved = apply_placement(leaf, old_j, new_j)
+            self.params["blocks"][i]["ffn"] = {**leaf, **migrated}
+            moved_total += moved
+        self._perm = new_perm.copy()
+        self.moe_tables = make_moe_tables(self.cfg, self.rules,
+                                          perm=self._perm)
+        if charge:
+            per_slot = 3 * self.cfg.d_model * self.cfg.moe_d_ff * 2
+            self.stats.migrations += 1
+            self.stats.migrated_slots += moved_total
+            self.stats.migration_bytes += moved_total * per_slot
+        return moved_total
+
+    def _observe(self, tallies: np.ndarray, tokens: float) -> None:
+        if self.controller is None:
+            return
+        t = np.asarray(tallies, dtype=np.float64)
+        if t.shape[1] < self.n_slots:                   # phantom padding
+            t = np.pad(t, ((0, 0), (0, self.n_slots - t.shape[1])))
+        upd = self.controller.observe(t, tokens=tokens)
+        if upd is not None:
+            self._apply_perm(self._controller_perm())
+
+    # -- virtual clock -------------------------------------------------------
+
+    def _charge(self, tallies: np.ndarray, tokens: int) -> float:
+        """Advance virtual time using ground-truth cluster latencies."""
+        if self.cluster is None or self.controller is None \
+                or not self.cfg.is_moe:
+            dt = 1e-3 * max(tokens, 1)                  # trivial fallback
+        else:
+            pl = self.controller.placement
+            t = np.asarray(tallies, dtype=np.float64)
+            if t.shape[1] < self.n_slots:
+                t = np.pad(t, ((0, 0), (0, self.n_slots - t.shape[1])))
+            rank_load = pl.rank_loads(t)
+            dt = float(rank_latency_matrix(self.cluster, rank_load).max(1).sum())
+        self.stats.virtual_time += dt
+        return dt
+
+    # -- request lifecycle ----------------------------------------------------
+
+    def submit(self, reqs: List[Request]) -> None:
+        for r in reqs:
+            self.waiting.append(r)
+            self.records[r.req_id] = RequestRecord(
+                r.req_id, r.arrival, r.prompt_len, r.output_len)
+
+    def _free_slot(self) -> Optional[int]:
+        for b in range(self.max_batch):
+            if self.slot_req[b] is None:
+                return b
+        return None
+
+    def _insert_cache(self, slot: int, pre_cache) -> None:
+        """Insert a prefilled (batch-1) cache pytree into engine slot."""
+        def ins(ec, pc):
+            if pc.ndim >= 3 and ec.shape[2] != pc.shape[2]:
+                pad = [(0, 0)] * pc.ndim
+                pad[2] = (0, ec.shape[2] - pc.shape[2])
+                pc = jnp.pad(pc, pad)
+            return ec.at[:, slot].set(pc[:, 0].astype(ec.dtype))
+        self.cache = jax.tree.map(ins, self.cache, pre_cache)
+
+    def step(self) -> bool:
+        """One engine step (prefill one request, or batched decode).
+
+        Returns False when idle (no waiting or running requests).
+        """
+        if self.waiting and self._free_slot() is not None:
+            r = self.waiting.popleft()
+            slot = self._free_slot()
+            # the engine can't start before the request arrives
+            self.stats.virtual_time = max(self.stats.virtual_time, r.arrival)
+            prompt = jnp.asarray(
+                np.random.default_rng(r.req_id).integers(
+                    0, self.cfg.vocab, size=(1, r.prompt_len)), jnp.int32)
+            batch = {"tokens": prompt}
+            logits, pre_cache, tallies = self._prefill(
+                self.params, batch, self.moe_tables)
+            self._insert_cache(slot, pre_cache)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            self.tokens = self.tokens.at[slot, 0].set(nxt[0])
+            self.pos[slot] = r.prompt_len
+            self.slot_req[slot] = r
+            self.slot_left[slot] = r.output_len - 1
+            tall = np.asarray(tallies)
+            dt = self._charge(tall, r.prompt_len)
+            self._observe(tall, float(r.prompt_len))
+            rec = self.records[r.req_id]
+            rec.first_token_at = self.stats.virtual_time
+            if r.output_len <= 1:
+                rec.finished_at = self.stats.virtual_time
+                self.slot_req[slot] = None
+            self.stats.prefill_steps += 1
+            self.stats.steps += 1
+            return True
+
+        active = [b for b in range(self.max_batch)
+                  if self.slot_req[b] is not None]
+        if not active:
+            return False
+        pos = jnp.asarray(np.minimum(self.pos, self.max_seq - 1), jnp.int32)
+        logits, self.cache, tallies = self._decode(
+            self.params, self.tokens, self.cache, pos, self.moe_tables)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        self.tokens = nxt[:, None]
+        tall = np.asarray(tallies)
+        self._charge(tall, len(active))
+        self._observe(tall, float(len(active)))
+        for b in active:
+            self.pos[b] += 1
+            self.slot_left[b] -= 1
+            if self.slot_left[b] <= 0 or self.pos[b] >= self.max_seq - 1:
+                rec = self.records[self.slot_req[b].req_id]
+                rec.finished_at = self.stats.virtual_time
+                self.slot_req[b] = None
+        self.stats.decode_steps += 1
+        self.stats.steps += 1
+        return True
+
+    def run(self, max_steps: int = 10_000) -> List[RequestRecord]:
+        for _ in range(max_steps):
+            if not self.step():
+                break
+        return list(self.records.values())

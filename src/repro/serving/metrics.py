@@ -1,0 +1,93 @@
+"""SLO metrics: TTFT/TPOT percentiles, goodput, sustainable QPS (paper §5.1).
+
+Goodput = rate of SLO-compliant requests (both TTFT and TPOT within their
+thresholds) — the paper's primary quality-of-service metric, with the 90%
+compliance target defining the sustainable-QPS frontier.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["SLO", "RequestRecord", "summarize", "goodput", "slo_frontier",
+           "PAPER_SLOS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    ttft: float                    # seconds
+    tpot: float                    # seconds/token
+
+
+#: Paper Table 2b thresholds.
+PAPER_SLOS: Dict[tuple, SLO] = {
+    ("sharegpt", "deepseek-v3-671b"): SLO(0.250, 0.125),
+    ("sharegpt", "qwen3-moe-235b-a22b"): SLO(0.250, 0.100),
+    ("sonnet", "deepseek-v3-671b"): SLO(0.350, 0.125),
+    ("sonnet", "qwen3-moe-235b-a22b"): SLO(0.350, 0.100),
+}
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    req_id: int
+    arrival: float
+    prompt_len: int
+    output_len: int
+    first_token_at: float = float("nan")
+    finished_at: float = float("nan")
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_at - self.arrival
+
+    @property
+    def tpot(self) -> float:
+        if self.output_len <= 1:
+            return 0.0
+        return (self.finished_at - self.first_token_at) / (self.output_len - 1)
+
+    def meets(self, slo: SLO) -> bool:
+        return (np.isfinite(self.ttft) and self.ttft <= slo.ttft
+                and self.tpot <= slo.tpot)
+
+
+def _pct(xs: np.ndarray, p: float) -> float:
+    return float(np.percentile(xs, p)) if xs.size else float("nan")
+
+
+def summarize(records: Sequence[RequestRecord]) -> Dict[str, float]:
+    ttft = np.array([r.ttft for r in records if np.isfinite(r.ttft)])
+    tpot = np.array([r.tpot for r in records if np.isfinite(r.tpot)])
+    return {
+        "n": len(records),
+        "ttft_p50": _pct(ttft, 50), "ttft_p90": _pct(ttft, 90),
+        "ttft_p99": _pct(ttft, 99),
+        "tpot_p50": _pct(tpot, 50), "tpot_p90": _pct(tpot, 90),
+        "tpot_p99": _pct(tpot, 99),
+    }
+
+
+def goodput(records: Sequence[RequestRecord], slo: SLO) -> float:
+    """Fraction of requests meeting both SLO thresholds."""
+    if not records:
+        return 0.0
+    return float(np.mean([r.meets(slo) for r in records]))
+
+
+def slo_frontier(qps_to_goodput: Dict[float, float],
+                 target: float = 0.90) -> float:
+    """Max sustainable QPS holding ≥ target goodput (linear interp)."""
+    pts = sorted(qps_to_goodput.items())
+    best = 0.0
+    for i, (q, g) in enumerate(pts):
+        if g >= target:
+            best = q
+        elif i > 0 and pts[i - 1][1] >= target > g:
+            q0, g0 = pts[i - 1]
+            if g0 > g:
+                best = q0 + (q - q0) * (g0 - target) / (g0 - g)
+    return best

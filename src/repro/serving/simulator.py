@@ -1,0 +1,294 @@
+"""Discrete-event multi-device EP serving simulator (DESIGN.md §4).
+
+This CPU host has one device, so multi-GPU variability cannot be *measured*
+here; it is *modeled*: per-device ground-truth latency functions come from
+:mod:`repro.core.variability` (calibrated to the paper's measured regimes),
+per-layer expert loads come from the workload routing profiles (or from real
+JAX router tallies via the engine), and placement comes from the real
+solvers. The simulator then plays the paper's synchronized-EP execution
+model:
+
+    step = Σ_layers [ t_attn + t_a2a + max_g f_g(n_g) ]  (+ dense-TP layers)
+
+with continuous batching, prefill/decode separation (the paper emulates
+disaggregation, §5.1), drift-aware recalibration events and their migration
+stalls (Fig 12). Every paper figure regenerates through this path — and a
+real deployment would use the same class for what-if placement scoring, so
+it is a first-class library feature, not scaffolding.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import (ClusterVariability, PerfModel, Placement,
+                        ViBEController)
+from .metrics import RequestRecord
+from .workload import (Request, WorkloadSpec, routing_profile, step_loads,
+                       topic_loadings)
+
+__all__ = ["SimConfig", "EPSimulator", "rank_latency_matrix", "LayerStats"]
+
+
+# ---------------------------------------------------------------------------
+# vectorized ground-truth timing
+# ---------------------------------------------------------------------------
+
+def rank_latency_matrix(cluster: ClusterVariability, n_lg: np.ndarray,
+                        rng: Optional[np.random.Generator] = None) -> np.ndarray:
+    """(L, G) per-rank token loads → (L, G) ground-truth MoE kernel seconds.
+
+    Vectorized version of ``ClusterVariability.latency`` (same formula).
+    """
+    n = np.maximum(np.asarray(n_lg, dtype=np.float64), 0.0)
+    stress = np.clip(n / cluster.n_tdp, 0.0, 1.0) ** cluster.stress_gamma
+    speed = np.maximum(
+        1.0 - (cluster.throttle + (1.0 - cluster.speeds[None, :])) * stress,
+        0.1)
+    flops = 2.0 * n * cluster.d_model * cluster.d_ff * 3.0
+    t_mem = cluster.weight_bytes / cluster.hbm_bw
+    t = cluster.t_base + np.maximum(t_mem, flops / cluster.peak_flops) / speed
+    if rng is not None and cluster.jitter_sigma > 0:
+        t = t * (1.0 + rng.normal(0.0, cluster.jitter_sigma, size=t.shape))
+    return np.maximum(t, 1e-9)
+
+
+@dataclasses.dataclass
+class LayerStats:
+    """Per-step MoE layer accounting (feeds Figs 1, 6, 10)."""
+    rank_time: np.ndarray            # (L, G)
+    rank_load: np.ndarray            # (L, G)
+
+    @property
+    def layer_time(self) -> np.ndarray:
+        return self.rank_time.max(axis=1)
+
+    @property
+    def latency_gap(self) -> np.ndarray:
+        return self.rank_time.max(axis=1) - self.rank_time.min(axis=1)
+
+    @property
+    def barrier_idle(self) -> float:
+        return float((self.rank_time.max(axis=1, keepdims=True)
+                      - self.rank_time).sum())
+
+
+# ---------------------------------------------------------------------------
+# simulator
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SimConfig:
+    ep_degree: int = 8
+    max_batch: int = 64              # decode batch cap
+    max_prefill_tokens: int = 8192   # prefill chunk budget per step
+    ici_bw: Optional[float] = None   # aggregate bytes/s; None = cluster preset
+    act_bytes: float = 1.0           # a2a payload bytes/elem (FP8, Table 2a)
+    attn_flops_scale: float = 0.35   # MLA-compression adjustment (DESIGN §4)
+    poisson_loads: bool = True       # Poisson approx to multinomial (fast)
+    record_layer_stats: bool = False
+    migration_overhead: float = 2e-3 # fixed coordination cost per rearrange
+    step_overhead: float = 8e-3      # engine scheduling/launch cost per step
+    seed: int = 0
+
+
+class EPSimulator:
+    """Serving simulator for one model on one variability cluster."""
+
+    def __init__(self, model: ArchConfig, cluster: ClusterVariability,
+                 workload: WorkloadSpec, sim: SimConfig = SimConfig(),
+                 controller: Optional[ViBEController] = None,
+                 placement: Optional[Placement] = None,
+                 profile: Optional[np.ndarray] = None):
+        if not model.is_moe:
+            raise ValueError("EPSimulator requires an MoE model config")
+        self.model = model
+        self.cluster = cluster
+        self.workload = workload
+        self.cfg = sim
+        self.L = model._n_moe_layers()
+        self.E = model.n_experts
+        self.G = sim.ep_degree
+        self.controller = controller
+        self._static_placement = placement
+        self.profile = (profile if profile is not None
+                        else routing_profile(workload, self.L, self.E))
+        self._topics = (topic_loadings(workload, self.L, self.E)
+                        if workload.topic_sigma > 0 else None)
+        self.rng = np.random.default_rng(sim.seed)
+        # accounting
+        self.layer_stats: List[LayerStats] = []
+        self.rank_busy = np.zeros(self.G)
+        self.total_layer_time = 0.0
+        self.total_barrier_idle = 0.0
+        self.steps = 0
+        self.migration_stalls: List[Tuple[float, float, int]] = []
+        self.expert_bytes = (3 * model.d_model * model.moe_d_ff * 2
+                             if model.moe_d_ff else 0)
+
+    # -- placement ---------------------------------------------------------
+
+    @property
+    def placement(self) -> Placement:
+        if self.controller is not None:
+            return self.controller.placement
+        if self._static_placement is None:
+            raise ValueError("need controller or static placement")
+        return self._static_placement
+
+    # -- per-step timing ---------------------------------------------------
+
+    def _draw_loads(self, tokens: int,
+                    phase_scale: Optional[np.ndarray] = None) -> np.ndarray:
+        prof = self.profile if phase_scale is None else \
+            self.profile * phase_scale
+        log_spike = 0.0
+        if self._topics is not None:
+            # correlated spikes: topic factors shared by the whole batch
+            z = self.rng.normal(0.0, self.workload.topic_sigma,
+                                size=self.workload.n_topics)
+            log_spike = self._topics @ z                       # (L, E)
+        if self.workload.burst_sigma > 0:
+            log_spike = log_spike + self.rng.normal(
+                0.0, self.workload.burst_sigma, size=prof.shape)
+        if np.ndim(log_spike):
+            prof = prof * np.exp(log_spike)
+        prof = prof / prof.sum(axis=1, keepdims=True)
+        n = tokens * self.model.top_k
+        if self.cfg.poisson_loads:
+            return self.rng.poisson(prof * n).astype(np.float64)
+        return step_loads(prof, tokens, self.model.top_k, self.rng)
+
+    def _attn_time(self, tokens: int, ctx: float) -> float:
+        """Per-layer attention + dense-projection time (TP over G ranks)."""
+        m = self.model
+        proj = 4 * m.d_model * m.n_heads * m.hd        # qkvo, weighted 2x MACs
+        score = 4 * ctx * m.n_heads * m.hd
+        flops = self.cfg.attn_flops_scale * 2.0 * tokens * (proj + score)
+        return flops / (self.G * self.cluster.peak_flops) + self.cluster.t_base
+
+    def _a2a_time(self, tokens: int) -> float:
+        """Dispatch + combine all-to-all per MoE layer (aggregate links)."""
+        bw = self.cfg.ici_bw or self.cluster.ici_bw
+        bytes_per_rank = (tokens * self.model.top_k * self.model.d_model
+                          * self.cfg.act_bytes
+                          * (self.G - 1) / (self.G * self.G))
+        return 2.0 * bytes_per_rank / bw + self.cluster.t_base
+
+    def step_time(self, tokens: int, ctx: float,
+                  loads: Optional[np.ndarray] = None) -> float:
+        """One synchronized forward pass over all layers."""
+        if loads is None:
+            loads = self._draw_loads(tokens)
+        pl = self.placement
+        rank_load = pl.rank_loads(loads)                         # (L, G)
+        rank_time = rank_latency_matrix(self.cluster, rank_load, self.rng)
+        layer_t = rank_time.max(axis=1)
+        moe_t = float(layer_t.sum())
+        self.rank_busy += rank_time.sum(axis=0)
+        self.total_layer_time += moe_t
+        self.total_barrier_idle += float(
+            (layer_t[:, None] - rank_time).sum())
+        if self.cfg.record_layer_stats:
+            self.layer_stats.append(LayerStats(rank_time, rank_load))
+        self.steps += 1
+
+        t = moe_t + self.L * self._a2a_time(tokens)
+        t += self.model.n_layers * self._attn_time(tokens, ctx)
+        t += self.cfg.step_overhead
+
+        if self.controller is not None:
+            upd = self.controller.observe(loads, tokens=float(tokens))
+            if upd is not None:
+                bw = self.cfg.ici_bw or self.cluster.ici_bw
+                stall = (self.cfg.migration_overhead
+                         + upd.moved_experts * self.expert_bytes
+                         / (self.G * bw))
+                self.migration_stalls.append((stall, float(tokens),
+                                              upd.moved_experts))
+                t += stall
+        return t
+
+    # -- event loop (continuous batching, prefill-priority) ----------------
+
+    def run(self, requests: Sequence[Request], phase: str = "mixed",
+            drift_profile: Optional[np.ndarray] = None,
+            drift_at: Optional[float] = None) -> List[RequestRecord]:
+        """Serve a request trace. ``phase``: "mixed" | "prefill" | "decode".
+
+        * prefill: paper's prefill isolation (long input, 1 output token).
+        * decode:  warm prefix cache — prompt cost skipped (paper §5.1).
+        * drift_profile/drift_at: swap the routing profile at a given time
+          (the SG→SN / SN→SG transitions of §5.4).
+        """
+        recs = {r.req_id: RequestRecord(r.req_id, r.arrival, r.prompt_len,
+                                        r.output_len) for r in requests}
+        arrivals = collections.deque(sorted(requests, key=lambda r: r.arrival))
+        waiting: collections.deque = collections.deque()
+        running: List[List] = []      # [req, tokens_left, ctx]
+        t = 0.0
+        switched = False
+
+        while arrivals or waiting or running:
+            if drift_at is not None and not switched and t >= drift_at:
+                self.profile = drift_profile
+                switched = True
+            # admit arrivals
+            while arrivals and arrivals[0].arrival <= t:
+                waiting.append(arrivals.popleft())
+            if not waiting and not running:
+                if arrivals:
+                    t = arrivals[0].arrival
+                    continue
+                break
+
+            if waiting:
+                # prefill step: chunk of whole prompts under the token budget
+                batch, toks = [], 0
+                while waiting and (not batch or
+                                   toks + waiting[0].prompt_len
+                                   <= self.cfg.max_prefill_tokens):
+                    r = waiting.popleft()
+                    batch.append(r)
+                    toks += r.prompt_len
+                ctx = np.mean([r.prompt_len for r in batch]) / 2
+                dt = (self.step_time(toks, ctx) if phase != "decode"
+                      else self.cluster.t_base)
+                t += dt
+                for r in batch:
+                    recs[r.req_id].first_token_at = t
+                    if r.output_len <= 1 or phase == "prefill":
+                        recs[r.req_id].finished_at = t
+                    else:
+                        running.append([r, r.output_len - 1, r.prompt_len])
+                continue
+
+            # decode step: one token for up to max_batch running seqs
+            batch = running[:self.cfg.max_batch]
+            toks = len(batch)
+            ctx = float(np.mean([b[2] for b in batch]))
+            dt = self.step_time(toks, ctx)
+            t += dt
+            done = []
+            for b in batch:
+                b[1] -= 1
+                b[2] += 1
+                if b[1] <= 0:
+                    recs[b[0].req_id].finished_at = t
+                    done.append(b)
+            for b in done:
+                running.remove(b)
+        return list(recs.values())
+
+    # -- summary helpers ----------------------------------------------------
+
+    def utilization_spread(self) -> np.ndarray:
+        """Per-rank busy-time share (Fig 10b frequency-uniformity proxy)."""
+        total = self.rank_busy.sum()
+        return self.rank_busy / total if total else self.rank_busy

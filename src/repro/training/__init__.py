@@ -1,0 +1,17 @@
+# Training substrate: optimizer, synthetic data pipeline, sharded
+# checkpointing with async save + re-mesh restore, and elastic/fault-
+# tolerance utilities that compose ViBE with rank loss.
+from .checkpoint import (Checkpointer, latest_step, load_checkpoint,
+                         save_checkpoint)
+from .data import DataConfig, data_stream, synthetic_batch
+from .elastic import StragglerDetector, elastic_targets, replan_after_loss
+from .optimizer import (AdamWConfig, OptState, adamw_init, adamw_update,
+                        cosine_lr, global_norm)
+
+__all__ = [
+    "Checkpointer", "latest_step", "load_checkpoint", "save_checkpoint",
+    "DataConfig", "data_stream", "synthetic_batch",
+    "StragglerDetector", "elastic_targets", "replan_after_loss",
+    "AdamWConfig", "OptState", "adamw_init", "adamw_update", "cosine_lr",
+    "global_norm",
+]

@@ -1,0 +1,103 @@
+"""AdamW with fp32 master/moment state, built for sharded training.
+
+State mirrors the parameter pytree, so whatever PartitionSpec a parameter
+carries applies leaf-wise to its moments and master copy — ZeRO-style
+sharding falls out of the param sharding rules for free (launch/sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update",
+           "global_norm", "cosine_lr"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    master_fp32: bool = True     # keep fp32 master weights (bf16 params)
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray            # scalar i32
+    mu: Any                      # first moments (fp32)
+    nu: Any                      # second moments (fp32)
+    master: Optional[Any]        # fp32 master weights (or None)
+
+
+def adamw_init(params, cfg: AdamWConfig = AdamWConfig()) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+              if cfg.master_fp32 else None)
+    return OptState(jnp.zeros((), jnp.int32),
+                    jax.tree.map(zeros, params),
+                    jax.tree.map(zeros, params),
+                    master)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def cosine_lr(cfg: AdamWConfig, step, warmup: int = 100,
+              total: int = 10_000) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(s < warmup, warm, 0.1 + 0.9 * cos)
+
+
+def adamw_update(grads, state: OptState, params,
+                 cfg: AdamWConfig = AdamWConfig(),
+                 lr: Optional[jnp.ndarray] = None) -> Tuple[Any, OptState]:
+    """One AdamW step. Returns (new params, new state)."""
+    step = state.step + 1
+    if lr is None:
+        lr = jnp.asarray(cfg.lr, jnp.float32)
+    # global-norm clip
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else jnp.float32(1.0)
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(g, mu, nu, p, master):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1.0 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1.0 - cfg.b2) * g * g
+        upd = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+        base = master if master is not None else p.astype(jnp.float32)
+        decay = cfg.weight_decay * base if cfg.weight_decay else 0.0
+        new_master = base - lr * (upd + decay)
+        return new_master.astype(p.dtype), mu, nu, new_master
+
+    masters = state.master if state.master is not None \
+        else jax.tree.map(lambda _: None, params,
+                          is_leaf=lambda x: x is None)
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state.mu)
+    flat_nu = treedef.flatten_up_to(state.nu)
+    flat_ma = (treedef.flatten_up_to(state.master)
+               if state.master is not None else [None] * len(flat_p))
+    out = [upd(g, mu, nu, p, ma) for g, mu, nu, p, ma
+           in zip(flat_g, flat_mu, flat_nu, flat_p, flat_ma)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    new_ma = (treedef.unflatten([o[3] for o in out])
+              if state.master is not None else None)
+    return new_p, OptState(step, new_mu, new_nu, new_ma)

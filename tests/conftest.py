@@ -1,0 +1,5 @@
+import os
+import sys
+
+# tests run with PYTHONPATH=src; make that robust when invoked otherwise
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

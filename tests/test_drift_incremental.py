@@ -1,0 +1,159 @@
+"""Drift detection (Alg 1 Phase 3) + incremental solver (Alg 2)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DriftConfig, DriftDetector, ViBEConfig,
+                        ViBEController, cosine_distance, eplb_placement,
+                        incremental_update, make_cluster, vibe_placement)
+
+
+def _loads(rng, L, E, alpha=0.3, tokens=4096):
+    prof = rng.dirichlet(np.full(E, alpha), size=L)
+    return prof * tokens
+
+
+class TestDrift:
+    def test_no_trigger_on_steady_workload(self):
+        rng = np.random.default_rng(0)
+        det = DriftDetector(4, 16, DriftConfig(window=20, interval=5))
+        base = _loads(rng, 4, 16)
+        for _ in range(200):
+            ev = det.observe(base * rng.uniform(0.95, 1.05), 4096)
+            assert ev is None
+
+    def test_routing_drift_triggers(self):
+        rng = np.random.default_rng(1)
+        det = DriftDetector(4, 16, DriftConfig(window=20, interval=5))
+        base = _loads(rng, 4, 16)
+        shifted = np.roll(base, 5, axis=1)           # different hot experts
+        for _ in range(40):
+            det.observe(base, 4096)
+        events = [det.observe(shifted, 4096) for _ in range(40)]
+        fired = [e for e in events if e is not None]
+        assert fired and fired[0].kind == "routing"
+        assert fired[0].max_cos_distance > 0.05
+
+    def test_magnitude_drift_triggers_stress_event(self):
+        """Same routing ratios, 4× the tokens — EPLB can't see this; ViBE's
+        magnitude monitor must (paper §4.2.4)."""
+        rng = np.random.default_rng(2)
+        det = DriftDetector(4, 16, DriftConfig(window=20, interval=5,
+                                               delta_mag=0.5))
+        base = _loads(rng, 4, 16)
+        for _ in range(40):
+            det.observe(base, 4096)
+        fired = [det.observe(base * 4, 4 * 4096) for _ in range(40)]
+        fired = [e for e in fired if e is not None]
+        assert fired and fired[0].kind == "stress"
+
+    def test_cooldown_suppresses_retrigger(self):
+        rng = np.random.default_rng(3)
+        cfg = DriftConfig(window=10, interval=2, cooldown=30)
+        det = DriftDetector(2, 8, cfg)
+        base = _loads(rng, 2, 8)
+        for _ in range(20):
+            det.observe(base, 1000)
+        det.snapshot()
+        shifted = np.roll(base, 3, axis=1)
+        fired = [det.observe(shifted, 1000) for _ in range(29)]
+        assert all(e is None for e in fired)         # inside cooldown
+
+    def test_cosine_distance_edge_cases(self):
+        assert cosine_distance(np.zeros(4), np.zeros(4)) == 0.0
+        assert cosine_distance(np.zeros(4), np.ones(4)) == 1.0
+        assert cosine_distance(np.ones(4), np.ones(4)) == pytest.approx(0.0)
+
+
+class TestIncremental:
+    def setup_method(self):
+        self.cluster = make_cluster(8, "mi325x", d_model=1024, d_ff=512,
+                                    experts_per_rank=8)
+        self.perf = self.cluster.fit_models()
+        rng = np.random.default_rng(4)
+        self.w0 = _loads(rng, 6, 64, tokens=40_000)
+        self.w1 = np.roll(self.w0, 7, axis=1)
+
+    def test_converges_and_moves_few_experts(self):
+        pl = vibe_placement(self.w0, self.perf)
+        res = incremental_update(pl, self.w1, self.perf, epsilon=0.03)
+        full = vibe_placement(self.w1, self.perf)
+        # paper: 5–30 swaps/layer vs >200 slot reassignments for a re-solve
+        assert res.per_layer_swaps.max() <= 64
+        assert res.moved_expert_count() < full.moved_experts(pl)
+        assert res.converged_layers >= 4
+
+    def test_update_improves_max_latency(self):
+        """Alg 2 stops at tolerance OR when no swap helps; either way the
+        updated placement is no worse and usually strictly better."""
+        from repro.core import predicted_layer_latency
+        pl = vibe_placement(self.w0, self.perf)
+        res = incremental_update(pl, self.w1, self.perf, epsilon=0.05)
+        better = 0
+        for l in range(6):
+            before = predicted_layer_latency(pl.assign[l], self.w1[l],
+                                             self.perf).max()
+            after = predicted_layer_latency(res.placement.assign[l],
+                                            self.w1[l], self.perf).max()
+            assert after <= before + 1e-12
+            better += after < before - 1e-12
+        assert better >= 3
+        assert res.converged_layers >= 1
+
+    def test_uniform_slots_preserved(self):
+        pl = eplb_placement(self.w0, 8)
+        res = incremental_update(pl, self.w1, self.perf)
+        counts = np.apply_along_axis(np.bincount, 1, res.placement.assign,
+                                     minlength=8)
+        assert (counts == 8).all()
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 500))
+    def test_property_never_increases_max_latency(self, seed):
+        from repro.core import predicted_layer_latency
+        rng = np.random.default_rng(seed)
+        w0 = _loads(rng, 2, 32, tokens=30_000)
+        w1 = _loads(rng, 2, 32, tokens=30_000)
+        pl = eplb_placement(w0, 8)
+        res = incremental_update(pl, w1, self.perf)
+        for l in range(2):
+            before = predicted_layer_latency(pl.assign[l], w1[l],
+                                             self.perf).max()
+            after = predicted_layer_latency(res.placement.assign[l], w1[l],
+                                            self.perf).max()
+            assert after <= before + 1e-12
+
+
+class TestController:
+    def test_end_to_end_recalibration(self):
+        """Alg 1 over a drifting workload: trigger → incremental update →
+        snapshot → cooldown."""
+        cluster = make_cluster(4, "mi325x", d_model=256, d_ff=128,
+                               experts_per_rank=4)
+        perf = cluster.fit_models()
+        rng = np.random.default_rng(5)
+        w0 = _loads(rng, 3, 16, tokens=20_000)
+        ctl = ViBEController(
+            3, 16, 4, perf,
+            ViBEConfig(policy="vibe", adaptive=True, expert_bytes=1000,
+                       drift=DriftConfig(window=10, interval=5, cooldown=5)))
+        for _ in range(30):
+            upd = ctl.observe(w0 * rng.uniform(0.97, 1.03))
+            assert upd is None
+        w1 = np.roll(w0, 6, axis=1)
+        updates = [ctl.observe(w1) for _ in range(40)]
+        updates = [u for u in updates if u is not None]
+        assert updates, "controller never recalibrated under drift"
+        assert updates[0].moved_experts > 0
+        assert updates[0].migration_bytes == updates[0].moved_experts * 1000
+
+    def test_static_controller_never_updates(self):
+        cluster = make_cluster(4, "mi325x", d_model=256, d_ff=128,
+                               experts_per_rank=4)
+        ctl = ViBEController(2, 8, 4, cluster.fit_models(),
+                             ViBEConfig(policy="vibe", adaptive=False))
+        rng = np.random.default_rng(6)
+        for i in range(60):
+            w = _loads(rng, 2, 8) * (1 + i)
+            assert ctl.observe(w) is None

@@ -1,0 +1,84 @@
+"""Device performance models: fitting, monotonicity, profiling interface."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DeviceProfile, PerfModel, fit_perf_model,
+                        make_cluster, profile_device)
+
+
+def test_perf_model_interp_and_extrapolation():
+    m = PerfModel(np.array([0.0, 100.0, 200.0]),
+                  np.array([1e-3, 2e-3, 4e-3]))
+    assert m(0) == pytest.approx(1e-3)
+    assert m(50) == pytest.approx(1.5e-3)
+    assert m(300) == pytest.approx(6e-3)          # final-slope extrapolation
+    assert m.speed(100) == pytest.approx(500.0)
+
+
+def test_perf_model_validation():
+    with pytest.raises(ValueError):
+        PerfModel(np.array([0.0]), np.array([1e-3]))
+    with pytest.raises(ValueError):
+        PerfModel(np.array([0.0, 0.0]), np.array([1e-3, 2e-3]))
+    with pytest.raises(ValueError):
+        PerfModel(np.array([0.0, 1.0]), np.array([1e-3, -1.0]))
+
+
+def test_fit_is_monotone_even_on_noisy_data():
+    rng = np.random.default_rng(0)
+    tc = np.repeat([64, 256, 1024, 4096, 16384], 3).astype(float)
+    true = 1e-4 + tc * 2e-7
+    lat = true * (1 + rng.normal(0, 0.05, tc.size))
+    m = fit_perf_model(DeviceProfile(0, tc, lat))
+    grid = np.linspace(0, 20000, 200)
+    pred = m(grid)
+    assert np.all(np.diff(pred) >= -1e-12)         # monotone non-decreasing
+
+
+def test_profile_device_median_of_repeats():
+    calls = []
+    def latency_fn(g, n):
+        calls.append(n)
+        return 1e-3 + n * 1e-7
+    prof = profile_device(latency_fn, 0, token_counts=(10, 100), repeats=3)
+    assert len(calls) == 6
+    assert prof.latencies[1] > prof.latencies[0]
+
+
+def test_cluster_profiles_recover_speed_ordering():
+    """ViBE only sees profiled samples; the fitted models must still rank
+    devices correctly at stressed loads (the paper's Phase 1 requirement)."""
+    cluster = make_cluster(8, "mi325x", d_model=1024, d_ff=512,
+                           experts_per_rank=8)
+    models = cluster.fit_models()
+    n_stress = 3 * cluster.n_tdp
+    fitted = np.array([m(n_stress) for m in models])
+    truth = np.array([cluster.latency(g, n_stress) for g in range(8)])
+    assert np.corrcoef(fitted, truth)[0, 1] > 0.9
+
+
+def test_stress_dependence_matches_paper_fig5():
+    """Variability is latent at low load (decode) and expressed at high
+    load (prefill) — paper Fig 5."""
+    cluster = make_cluster(8, "mi325x", d_model=1024, d_ff=512,
+                           experts_per_rank=8)
+    lo = np.array([cluster.latency(g, 32) for g in range(8)])
+    hi = np.array([cluster.latency(g, 4 * cluster.n_tdp) for g in range(8)])
+    assert lo.std() / lo.mean() < 0.01
+    assert hi.std() / hi.mean() > 0.01
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n_knots=st.integers(2, 12))
+def test_property_fit_never_negative_and_callable(seed, n_knots):
+    rng = np.random.default_rng(seed)
+    tc = np.sort(rng.integers(1, 100_000, size=12)).astype(float)
+    tc = np.unique(tc)
+    if tc.size < 2:
+        tc = np.array([1.0, 2.0])
+    lat = np.abs(rng.normal(1e-3, 5e-4, tc.size)) + 1e-6
+    m = fit_perf_model(DeviceProfile(0, tc, lat), n_knots=n_knots)
+    probe = m(rng.uniform(0, 2e5, size=16))
+    assert np.all(probe > 0)

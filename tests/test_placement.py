@@ -1,0 +1,147 @@
+"""Placement solvers: invariants, policy semantics, property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Placement, PerfModel, contiguous_placement,
+                        eplb_placement, layer_latency_span,
+                        permutation_to_placement, placement_to_permutation,
+                        predicted_layer_latency, solve_model_placement,
+                        vibe_placement, make_cluster)
+
+
+def linear_models(speeds):
+    """f_g(n) = n / speed — the EPLB assumption with per-device speeds."""
+    return [PerfModel(np.array([0.0, 1e6]),
+                      np.array([1e-9, 1e6 / s]), device_id=g)
+            for g, s in enumerate(speeds)]
+
+
+def test_contiguous_matches_vllm_layout():
+    pl = contiguous_placement(n_layers=2, n_experts=8, n_ranks=4)
+    assert pl.assign.shape == (2, 8)
+    np.testing.assert_array_equal(pl.assign[0], [0, 0, 1, 1, 2, 2, 3, 3])
+
+
+def test_uniform_slot_constraint_enforced():
+    with pytest.raises(ValueError):
+        Placement(np.array([[0, 0, 0, 1]]), n_ranks=2)  # 3-vs-1 split
+
+
+def test_eplb_balances_tokens():
+    rng = np.random.default_rng(0)
+    w = rng.dirichlet(np.full(64, 0.3), size=4) * 10_000
+    pl = eplb_placement(w, n_ranks=8)
+    loads = pl.rank_loads(w)
+    for l in range(4):
+        # greedy longest-processing-time bound: a single mega-hot expert
+        # cannot be split, so max load ≤ mean + heaviest expert
+        assert loads[l].max() <= w[l].sum() / 8 + w[l].max() + 1e-9
+        # and strictly better than the contiguous layout
+        cont = contiguous_placement(1, 64, 8).rank_loads(w[l:l + 1])
+        assert loads[l].max() <= cont.max() + 1e-9
+
+
+def test_vibe_weights_by_speed():
+    speeds = np.array([1.0, 1.0, 1.0, 0.7])     # rank 3 is 30% slower
+    models = linear_models(speeds)
+    rng = np.random.default_rng(1)
+    w = rng.dirichlet(np.full(32, 0.5), size=2) * 8_000
+    pl = vibe_placement(w, models)
+    loads = pl.rank_loads(w)
+    # the slow rank receives measurably fewer tokens
+    assert loads[:, 3].mean() < 0.85 * loads[:, :3].mean()
+    # and predicted completion times are tighter than EPLB's
+    span_v = layer_latency_span(pl, w, models)
+    span_e = layer_latency_span(eplb_placement(w, 4), w, models)
+    assert span_v[:, 0].mean() <= span_e[:, 0].mean() * 1.001
+
+
+def test_vibe_reduces_latency_gap_under_skew():
+    """Paper Fig 13/14: a 13%-degraded device is routed around."""
+    cluster = make_cluster(8, "skewed", d_model=1024, d_ff=512,
+                           experts_per_rank=8)
+    perf = cluster.fit_models()
+    rng = np.random.default_rng(2)
+    w = rng.dirichlet(np.full(64, 0.25), size=4) * 60_000
+    pv = vibe_placement(w, perf)
+    pe = eplb_placement(w, 8)
+    gap = lambda pl: np.mean([predicted_layer_latency(pl.assign[l], w[l], perf).max()
+                              - predicted_layer_latency(pl.assign[l], w[l], perf).min()
+                              for l in range(4)])
+    assert gap(pv) < gap(pe)
+
+
+def test_permutation_roundtrip():
+    rng = np.random.default_rng(3)
+    w = rng.random((3, 16)) * 100
+    pl = eplb_placement(w, n_ranks=4)
+    perm = placement_to_permutation(pl.assign, 4)
+    back = permutation_to_placement(perm, 4)
+    np.testing.assert_array_equal(back, pl.assign)
+
+
+def test_solve_model_placement_dispatch():
+    w = np.ones((2, 8))
+    assert solve_model_placement("contiguous", w, 4).n_ranks == 4
+    assert solve_model_placement("eplb", w, 4).n_experts == 8
+    with pytest.raises(ValueError):
+        solve_model_placement("vibe", w, 4)          # needs perf models
+    with pytest.raises(ValueError):
+        solve_model_placement("nope", w, 4)
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_ranks=st.sampled_from([2, 4, 8]),
+    e_per=st.integers(1, 6),
+    n_layers=st.integers(1, 4),
+    seed=st.integers(0, 1000),
+)
+def test_property_every_policy_uniform_slots(n_ranks, e_per, n_layers, seed):
+    """Any solver output satisfies the uniform slots-per-rank constraint
+    and covers every expert exactly once (bijectivity)."""
+    E = n_ranks * e_per
+    rng = np.random.default_rng(seed)
+    w = rng.random((n_layers, E)) * 1000
+    models = linear_models(1.0 - 0.3 * rng.random(n_ranks))
+    for pl in (contiguous_placement(n_layers, E, n_ranks),
+               eplb_placement(w, n_ranks),
+               vibe_placement(w, models)):
+        counts = np.apply_along_axis(np.bincount, 1, pl.assign,
+                                     minlength=n_ranks)
+        assert (counts == e_per).all()
+        perm = pl.perm
+        for l in range(n_layers):
+            assert sorted(perm[l]) == list(range(E))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_property_vibe_never_worse_than_eplb_with_true_models(seed):
+    """With exact (linear) latency models, ViBE's predicted max latency is
+    never materially worse than EPLB's — the objective it optimizes."""
+    rng = np.random.default_rng(seed)
+    G, E = 4, 32
+    speeds = 1.0 - 0.4 * rng.random(G)
+    models = linear_models(speeds)
+    w = rng.dirichlet(np.full(E, 0.4)) * 10_000
+    pv = vibe_placement(w[None], models)
+    pe = eplb_placement(w[None], G)
+    tv = predicted_layer_latency(pv.assign[0], w, models).max()
+    te = predicted_layer_latency(pe.assign[0], w, models).max()
+    assert tv <= te * 1.02
+
+
+def test_moved_experts_counts():
+    a = contiguous_placement(2, 8, 4)
+    b = contiguous_placement(2, 8, 4)
+    assert a.moved_experts(b) == 0
+    w = np.random.default_rng(0).random((2, 8))
+    c = eplb_placement(w, 4)
+    assert a.moved_experts(c) >= 0

@@ -1,0 +1,181 @@
+"""Serving layer: workloads, metrics, simulator behavior, engine E2E."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get, get_smoke
+from repro.core import (DriftConfig, ViBEConfig, ViBEController,
+                        make_cluster, solve_model_placement)
+from repro.serving import (Engine, EPSimulator, PAPER_SLOS, SLO, SimConfig,
+                           WORKLOADS, goodput, routing_profile,
+                           sample_requests, slo_frontier, step_loads,
+                           summarize)
+from repro.serving.simulator import rank_latency_matrix
+
+
+class TestWorkload:
+    def test_poisson_arrivals_rate(self):
+        reqs = sample_requests(WORKLOADS["sonnet"], 2000, qps=10.0, seed=0)
+        duration = reqs[-1].arrival
+        assert 2000 / duration == pytest.approx(10.0, rel=0.15)
+
+    def test_sonnet_fixed_lengths(self):
+        reqs = sample_requests(WORKLOADS["sonnet"], 50, qps=1.0)
+        assert all(r.prompt_len == 1024 and r.output_len == 128
+                   for r in reqs)
+
+    def test_sharegpt_variable_lengths(self):
+        reqs = sample_requests(WORKLOADS["sharegpt"], 3000, qps=1.0, seed=1)
+        p = np.array([r.prompt_len for r in reqs])
+        assert p.mean() == pytest.approx(219.2, rel=0.2)
+        assert p.std() > 50
+
+    def test_routing_profile_stable_and_skewed(self):
+        prof = routing_profile(WORKLOADS["sonnet"], 8, 64)
+        np.testing.assert_allclose(prof.sum(1), 1.0, rtol=1e-9)
+        # Dirichlet(0.3) produces hot experts (paper Fig 4 skew)
+        assert prof.max(axis=1).mean() > 3.0 / 64
+
+    def test_step_loads_sum(self):
+        rng = np.random.default_rng(0)
+        prof = routing_profile(WORKLOADS["sonnet"], 4, 16)
+        loads = step_loads(prof, tokens=100, top_k=4, rng=rng)
+        np.testing.assert_array_equal(loads.sum(1), 400)
+
+
+class TestMetrics:
+    def test_goodput_and_frontier(self):
+        from repro.serving.metrics import RequestRecord
+        recs = []
+        for i in range(10):
+            r = RequestRecord(i, 0.0, 10, 5)
+            r.first_token_at = 0.1 if i < 9 else 0.9
+            r.finished_at = r.first_token_at + 4 * 0.01
+            recs.append(r)
+        slo = SLO(ttft=0.5, tpot=0.02)
+        assert goodput(recs, slo) == pytest.approx(0.9)
+        f = slo_frontier({1.0: 1.0, 2.0: 0.95, 3.0: 0.5}, target=0.9)
+        assert 2.0 < f < 3.0
+
+
+class TestSimulator:
+    def setup_method(self):
+        self.model = get("deepseek-v3-671b")
+        self.wl = WORKLOADS["sonnet"]
+        self.cluster = make_cluster(
+            8, "mi325x", d_model=self.model.d_model,
+            d_ff=self.model.moe_d_ff,
+            experts_per_rank=self.model.n_experts // 8)
+        self.perf = self.cluster.fit_models()
+        L, E = self.model._n_moe_layers(), self.model.n_experts
+        self.W = routing_profile(self.wl, L, E) * 16384 * self.model.top_k
+
+    def _run(self, policy, qps=20.0, n=120, **kw):
+        pl = solve_model_placement(
+            policy, self.W, 8,
+            perf_models=self.perf if policy == "vibe" else None)
+        sim = EPSimulator(self.model, self.cluster, self.wl,
+                          SimConfig(ep_degree=8, seed=1,
+                                    max_prefill_tokens=16384, **kw),
+                          placement=pl)
+        recs = sim.run(sample_requests(self.wl, n, qps=qps, seed=2),
+                       phase="prefill")
+        return sim, recs
+
+    def test_policy_ordering_at_saturation(self):
+        """Paper Fig 8a: vLLM < EPLB ≤ ViBE goodput on sonnet."""
+        slo = PAPER_SLOS[("sonnet", "deepseek-v3-671b")]
+        gps = {}
+        for policy in ("contiguous", "eplb", "vibe"):
+            _, recs = self._run(policy, qps=22.0)
+            gps[policy] = goodput(recs, slo)
+        assert gps["contiguous"] <= gps["eplb"] + 0.02
+        assert gps["eplb"] <= gps["vibe"] + 0.02
+
+    def test_layer_latency_ordering(self):
+        """Layer-level max and gap: contiguous > eplb ≥ vibe (Fig 10a)."""
+        res = {}
+        for policy in ("contiguous", "eplb", "vibe"):
+            pl = solve_model_placement(
+                policy, self.W, 8,
+                perf_models=self.perf if policy == "vibe" else None)
+            rt = rank_latency_matrix(self.cluster, pl.rank_loads(self.W))
+            res[policy] = (rt.max(1).mean(), (rt.max(1) - rt.min(1)).mean())
+        assert res["contiguous"][0] > res["eplb"][0] * 1.1
+        assert res["vibe"][1] <= res["eplb"][1] * 1.05
+        assert res["vibe"][0] <= res["eplb"][0] * 1.005
+
+    def test_barrier_idle_accounting(self):
+        sim, _ = self._run("contiguous", n=40)
+        assert sim.total_barrier_idle > 0
+        assert sim.steps > 0
+        util = sim.utilization_spread()
+        assert util.sum() == pytest.approx(1.0)
+
+    def test_adaptive_recalibration_under_drift(self):
+        """§5.4: profile on sonnet, serve sharegpt → adaptive recovers."""
+        L, E = self.model._n_moe_layers(), self.model.n_experts
+        ctl = ViBEController(
+            L, E, 8, self.perf,
+            ViBEConfig(policy="vibe", adaptive=True,
+                       drift=DriftConfig(window=20, interval=5, cooldown=10),
+                       expert_bytes=3 * self.model.d_model
+                       * self.model.moe_d_ff * 2),
+            initial_w=self.W)
+        sim = EPSimulator(self.model, self.cluster, self.wl,
+                          SimConfig(ep_degree=8, seed=3,
+                                    max_prefill_tokens=16384),
+                          controller=ctl)
+        drift_prof = routing_profile(WORKLOADS["sharegpt"], L, E)
+        reqs = sample_requests(self.wl, 150, qps=20.0, seed=4)
+        sim.run(reqs, phase="prefill", drift_profile=drift_prof, drift_at=1.0)
+        assert ctl.updates, "no recalibration fired under workload switch"
+        assert sim.migration_stalls, "migration stall not accounted"
+
+
+class TestEngine:
+    def _engine(self, policy="vibe", adaptive=True, arch="qwen3-moe-235b-a22b"):
+        cfg = get_smoke(arch)
+        from repro.models import moe_perm_shape
+        n_moe, n_slots = moe_perm_shape(cfg, None, "train")
+        cluster = make_cluster(4, "mi325x", d_model=cfg.d_model,
+                               d_ff=cfg.moe_d_ff,
+                               experts_per_rank=n_slots // 4)
+        ctl = ViBEController(
+            n_moe, n_slots, 4, cluster.fit_models(),
+            ViBEConfig(policy=policy, adaptive=adaptive,
+                       drift=DriftConfig(window=8, interval=4, cooldown=4),
+                       expert_bytes=3 * cfg.d_model * cfg.moe_d_ff * 2))
+        return Engine(cfg, controller=ctl, cluster=cluster,
+                      max_batch=2, max_seq=48, seed=0)
+
+    def test_engine_serves_requests_end_to_end(self):
+        eng = self._engine()
+        reqs = sample_requests(WORKLOADS["sharegpt"], 4, qps=100.0, seed=0)
+        reqs = [type(r)(r.req_id, r.arrival, 8, 6) for r in reqs]
+        eng.submit(reqs)
+        records = eng.run(max_steps=200)
+        done = [r for r in records if np.isfinite(r.finished_at)]
+        assert len(done) == 4
+        s = summarize(records)
+        assert s["ttft_p50"] > 0
+        assert eng.stats.decode_steps > 0
+
+    def test_engine_placement_migration_preserves_outputs(self):
+        """Recalibration must not change model semantics: greedy decode of
+        a fixed prompt is identical before/after a forced migration."""
+        import jax.numpy as jnp
+        eng = self._engine()
+        prompt = jnp.arange(8, dtype=jnp.int32)[None, :] % eng.cfg.vocab
+        lg0, _, _ = eng._prefill(eng.params, {"tokens": prompt},
+                                 eng.moe_tables)
+        # force a non-trivial permutation through the migration path
+        rng = np.random.default_rng(0)
+        perm = np.stack([rng.permutation(eng.n_slots)
+                         for _ in range(eng.n_moe)]).astype(np.int32)
+        moved = eng._apply_perm(perm)
+        assert moved > 0
+        lg1, _, _ = eng._prefill(eng.params, {"tokens": prompt},
+                                 eng.moe_tables)
+        np.testing.assert_allclose(np.asarray(lg0), np.asarray(lg1),
+                                   atol=1e-2, rtol=1e-2)
