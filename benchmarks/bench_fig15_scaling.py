@@ -5,6 +5,11 @@ the empirical distribution, as the paper does with its 80-GPU profiles):
 larger groups accumulate more spread (straggler probability ↑) but hold
 fewer experts per rank (placement freedom ↓) — the paper finds a 16–32
 sweet spot and convergence of all policies past 64.
+
+ViBE-R extends the sweep past that convergence point: with one spare slot
+per rank for hot-expert replicas, the straggler-vs-freedom trade-off bends
+back — replicated copies absorb the skew that singleton placement can no
+longer spread once experts-per-rank gets small.
 """
 
 import numpy as np
@@ -21,12 +26,13 @@ def run(model="deepseek-v3-671b", workload="sharegpt", quick=True,
     m = get(model)
     L, E = m._n_moe_layers(), m.n_experts
     spec = WORKLOADS[workload]
+    policies = ("contiguous", "eplb", "vibe", "vibe_r")
     rows = []
     for ep in (8, 16, 32, 64, 128):
         if E % ep:
             continue
-        tail = {p: [] for p in ("contiguous", "eplb", "vibe")}
-        gain = []
+        tail = {p: [] for p in policies}
+        gain, gain_r = [], []
         for seed in (seeds[:1] if quick else seeds):
             cluster = make_cluster(ep, "mi325x", d_model=m.d_model,
                                    d_ff=m.moe_d_ff,
@@ -37,10 +43,13 @@ def run(model="deepseek-v3-671b", workload="sharegpt", quick=True,
             rng = np.random.default_rng(seed + 100)
             # paper's projection methodology: static profiled loads +
             # per-invocation jitter, tail over repeated layer executions
-            for policy in tail:
+            for policy in policies:
+                # vibe_r: solver default slot budget (one spare replica
+                # slot per rank — default_slots_per_rank)
                 pl = solve_model_placement(
                     policy, W, ep,
-                    perf_models=perf if policy == "vibe" else None)
+                    perf_models=(perf if policy in ("vibe", "vibe_r")
+                                 else None))
                 rank_load = pl.rank_loads(W)
                 maxes = [rank_latency_matrix(cluster, rank_load,
                                              rng=rng).max(1)
@@ -48,13 +57,16 @@ def run(model="deepseek-v3-671b", workload="sharegpt", quick=True,
                 tail[policy].append(
                     float(np.percentile(np.concatenate(maxes), 99)))
             gain.append(tail["eplb"][-1] / tail["vibe"][-1] - 1)
+            gain_r.append(tail["vibe"][-1] / tail["vibe_r"][-1] - 1)
         rows.append({
             "bench": "fig15", "label": f"EP{ep}",
             "ep": ep, "experts_per_rank": E // ep,
             "p99_layer_ms_contiguous": 1e3 * float(np.mean(tail["contiguous"])),
             "p99_layer_ms_eplb": 1e3 * float(np.mean(tail["eplb"])),
             "p99_layer_ms_vibe": 1e3 * float(np.mean(tail["vibe"])),
+            "p99_layer_ms_vibe_r": 1e3 * float(np.mean(tail["vibe_r"])),
             "vibe_gain_over_eplb_pct": 100 * float(np.mean(gain)),
+            "vibe_r_gain_over_vibe_pct": 100 * float(np.mean(gain_r)),
         })
     emit(rows, "fig15_scaling")
     return rows

@@ -1,0 +1,100 @@
+"""ViBE-R solver benchmark: wall-clock vs (G, E, L) + quality on Zipf skew.
+
+Two questions the placement subsystem must answer at cluster scale:
+
+1. **Does the solve itself scale?** The per-layer Python greedy is O(L·E·G)
+   with Python-loop constants; the vectorized solvers advance all layers
+   simultaneously (argsort/segment ops), so the DeepSeek-scale operating
+   point (G=64, L=58, E=256) must finish in well under a second — fast
+   enough to re-solve inside a serving-loop recalibration window.
+2. **Does replication buy latency?** On a Zipf-skewed activation matrix the
+   hottest expert pins whichever rank holds it; ViBE-R splits that expert
+   over several ranks (speed-proportional shares), so its predicted
+   max-layer latency must drop below singleton ViBE's.
+
+Run:  PYTHONPATH=src:. python -m benchmarks.bench_placement_solve
+"""
+
+import time
+
+import numpy as np
+
+from repro.core import (default_slots_per_rank, layer_latency_span,
+                        make_cluster, solve_model_placement)
+from repro.core.placement import (_greedy_target_assign, _speed_targets,
+                                  vibe_placement)
+from .common import emit
+
+#: (G, E, L) sweep; the 64×256×58 point is DeepSeek-V3 on a 64-rank fleet.
+SWEEP = ((8, 64, 4), (16, 128, 16), (32, 256, 32), (64, 256, 58),
+         (128, 512, 58))
+
+
+def zipf_activation(L: int, E: int, tokens: float = 500_000.0,
+                    alpha: float = 1.2, seed: int = 0) -> np.ndarray:
+    """Zipf(alpha) expert popularity, hot-expert identity shuffled per layer."""
+    rng = np.random.default_rng(seed)
+    z = 1.0 / np.arange(1, E + 1) ** alpha
+    prof = np.stack([rng.permutation(z) for _ in range(L)])
+    return prof / prof.sum(axis=1, keepdims=True) * tokens
+
+
+def _time(fn, repeats: int = 3) -> float:
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(quick=True, seed=0):
+    rows = []
+    for G, E, L in (SWEEP[:4] if quick else SWEEP):
+        cluster = make_cluster(G, "mi325x", d_model=7168, d_ff=2048,
+                               experts_per_rank=max(E // G, 1), seed=seed)
+        perf = cluster.fit_models()
+        W = zipf_activation(L, E, seed=seed)
+        s_loc = default_slots_per_rank(E, G)   # one replica slot per rank
+
+        t_vibe = _time(lambda: solve_model_placement(
+            "vibe", W, G, perf_models=perf))
+        t_vibe_r = _time(lambda: solve_model_placement(
+            "vibe_r", W, G, perf_models=perf, slots_per_rank=s_loc))
+
+        # per-layer reference greedy (the pre-vectorization code path)
+        def legacy():
+            _, targets = _speed_targets(W, perf, "rank")
+            for l in range(L):
+                _greedy_target_assign(W[l], targets[l].copy(), G)
+        t_legacy = _time(legacy, repeats=1)
+
+        pv = vibe_placement(W, perf)
+        pr = solve_model_placement("vibe_r", W, G, perf_models=perf,
+                                   slots_per_rank=s_loc)
+        span_v = layer_latency_span(pv, W, perf)[:, 0]
+        span_r = layer_latency_span(pr, W, perf)[:, 0]
+        rows.append({
+            "bench": "placement_solve", "label": f"G{G}_E{E}_L{L}",
+            "G": G, "E": E, "L": L, "slots_per_rank_vibe_r": s_loc,
+            "solve_ms_vibe": 1e3 * t_vibe,
+            "solve_ms_vibe_r": 1e3 * t_vibe_r,
+            "solve_ms_perlayer_greedy": 1e3 * t_legacy,
+            "vec_speedup_x": t_legacy / max(t_vibe, 1e-9),
+            "pred_max_layer_ms_vibe": 1e3 * float(span_v.mean()),
+            "pred_max_layer_ms_vibe_r": 1e3 * float(span_r.mean()),
+            "vibe_r_latency_reduction_pct":
+                100 * (1 - float(span_r.mean()) / float(span_v.mean())),
+            "max_copies": int(pr.n_copies().max()),
+        })
+        if (G, E, L) == (64, 256, 58):
+            assert t_vibe_r < 1.0, \
+                f"acceptance: vibe_r solve took {t_vibe_r:.2f}s (≥1s)"
+            assert span_r.mean() < span_v.mean(), \
+                "acceptance: vibe_r did not beat vibe on Zipf skew"
+    emit(rows, "placement_solve")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -21,7 +21,9 @@ from repro.serving import (EPSimulator, PAPER_SLOS, SimConfig, WORKLOADS,
                            goodput, routing_profile, sample_requests,
                            slo_frontier, summarize)
 
-POLICIES = ("contiguous", "eplb", "vibe")
+POLICIES = ("contiguous", "eplb", "vibe", "vibe_r")
+#: policies that consume per-device performance models
+PERF_POLICIES = ("vibe", "vibe_r")
 MODELS = ("deepseek-v3-671b", "qwen3-moe-235b-a22b")
 PROFILE_TOKENS = 16_384            # paper's stressed operating point
 
@@ -42,11 +44,14 @@ def profile_W(model_name: str, workload: str, ep: int = 8) -> np.ndarray:
 
 
 def placement_for(policy: str, model_name: str, workload: str,
-                  cluster: ClusterVariability, ep: int = 8):
+                  cluster: ClusterVariability, ep: int = 8,
+                  slots_per_rank: Optional[int] = None):
     W = profile_W(model_name, workload, ep)
     perf = cluster.fit_models()
     return solve_model_placement(
-        policy, W, ep, perf_models=perf if policy == "vibe" else None)
+        policy, W, ep,
+        perf_models=perf if policy in PERF_POLICIES else None,
+        slots_per_rank=slots_per_rank)
 
 
 def make_sim(model_name: str, workload: str, policy: str,

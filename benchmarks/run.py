@@ -16,7 +16,7 @@ import traceback
 from . import (bench_fig1_imbalance, bench_fig3_breakdown,
                bench_fig4_tokendist, bench_fig6_assignment, bench_fig8_slo,
                bench_fig10_gap, bench_fig11_drift, bench_fig13_sensitivity,
-               bench_fig15_scaling, bench_kernels)
+               bench_fig15_scaling, bench_kernels, bench_placement_solve)
 
 HARNESSES = {
     "fig1": bench_fig1_imbalance.run,
@@ -28,6 +28,7 @@ HARNESSES = {
     "fig11": bench_fig11_drift.run,
     "fig13": bench_fig13_sensitivity.run,
     "fig15": bench_fig15_scaling.run,
+    "placement": bench_placement_solve.run,
     "kernels": bench_kernels.run,
 }
 

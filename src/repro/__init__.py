@@ -1,0 +1,2 @@
+"""ViBE reproduction: variability-aware MoE serving (control plane + JAX
+data plane). See README.md for the layout and ROADMAP.md for direction."""

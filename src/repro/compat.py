@@ -1,0 +1,77 @@
+"""JAX version compatibility layer.
+
+The codebase targets the modern mesh/shard_map surface (``jax.shard_map``
+with ``check_vma``, ``jax.set_mesh``, ``jax.sharding.AxisType``); CI and
+some dev containers pin older JAX (0.4.x) where those names either do not
+exist or are spelled differently. Every version-sensitive call goes through
+this module so the rest of the tree stays on one idiom:
+
+* :func:`shard_map`          — ``jax.shard_map(check_vma=False)`` on new JAX,
+                               ``jax.experimental.shard_map.shard_map(check_rep=False)``
+                               on 0.4.x (same semantics: skip the replication
+                               / varying-manual-axes check).
+* :func:`use_mesh`           — ``jax.set_mesh(mesh)`` context on new JAX;
+                               on 0.4.x ``Mesh`` itself is the context
+                               manager that installs the resource env.
+* :func:`make_mesh`          — ``jax.make_mesh`` with ``axis_types`` only
+                               where the kwarg (and ``AxisType``) exist;
+                               0.4.x meshes are implicitly Auto.
+* :func:`cost_analysis_dict` — ``Compiled.cost_analysis()`` returns a dict
+                               on new JAX but a one-element list of dicts on
+                               0.4.x; normalize to a dict.
+
+``jax.lax.axis_size`` also does not exist on 0.4.x; shard_map bodies that
+need axis sizes receive them statically from the caller (the mesh shape is
+always known at trace time) instead of querying the axis env.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Optional, Sequence
+
+import jax
+
+__all__ = ["shard_map", "use_mesh", "make_mesh", "cost_analysis_dict"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-portable ``shard_map`` with replication checking disabled."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+def use_mesh(mesh):
+    """Context manager installing ``mesh`` for named sharding constraints."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(mesh, "__enter__"):
+        return mesh
+    return contextlib.nullcontext(mesh)  # pragma: no cover - AbstractMesh
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str], devices=None):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    kw = {}
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        kw["axis_types"] = (axis_type.Auto,) * len(axes)
+    if devices is not None:
+        kw["devices"] = devices
+    return jax.make_mesh(tuple(shape), tuple(axes), **kw)
+
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Normalize ``Compiled.cost_analysis()`` across JAX versions.
+
+    Old versions return ``[{...}]`` (one dict per device program); new ones
+    return ``{...}`` directly. Missing/empty analyses normalize to ``{}``.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}

@@ -3,13 +3,17 @@
 from .activation import ActivationProfiler, routing_tally
 from .controller import PlacementUpdate, ViBEConfig, ViBEController
 from .drift import DriftConfig, DriftDetector, DriftEvent, cosine_distance
-from .incremental import IncrementalResult, Swap, incremental_update
+from .incremental import (IncrementalResult, SlotSwap, Swap,
+                          incremental_update, incremental_update_replicated)
 from .perf_model import (DeviceProfile, PerfModel, fit_perf_model,
                          profile_device)
-from .placement import (Placement, contiguous_placement, eplb_placement,
-                        layer_latency_span, placement_to_permutation,
-                        permutation_to_placement, predicted_layer_latency,
-                        solve_model_placement, vibe_placement)
+from .placement import (Placement, ReplicatedPlacement,
+                        contiguous_placement, default_slots_per_rank,
+                        eplb_placement, layer_latency_span,
+                        placement_to_permutation, permutation_to_placement,
+                        predicted_layer_latency, predicted_rank_latencies,
+                        solve_model_placement, vibe_placement,
+                        vibe_r_placement)
 from .variability import (REGIMES, ClusterVariability, VariabilityRegime,
                           make_cluster)
 
@@ -17,11 +21,14 @@ __all__ = [
     "ActivationProfiler", "routing_tally",
     "PlacementUpdate", "ViBEConfig", "ViBEController",
     "DriftConfig", "DriftDetector", "DriftEvent", "cosine_distance",
-    "IncrementalResult", "Swap", "incremental_update",
+    "IncrementalResult", "SlotSwap", "Swap", "incremental_update",
+    "incremental_update_replicated",
     "DeviceProfile", "PerfModel", "fit_perf_model", "profile_device",
-    "Placement", "contiguous_placement", "eplb_placement",
+    "Placement", "ReplicatedPlacement", "contiguous_placement",
+    "default_slots_per_rank", "eplb_placement",
     "layer_latency_span", "placement_to_permutation",
     "permutation_to_placement", "predicted_layer_latency",
-    "solve_model_placement", "vibe_placement",
+    "predicted_rank_latencies", "solve_model_placement", "vibe_placement",
+    "vibe_r_placement",
     "REGIMES", "ClusterVariability", "VariabilityRegime", "make_cluster",
 ]

@@ -25,16 +25,20 @@ import numpy as np
 
 from .activation import ActivationProfiler
 from .drift import DriftConfig, DriftDetector, DriftEvent
-from .incremental import IncrementalResult, incremental_update
+from .incremental import (IncrementalResult, incremental_update,
+                          incremental_update_replicated)
 from .perf_model import PerfModel
-from .placement import Placement, solve_model_placement
+from .placement import Placement, ReplicatedPlacement, solve_model_placement
 
 __all__ = ["ViBEConfig", "PlacementUpdate", "ViBEController"]
+
+#: policies that consume per-device performance models
+_PERF_POLICIES = ("vibe", "vibe_r")
 
 
 @dataclasses.dataclass(frozen=True)
 class ViBEConfig:
-    policy: str = "vibe"              # "vibe" | "eplb" | "contiguous"
+    policy: str = "vibe"              # "vibe" | "vibe_r" | "eplb" | "contiguous"
     adaptive: bool = True             # Phase 3 on/off (paper: static vs adaptive)
     drift: DriftConfig = dataclasses.field(default_factory=DriftConfig)
     epsilon: float = 0.03             # incremental solver tolerance
@@ -43,6 +47,9 @@ class ViBEConfig:
     # stress drift changes f_g's operating point → re-solve from scratch is
     # allowed there (the paper's magnitude-aware recalibration); routing-only
     # drift uses the minimal-movement incremental solver.
+    slots_per_rank: Optional[int] = None
+    # vibe_r only: physical slot budget per rank (≥ ceil(E/G)); the excess
+    # slots hold hot-expert replicas. None = placement.default_slots_per_rank.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,11 +83,18 @@ class ViBEController:
         self.detector = DriftDetector(n_layers, n_experts, config.drift)
         w0 = (np.atleast_2d(initial_w) if initial_w is not None
               else np.full((n_layers, n_experts), 1.0 / n_experts))
-        self.placement = solve_model_placement(
-            config.policy, w0, n_ranks,
-            perf_models=self.perf_models if config.policy == "vibe" else None)
+        self.placement = self._solve(w0)
         self._step = 0
         self.updates: List[PlacementUpdate] = []
+
+    # ------------------------------------------------------------------
+    def _solve(self, w: np.ndarray):
+        """Full placement solve with this controller's policy and knobs."""
+        return solve_model_placement(
+            self.cfg.policy, w, self.G,
+            perf_models=(self.perf_models
+                         if self.cfg.policy in _PERF_POLICIES else None),
+            slots_per_rank=self.cfg.slots_per_rank)
 
     # ------------------------------------------------------------------
     @property
@@ -114,34 +128,37 @@ class ViBEController:
         old = self.placement
         if event.kind == "stress" and self.cfg.full_resolve_on_stress:
             # magnitude shift: operating point of every f_g moved → full
-            # re-solve at the new stress level (still same machinery)
-            new = solve_model_placement(
-                self.cfg.policy, w, self.G,
-                perf_models=self.perf_models if self.cfg.policy == "vibe" else None)
+            # re-solve at the new stress level (still same machinery).
+            # ``moved_experts`` counts changed (layer, slot) residents, so
+            # for vibe_r every migrated *copy* is charged expert_bytes.
+            new = self._solve(w)
             moved = new.moved_experts(old)
             upd = PlacementUpdate(
                 step=self._step, event=event, placement=new,
                 moved_experts=moved,
                 migration_bytes=moved * self.cfg.expert_bytes,
                 full_resolve=True)
-        else:
-            if self.cfg.policy == "vibe":
-                res: IncrementalResult = incremental_update(
+        elif self.cfg.policy in _PERF_POLICIES:
+            if self.cfg.policy == "vibe_r":
+                res: IncrementalResult = incremental_update_replicated(
                     old, w, self.perf_models, epsilon=self.cfg.epsilon)
-                new, moved = res.placement, res.moved_expert_count()
-                upd = PlacementUpdate(
-                    step=self._step, event=event, placement=new,
-                    moved_experts=moved,
-                    migration_bytes=moved * self.cfg.expert_bytes,
-                    swaps_per_layer=res.per_layer_swaps)
-            else:  # eplb-style full greedy re-solve (the paper's contrast)
-                new = solve_model_placement(self.cfg.policy, w, self.G)
-                moved = new.moved_experts(old)
-                upd = PlacementUpdate(
-                    step=self._step, event=event, placement=new,
-                    moved_experts=moved,
-                    migration_bytes=moved * self.cfg.expert_bytes,
-                    full_resolve=True)
+            else:
+                res = incremental_update(
+                    old, w, self.perf_models, epsilon=self.cfg.epsilon)
+            new, moved = res.placement, res.moved_expert_count()
+            upd = PlacementUpdate(
+                step=self._step, event=event, placement=new,
+                moved_experts=moved,
+                migration_bytes=moved * self.cfg.expert_bytes,
+                swaps_per_layer=res.per_layer_swaps)
+        else:  # eplb-style full greedy re-solve (the paper's contrast)
+            new = self._solve(w)
+            moved = new.moved_experts(old)
+            upd = PlacementUpdate(
+                step=self._step, event=event, placement=new,
+                moved_experts=moved,
+                migration_bytes=moved * self.cfg.expert_bytes,
+                full_resolve=True)
         self.placement = upd.placement
         self.detector.snapshot()
         self.updates.append(upd)

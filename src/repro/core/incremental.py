@@ -24,9 +24,10 @@ from typing import List, Sequence, Tuple
 import numpy as np
 
 from .perf_model import PerfModel
-from .placement import Placement
+from .placement import Placement, ReplicatedPlacement
 
-__all__ = ["Swap", "IncrementalResult", "incremental_update"]
+__all__ = ["Swap", "IncrementalResult", "incremental_update",
+           "SlotSwap", "incremental_update_replicated"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,9 +40,19 @@ class Swap:
 
 
 @dataclasses.dataclass(frozen=True)
+class SlotSwap:
+    """One (expert, copy)-granular exchange between two physical slots."""
+    layer: int
+    slot_a: int     # slot on rank_a (was slowest)
+    slot_b: int     # slot on rank_b (was fastest)
+    rank_a: int
+    rank_b: int
+
+
+@dataclasses.dataclass(frozen=True)
 class IncrementalResult:
-    placement: Placement
-    swaps: List[Swap]
+    placement: "Placement | ReplicatedPlacement"
+    swaps: List
     converged_layers: int
     per_layer_swaps: np.ndarray     # (L,)
 
@@ -133,6 +144,101 @@ def incremental_update(
 
     return IncrementalResult(
         placement=Placement(assign, G),
+        swaps=swaps,
+        converged_layers=converged,
+        per_layer_swaps=per_layer,
+    )
+
+
+def incremental_update_replicated(
+    placement: ReplicatedPlacement,
+    w: np.ndarray,                       # (L, E) fresh activation matrix
+    perf_models: Sequence[PerfModel],
+    epsilon: float = 0.03,
+    max_swaps_per_layer: int = 64,
+) -> IncrementalResult:
+    """Algorithm 2 at (expert, copy)-slot granularity (ViBE-R placements).
+
+    The swap unit is a physical *slot*: exchanging the residents of one slot
+    on the slowest rank with one on the fastest moves exactly two expert
+    copies (and their traffic shares) — shares travel with their copy, so
+    per-expert share sums and replica counts are invariant, which keeps
+    every logical expert resident somewhere. Swaps that would colocate two
+    copies of the same expert on one rank are skipped (a colocated replica
+    absorbs no skew). The swap log doubles as the weight-migration plan,
+    exactly as in the singleton solver.
+    """
+    w = np.atleast_2d(np.asarray(w, dtype=np.float64))
+    G = placement.n_ranks
+    L, S = placement.slot_expert.shape
+    s_loc = placement.slots_per_rank
+    if w.shape != (L, placement.n_experts):
+        raise ValueError(f"w shape {w.shape} != "
+                         f"{(L, placement.n_experts)}")
+
+    se = placement.slot_expert.copy()
+    sh = placement.share.copy()
+    # frozen per-slot traffic under the fresh activation matrix
+    slot_load = np.take_along_axis(w, se, axis=1) * sh
+    swaps: List[SlotSwap] = []
+    per_layer = np.zeros(L, dtype=np.int64)
+    converged = 0
+
+    for l in range(L):
+        load = slot_load[l].reshape(G, s_loc).sum(axis=1)
+        rank_of = np.arange(S) // s_loc
+
+        for _ in range(max_swaps_per_layer):
+            lat = _rank_latencies(load, perf_models)
+            target = (1.0 + epsilon) * lat.mean()
+            if lat.max() <= target:
+                break
+            g_plus = int(np.argmax(lat))
+            g_minus = int(np.argmin(lat))
+            if g_plus == g_minus:
+                break
+
+            cur_pair_max = max(lat[g_plus], lat[g_minus])
+            best_gain, best = 0.0, None
+            fp, fm = perf_models[g_plus], perf_models[g_minus]
+            lp, lm = load[g_plus], load[g_minus]
+            slots_p = np.flatnonzero(rank_of == g_plus)
+            slots_m = np.flatnonzero(rank_of == g_minus)
+            experts_p = set(int(e) for e in se[l, slots_p])
+            experts_m = set(int(e) for e in se[l, slots_m])
+            for si in slots_p:
+                ei = int(se[l, si])
+                for sj in slots_m:
+                    ej = int(se[l, sj])
+                    if ei == ej:
+                        continue
+                    # dedup: arriving copy must not meet a sibling copy
+                    if ei in experts_m or ej in experts_p:
+                        continue
+                    dn = slot_load[l, si] - slot_load[l, sj]
+                    if dn <= 0:
+                        continue  # only moving load off the slow rank helps
+                    new_max = max(float(fp(lp - dn)), float(fm(lm + dn)))
+                    gain = cur_pair_max - new_max
+                    if gain > best_gain + 1e-15:
+                        best_gain, best = gain, (int(si), int(sj), dn)
+            if best is None:
+                break  # no latency reduction available
+
+            si, sj, dn = best
+            for arr in (se, sh, slot_load):
+                arr[l, si], arr[l, sj] = arr[l, sj], arr[l, si]
+            load[g_plus] -= dn
+            load[g_minus] += dn
+            swaps.append(SlotSwap(l, si, sj, g_plus, g_minus))
+            per_layer[l] += 1
+
+        lat = _rank_latencies(load, perf_models)
+        if lat.max() <= (1.0 + epsilon) * lat.mean():
+            converged += 1
+
+    return IncrementalResult(
+        placement=ReplicatedPlacement(se, sh, G, placement.n_experts),
         swaps=swaps,
         converged_layers=converged,
         per_layer_swaps=per_layer,

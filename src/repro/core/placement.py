@@ -1,6 +1,7 @@
-"""Expert placement solvers (paper §4.2.3, Table 2c, Alg 1 Phase 2).
+"""Expert placement solvers (paper §4.2.3, Table 2c, Alg 1 Phase 2 + ViBE-R).
 
-Three policies, matching the paper's evaluation matrix:
+Four policies, matching the paper's evaluation matrix plus the cluster-scale
+replication extension:
 
 * :func:`contiguous_placement` — vLLM baseline: logical experts partitioned
   contiguously, expert e → rank e // (E/G). No workload or hardware awareness.
@@ -16,18 +17,33 @@ Three policies, matching the paper's evaluation matrix:
        its target (most remaining target capacity), subject to the uniform
        slot constraint (same #experts per rank — paper §5.1 keeps memory
        uniform; non-uniform allocation is future work there, optional here).
+* :func:`vibe_r_placement` — **ViBE-R**: replication-aware co-optimization
+  of workload skew and hardware variability at cluster scale (paper Fig 15
+  regime; HarMoEny-style redundant sharding). Under a slot budget of
+  ``slots_per_rank × G`` physical slots it (a) grants extra *copies* to the
+  hottest experts (greedy largest-per-copy-load splitting), (b) spreads each
+  expert's traffic over its copies speed-proportionally (fast devices absorb
+  a larger share), and (c) runs the whole solve vectorized across layers —
+  a 64-rank × 58-layer × 256-expert model solves in milliseconds.
 
-A placement for one layer is an integer array ``assign`` of shape (E,) with
-``assign[e] = rank``; for the whole model a (L, E) matrix. Helpers convert to
-the logical→physical permutation used by the JAX MoE layer (models/moe.py).
+Singleton placements are an integer array ``assign`` of shape (E,) with
+``assign[e] = rank`` per layer ((L, E) for the model); replicated placements
+are a *slot table* ``slot_expert`` of shape (L, S) (logical expert held in
+each physical slot, entries repeat for replicas) plus per-copy traffic
+shares. Both convert to the logical→physical permutation consumed by the
+JAX MoE layer (models/moe.py ``build_slots_of``).
 
-All solvers are pure numpy host code (control plane).
+All solvers are pure numpy host code (control plane). The greedy fills are
+vectorized across layers: a Python loop runs only over the E (or S) item
+*positions*, with every layer advanced simultaneously via argmax/scatter
+ops — the per-layer reference implementations are kept for the equivalence
+tests.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -35,20 +51,24 @@ from .perf_model import PerfModel
 
 __all__ = [
     "Placement",
+    "ReplicatedPlacement",
     "contiguous_placement",
     "eplb_placement",
     "vibe_placement",
+    "vibe_r_placement",
     "solve_model_placement",
     "placement_to_permutation",
     "permutation_to_placement",
     "predicted_layer_latency",
+    "predicted_rank_latencies",
     "layer_latency_span",
+    "default_slots_per_rank",
 ]
 
 
 @dataclasses.dataclass(frozen=True)
 class Placement:
-    """Expert→rank assignment for every MoE layer.
+    """Expert→rank assignment for every MoE layer (one copy per expert).
 
     ``assign``: (L, E) int array, assign[l, e] = EP rank of logical expert e.
     ``perm``:   (L, E) int array, perm[l, p] = logical expert held in physical
@@ -80,6 +100,10 @@ class Placement:
         return self.assign.shape[1]
 
     @property
+    def n_slots(self) -> int:
+        return self.assign.shape[1]
+
+    @property
     def experts_per_rank(self) -> int:
         return self.n_experts // self.n_ranks
 
@@ -91,14 +115,99 @@ class Placement:
         """Per-rank token loads (L, G) given per-expert loads w (L, E)."""
         w = np.atleast_2d(np.asarray(w, dtype=np.float64))
         L, E = self.assign.shape
-        out = np.zeros((L, self.n_ranks))
-        for l in range(L):
-            np.add.at(out[l], self.assign[l], w[l])
-        return out
+        G = self.n_ranks
+        flat = (np.arange(L)[:, None] * G + self.assign).ravel()
+        return np.bincount(flat, weights=w.ravel(),
+                           minlength=L * G).reshape(L, G)
 
     def moved_experts(self, other: "Placement") -> int:
         """Number of (layer, expert) pairs whose rank differs vs ``other``."""
         return int(np.sum(self.assign != other.assign))
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicatedPlacement:
+    """(expert, copy)→slot placement with per-copy traffic shares (ViBE-R).
+
+    ``slot_expert``: (L, S) int array — logical expert whose weights occupy
+        physical slot s. Slots are rank-major (rank g owns
+        [g*S_loc, (g+1)*S_loc)); entries *repeat* when an expert is
+        replicated. Every logical expert holds ≥ 1 slot per layer.
+    ``share``: (L, S) float array — fraction of the expert's token traffic
+        dispatched to this copy; sums to 1 over the copies of each
+        (layer, expert). The model layer approximates fractional shares by
+        hashing assignments across copies; the solver's shares are what the
+        latency objective (and the simulator) score.
+    """
+
+    slot_expert: np.ndarray
+    share: np.ndarray
+    n_ranks: int
+    n_experts: int
+
+    def __post_init__(self):
+        se = np.atleast_2d(np.asarray(self.slot_expert, dtype=np.int32))
+        sh = np.atleast_2d(np.asarray(self.share, dtype=np.float64))
+        if se.shape != sh.shape:
+            raise ValueError(f"slot_expert {se.shape} != share {sh.shape}")
+        L, S = se.shape
+        if S % self.n_ranks != 0:
+            raise ValueError(f"S={S} not divisible by n_ranks={self.n_ranks}")
+        if se.min() < 0 or se.max() >= self.n_experts:
+            raise ValueError("slot_expert ids outside [0, n_experts)")
+        counts = _replica_counts(se, self.n_experts)
+        if np.any(counts == 0):
+            raise ValueError("some logical expert has no physical slot")
+        if sh.min() < -1e-12:
+            raise ValueError("negative copy share")
+        sums = np.zeros((L, self.n_experts))
+        np.add.at(sums, (np.arange(L)[:, None], se), sh)
+        if not np.allclose(sums, 1.0, atol=1e-6):
+            raise ValueError("copy shares must sum to 1 per (layer, expert)")
+        object.__setattr__(self, "slot_expert", se)
+        object.__setattr__(self, "share", sh)
+
+    @property
+    def n_layers(self) -> int:
+        return self.slot_expert.shape[0]
+
+    @property
+    def n_slots(self) -> int:
+        return self.slot_expert.shape[1]
+
+    @property
+    def slots_per_rank(self) -> int:
+        return self.n_slots // self.n_ranks
+
+    @property
+    def perm(self) -> np.ndarray:
+        """Slot table consumed by models/moe.py (entries repeat = replicas)."""
+        return self.slot_expert
+
+    def n_copies(self) -> np.ndarray:
+        """(L, E) replica count per logical expert."""
+        return _replica_counts(self.slot_expert, self.n_experts)
+
+    def rank_loads(self, w: np.ndarray) -> np.ndarray:
+        """Per-rank token loads (L, G): expert loads split over copies."""
+        w = np.atleast_2d(np.asarray(w, dtype=np.float64))
+        L, S = self.slot_expert.shape
+        slot_load = np.take_along_axis(w, self.slot_expert, axis=1) * self.share
+        return slot_load.reshape(L, self.n_ranks, self.slots_per_rank).sum(2)
+
+    def moved_experts(self, other: "ReplicatedPlacement") -> int:
+        """(layer, slot) pairs whose resident expert differs vs ``other`` —
+        the weight-migration volume in expert-tensor units."""
+        return int(np.sum(self.slot_expert != other.slot_expert))
+
+
+AnyPlacement = Union[Placement, ReplicatedPlacement]
+
+
+def _replica_counts(slot_expert: np.ndarray, n_experts: int) -> np.ndarray:
+    """(L, S) slot table → (L, E) copies per logical expert."""
+    return np.apply_along_axis(np.bincount, 1, slot_expert,
+                               minlength=n_experts)
 
 
 def placement_to_permutation(assign: np.ndarray, n_ranks: int) -> np.ndarray:
@@ -106,27 +215,22 @@ def placement_to_permutation(assign: np.ndarray, n_ranks: int) -> np.ndarray:
 
     Slots are rank-major; within a rank, logical experts are ordered by id
     (deterministic so repeated solves with equal assignment produce identical
-    physical layouts — minimizes spurious weight movement).
+    physical layouts — minimizes spurious weight movement). Implemented as a
+    single stable argsort per layer: sorting expert ids by rank keeps the
+    ascending-id order within each rank.
     """
     assign = np.atleast_2d(assign)
-    L, E = assign.shape
-    e_loc = E // n_ranks
-    perm = np.empty((L, E), dtype=np.int32)
-    for l in range(L):
-        for g in range(n_ranks):
-            experts = np.flatnonzero(assign[l] == g)
-            perm[l, g * e_loc:(g + 1) * e_loc] = experts
-    return perm
+    return np.argsort(assign, axis=1, kind="stable").astype(np.int32)
 
 
 def permutation_to_placement(perm: np.ndarray, n_ranks: int) -> np.ndarray:
     perm = np.atleast_2d(perm)
     L, E = perm.shape
     e_loc = E // n_ranks
+    rank_of_slot = (np.arange(E, dtype=np.int32) // e_loc)[None, :]
     assign = np.empty((L, E), dtype=np.int32)
-    for l in range(L):
-        for p in range(E):
-            assign[l, perm[l, p]] = p // e_loc
+    np.put_along_axis(assign, perm, np.broadcast_to(rank_of_slot, (L, E)),
+                      axis=1)
     return assign
 
 
@@ -149,7 +253,9 @@ def _greedy_target_assign(
     """Paper Alg 1 Phase 2 inner loop with the uniform-slot constraint.
 
     Experts in descending load order go to argmax_g (τ_g − n_g) among ranks
-    with free slots.
+    with free slots. Per-layer reference implementation — production solves
+    go through :func:`_greedy_target_assign_vec`; an equivalence test pins
+    the two to identical output.
     """
     E = w_layer.size
     e_loc = E // n_ranks
@@ -167,6 +273,39 @@ def _greedy_target_assign(
     return assign
 
 
+def _greedy_target_assign_vec(
+    w: np.ndarray,                 # (L, E) per-expert token loads
+    targets: np.ndarray,           # (L, G) token targets τ_{l,g}
+) -> np.ndarray:
+    """Vectorized greedy fill: all layers advance one item per iteration.
+
+    The Python loop runs over the E item *positions* (descending-load order
+    within each layer); each iteration is O(L·G) numpy work, so DeepSeek
+    scale (L=58, E=256, G=64) completes in milliseconds instead of the
+    seconds the per-layer double loop needs. Produces exactly the per-layer
+    reference's output (same float ops in the same order, same argmax
+    tie-breaking).
+    """
+    w = np.asarray(w, dtype=np.float64)
+    L, E = w.shape
+    G = targets.shape[1]
+    e_loc = E // G
+    order = np.argsort(-w, axis=1, kind="stable")                # (L, E)
+    rows = np.arange(L)
+    load = np.zeros((L, G))
+    slots = np.full((L, G), e_loc, dtype=np.int64)
+    assign = np.empty((L, E), dtype=np.int32)
+    for i in range(E):
+        item = order[:, i]                                       # (L,)
+        gap = targets - load
+        gap[slots == 0] = -np.inf
+        g = np.argmax(gap, axis=1)                               # (L,)
+        assign[rows, item] = g
+        load[rows, g] += w[rows, item]
+        slots[rows, g] -= 1
+    return assign
+
+
 def eplb_placement(
     w: np.ndarray,                 # (L, E) activation matrix
     n_ranks: int,
@@ -174,12 +313,26 @@ def eplb_placement(
     """EPLB: equalize token counts. τ_g = N/G for all g (f_g(n)=n)."""
     w = np.atleast_2d(np.asarray(w, dtype=np.float64))
     L, E = w.shape
-    assign = np.empty((L, E), dtype=np.int32)
-    for l in range(L):
-        N = w[l].sum()
-        targets = np.full(n_ranks, N / n_ranks)
-        assign[l] = _greedy_target_assign(w[l], targets, n_ranks)
-    return Placement(assign, n_ranks)
+    targets = np.repeat(w.sum(axis=1, keepdims=True) / n_ranks, n_ranks,
+                        axis=1)
+    return Placement(_greedy_target_assign_vec(w, targets), n_ranks)
+
+
+def _speed_targets(
+    w: np.ndarray,                 # (L, E)
+    perf_models: Sequence[PerfModel],
+    n_ref_mode: str,
+) -> tuple:
+    """Per-layer speeds s_{l,g} and token targets τ_{l,g} → ((L,G), (L,G))."""
+    L, E = w.shape
+    G = len(perf_models)
+    N = w.sum(axis=1)                                            # (L,)
+    n_ref = np.maximum(N / (G if n_ref_mode == "rank" else E), 1.0)
+    s = np.empty((L, G))
+    for g, m in enumerate(perf_models):
+        s[:, g] = 1.0 / np.asarray(m(n_ref), dtype=np.float64)
+    targets = N[:, None] * s / s.sum(axis=1, keepdims=True)
+    return s, targets
 
 
 def vibe_placement(
@@ -201,16 +354,129 @@ def vibe_placement(
       look identical, degenerating to EPLB (see DESIGN.md §3 fidelity note).
     """
     w = np.atleast_2d(np.asarray(w, dtype=np.float64))
+    _, targets = _speed_targets(w, perf_models, n_ref_mode)
+    return Placement(_greedy_target_assign_vec(w, targets),
+                     len(perf_models))
+
+
+# ---------------------------------------------------------------------------
+# ViBE-R: replication-aware placement
+# ---------------------------------------------------------------------------
+
+def default_slots_per_rank(n_experts: int, n_ranks: int) -> int:
+    """Default ViBE-R slot budget: the singleton footprint rounded up, plus
+    one spare slot per rank when E divides G evenly (otherwise the phantom
+    padding slots already provide replication headroom)."""
+    base = -(-n_experts // n_ranks)                  # ceil(E/G)
+    return base + (1 if base * n_ranks == n_experts else 0)
+
+
+def _replication_degrees(
+    w: np.ndarray,                 # (L, E)
+    n_extra: int,                  # copies beyond one-per-expert
+    max_copies: int,
+) -> np.ndarray:
+    """Greedy hot-expert splitting, vectorized across layers.
+
+    Start from one copy each; repeatedly grant a copy to the expert with the
+    largest *per-copy* load w_e / c_e (the straggler bound a replica buys
+    down the most). ``n_extra`` iterations of O(L·E) work.
+    """
+    L, E = w.shape
+    rows = np.arange(L)
+    copies = np.ones((L, E), dtype=np.int64)
+    q = w.astype(np.float64).copy()                  # per-copy load
+    for _ in range(n_extra):
+        q_masked = np.where(copies >= max_copies, -np.inf, q)
+        e_star = np.argmax(q_masked, axis=1)
+        copies[rows, e_star] += 1
+        q[rows, e_star] = w[rows, e_star] / copies[rows, e_star]
+    return copies
+
+
+def vibe_r_placement(
+    w: np.ndarray,                 # (L, E) activation matrix
+    perf_models: Sequence[PerfModel],
+    slots_per_rank: Optional[int] = None,
+    n_ref_mode: str = "rank",
+) -> ReplicatedPlacement:
+    """ViBE-R: co-optimize replication degree with per-device speed.
+
+    Three phases, all vectorized across layers:
+
+    1. **Replicate** — under the slot budget S = slots_per_rank × G, grant
+       the S − E spare slots to the hottest experts (largest per-copy load
+       first), capped at one copy per rank.
+    2. **Place** — greedy speed-target fill over the (expert, copy) items in
+       descending per-copy load order, to the rank farthest below its ViBE
+       token target τ_g; a copy avoids ranks already holding a copy of the
+       same expert (a colocated replica absorbs no skew).
+    3. **Share** — split each expert's traffic over its copies
+       proportionally to the *speed* of the rank each copy landed on, so
+       the share lands where f_g is fastest.
+    """
+    w = np.atleast_2d(np.asarray(w, dtype=np.float64))
     L, E = w.shape
     G = len(perf_models)
-    assign = np.empty((L, E), dtype=np.int32)
-    for l in range(L):
-        N = float(w[l].sum())
-        n_ref = max(N / (G if n_ref_mode == "rank" else E), 1.0)
-        s = np.array([m.speed(n_ref) for m in perf_models])
-        targets = N * s / s.sum()
-        assign[l] = _greedy_target_assign(w[l], targets, n_ranks=G)
-    return Placement(assign, G)
+    s_loc = (default_slots_per_rank(E, G) if slots_per_rank is None
+             else int(slots_per_rank))
+    S = s_loc * G
+    if S < E:
+        raise ValueError(
+            f"slot budget {S} (= {s_loc}×{G}) cannot hold {E} experts")
+    if s_loc > E:
+        raise ValueError(f"slots_per_rank={s_loc} > E={E}: every rank would "
+                         "hold the full expert set")
+    rows = np.arange(L)
+    speeds, targets = _speed_targets(w, perf_models, n_ref_mode)
+
+    # Phase 1: replication degrees (S − E spare copies, ≤ G copies each)
+    copies = _replication_degrees(w, S - E, max_copies=G)
+
+    # Expand to per-copy items: ce (L, S) expert id, cl (L, S) per-copy load
+    # (uniform split at placement time; phase 3 reweights by speed).
+    cum = np.cumsum(copies, axis=1)                              # (L, E)
+    ce = (np.arange(S)[None, :, None] >= cum[:, None, :]).sum(2) \
+        .astype(np.int32)                                        # (L, S)
+    cl = np.take_along_axis(w, ce, axis=1) \
+        / np.take_along_axis(copies, ce, axis=1)
+
+    # Phase 2: vectorized greedy fill over copies (descending per-copy load)
+    order = np.argsort(-cl, axis=1, kind="stable")
+    load = np.zeros((L, G))
+    slots_free = np.full((L, G), s_loc, dtype=np.int64)
+    on_rank = np.zeros((L, G, E), dtype=bool)
+    copy_rank = np.empty((L, S), dtype=np.int32)
+    for i in range(S):
+        item = order[:, i]                                       # (L,)
+        e_item = ce[rows, item]                                  # (L,)
+        gap = targets - load
+        invalid = (slots_free == 0) | on_rank[rows, :, e_item]
+        # rows where the dedup constraint is unsatisfiable fall back to the
+        # slot constraint alone (can only happen when copies ≥ free ranks)
+        stuck = invalid.all(axis=1)
+        if stuck.any():
+            invalid[stuck] = (slots_free[stuck] == 0)
+        gap[invalid] = -np.inf
+        g = np.argmax(gap, axis=1)                               # (L,)
+        copy_rank[rows, item] = g
+        load[rows, g] += cl[rows, item]
+        slots_free[rows, g] -= 1
+        on_rank[rows, g, e_item] = True
+
+    # Phase 3: speed-proportional copy shares
+    sp = speeds[rows[:, None], copy_rank]                        # (L, S)
+    denom = np.zeros((L, E))
+    np.add.at(denom, (rows[:, None], ce), sp)
+    share = sp / np.take_along_axis(denom, ce, axis=1)
+
+    # Lay out rank-major slots, copies ordered by expert id within a rank
+    key = copy_rank.astype(np.int64) * (E + 1) + ce
+    lay = np.argsort(key, axis=1, kind="stable")
+    return ReplicatedPlacement(
+        slot_expert=np.take_along_axis(ce, lay, axis=1),
+        share=np.take_along_axis(share, lay, axis=1),
+        n_ranks=G, n_experts=E)
 
 
 def solve_model_placement(
@@ -218,19 +484,28 @@ def solve_model_placement(
     w: np.ndarray,
     n_ranks: int,
     perf_models: Optional[Sequence[PerfModel]] = None,
-) -> Placement:
-    """Uniform entry point used by the serving engine and benchmarks."""
+    slots_per_rank: Optional[int] = None,
+) -> AnyPlacement:
+    """Uniform entry point used by the serving engine and benchmarks.
+
+    ``slots_per_rank`` only applies to the ``"vibe_r"`` policy: the physical
+    slot budget per rank (≥ ceil(E/G); the excess becomes hot-expert
+    replicas). Other policies keep the paper's uniform one-slot-per-expert
+    memory footprint.
+    """
     w = np.atleast_2d(w)
     if policy == "contiguous":
         return contiguous_placement(w.shape[0], w.shape[1], n_ranks)
     if policy == "eplb":
         return eplb_placement(w, n_ranks)
-    if policy == "vibe":
+    if policy in ("vibe", "vibe_r"):
         if perf_models is None:
-            raise ValueError("vibe placement requires perf_models")
+            raise ValueError(f"{policy} placement requires perf_models")
         if len(perf_models) != n_ranks:
             raise ValueError("need one perf model per rank")
-        return vibe_placement(w, perf_models)
+        if policy == "vibe":
+            return vibe_placement(w, perf_models)
+        return vibe_r_placement(w, perf_models, slots_per_rank=slots_per_rank)
     raise ValueError(f"unknown policy {policy!r}")
 
 
@@ -250,15 +525,24 @@ def predicted_layer_latency(
     return np.array([perf_models[g](load[g]) for g in range(G)])
 
 
+def predicted_rank_latencies(
+    placement: AnyPlacement,
+    w: np.ndarray,                 # (L, E)
+    perf_models: Sequence[PerfModel],
+) -> np.ndarray:
+    """Predicted f_g(n_{l,g}) → (L, G); replica-aware via ``rank_loads``."""
+    load = placement.rank_loads(np.atleast_2d(w))
+    lat = np.empty_like(load)
+    for g, m in enumerate(perf_models):
+        lat[:, g] = m(load[:, g])
+    return lat
+
+
 def layer_latency_span(
-    placement: Placement,
+    placement: AnyPlacement,
     w: np.ndarray,
     perf_models: Sequence[PerfModel],
 ) -> np.ndarray:
     """Per-layer (T_max, T_mean, T_min) → (L, 3). T = max is layer latency."""
-    w = np.atleast_2d(w)
-    out = np.empty((placement.n_layers, 3))
-    for l in range(placement.n_layers):
-        lat = predicted_layer_latency(placement.assign[l], w[l], perf_models)
-        out[l] = (lat.max(), lat.mean(), lat.min())
-    return out
+    lat = predicted_rank_latencies(placement, w, perf_models)
+    return np.stack([lat.max(1), lat.mean(1), lat.min(1)], axis=1)

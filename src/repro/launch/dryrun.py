@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs import ALL_ARCHS, EXTRA_ARCHS, SHAPES, get, shape_applicable
 from repro.models import (ShardingRules, decode_fn, init_params, loss_fn,
                           make_moe_tables, prefill_fn)
@@ -149,7 +150,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     try:
         mesh = make_production_mesh(multi_pod=multi_pod)
         spec = input_specs(arch, shape_name, mesh)
-        with jax.set_mesh(mesh):
+        with compat.use_mesh(mesh):
             lowered = _build_lowered(spec, mesh)
             t1 = time.time()
             compiled = lowered.compile()
@@ -173,7 +174,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         except Exception as e:                      # pragma: no cover
             rec["memory_error"] = str(e)
         try:
-            ca = compiled.cost_analysis()
+            ca = compat.cost_analysis_dict(compiled)
             rec["xla_cost"] = {k: float(ca[k]) for k in
                                ("flops", "bytes accessed") if k in ca}
         except Exception as e:                      # pragma: no cover

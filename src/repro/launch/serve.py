@@ -38,6 +38,9 @@ def serve(arch: str, *, policy: str = "vibe", n_requests: int = 12,
                            experts_per_rank=max(n_slots // ranks, 1),
                            seed=seed)
     perf = cluster.fit_models()                    # Phase 1: profiling
+    # vibe_r uses the solver's default slot budget (singleton footprint
+    # plus one spare replica slot per rank — default_slots_per_rank); the
+    # engine reads the resulting budget off the controller's placement.
     controller = ViBEController(
         n_moe, n_slots, ranks, perf,
         ViBEConfig(policy=policy, adaptive=adaptive,
@@ -58,7 +61,7 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-moe-235b-a22b")
     ap.add_argument("--policy", default="vibe",
-                    choices=["vibe", "eplb", "contiguous"])
+                    choices=["vibe", "vibe_r", "eplb", "contiguous"])
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--workload", default="sharegpt")
     ap.add_argument("--regime", default="mi325x")

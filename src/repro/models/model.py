@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ArchConfig
 from .attention import attn_init
 from .common import apply_rope, dense_init, mlp, mlp_init, rms_norm, \
@@ -187,11 +188,15 @@ def count_params(params) -> int:
 
 def make_moe_tables(cfg: ArchConfig, rules: Optional[ShardingRules],
                     perm: Optional[np.ndarray] = None,
-                    phase: str = "train"):
+                    phase: str = "train",
+                    n_slots: Optional[int] = None):
     """Build the (slots_of, n_copies) scan inputs from a slot permutation.
 
     ``perm``: (n_moe_layers, n_slots) — logical expert per physical slot
-    (from a ViBE/EPLB/contiguous Placement); None = contiguous default.
+    (from a ViBE/EPLB/contiguous/ViBE-R placement; repeated entries are
+    replicas); None = contiguous default. ``n_slots`` overrides the
+    arch-derived slot count when the caller runs an expanded ViBE-R slot
+    budget (extra replica slots beyond one-per-expert).
     Returns arrays shaped (n_blocks, moe_per_block, E, r) / (…, E), or None
     for non-MoE archs.
     """
@@ -199,7 +204,8 @@ def make_moe_tables(cfg: ArchConfig, rules: Optional[ShardingRules],
         return None
     nb, specs = block_layout(cfg)
     m = sum(1 for s in specs if s.ffn == "moe")
-    n_moe, n_slots = moe_perm_shape(cfg, rules, phase)
+    n_moe, default_slots = moe_perm_shape(cfg, rules, phase)
+    n_slots = default_slots if n_slots is None else int(n_slots)
     if perm is None:
         if rules is not None and rules.mesh is not None and phase == "decode":
             fleet = (rules.ep_size if rules.decode_expert_tp
@@ -268,11 +274,11 @@ def _run_attention(p, x, cfg, rules, window, positions, cache=None,
                                        window=win, q_positions=qpos,
                                        kv_positions=kpos)
 
-            out = jax.shard_map(
+            out = compat.shard_map(
                 body, mesh=rules.mesh,
                 in_specs=(qspec, kvspec, kvspec, rules.spec(rules.tp),
                           P(), P()),
-                out_specs=qspec, check_vma=False,
+                out_specs=qspec,
             )(q, k, v, positions, positions, win)
         else:
             if rules is not None:
@@ -329,11 +335,11 @@ def _run_attention(p, x, cfg, rules, window, positions, cache=None,
             out = (num / jnp.maximum(den, 1e-30)[..., None]).astype(q.dtype)
             return out, kc, vc
 
-        out, k_cache, v_cache = jax.shard_map(
+        out, k_cache, v_cache = compat.shard_map(
             body, mesh=rules.mesh,
             in_specs=(qspec, qspec, qspec, cspec, cspec,
                       rules.spec(b_ax)),
-            out_specs=(qspec, cspec, cspec), check_vma=False,
+            out_specs=(qspec, cspec, cspec),
         )(q, k, v, k_cache, v_cache, pos)
     else:
         k_cache = k_cache.at[jnp.arange(B), pos].set(k[:, 0])

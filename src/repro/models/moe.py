@@ -42,6 +42,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from .common import dense_init
 from .sharding import ShardingRules, build_slots_of
 
@@ -176,18 +178,16 @@ def _aux_loss(tally, mean_prob, n_experts):
 # ---------------------------------------------------------------------------
 
 def _a2a_body(xb, router_w, w1, w3, w2, slots_of, n_copies, *,
-              top_k, n_experts, n_slots, capacity, ep_axes, dp_axes,
+              top_k, n_experts, n_slots, capacity, ep, ep_axes, dp_axes,
               fsdp_axes, ffn):
     """Per-device block of the a2a EP MoE layer.
 
     xb: (B_loc, S_loc, D). Expert weights arrive sharded (E_loc, D/f, F)
     with axis 1 FSDP-sharded; gathered here (ZeRO-3, transposes to
-    reduce-scatter in the backward).
+    reduce-scatter in the backward). ``ep`` is the static EP group size
+    (mesh shape is known at trace time; old JAX has no lax.axis_size).
     """
     Bl, Sl, D = xb.shape
-    ep = 1
-    for a in ep_axes:
-        ep *= jax.lax.axis_size(a)
     e_loc = n_slots // ep
     if fsdp_axes:
         w1 = jax.lax.all_gather(w1, fsdp_axes, axis=1, tiled=True)
@@ -235,19 +235,20 @@ def _a2a_body(xb, router_w, w1, w3, w2, slots_of, n_copies, *,
 # ---------------------------------------------------------------------------
 
 def _replicated_body(xb, router_w, w1, w3, w2, slots_of, n_copies, *,
-                     top_k, n_experts, n_slots, capacity, ep_axes, ffn,
-                     psum_axes=None):
+                     top_k, n_experts, n_slots, capacity, ep_axes, ep_sizes,
+                     ffn, psum_axes=None):
     """Tokens replicated fleet-wide; each device computes its slots only.
 
     With expert-TP (big experts) the local w1/w3 carry an F-slice and w2 the
     matching rows: y is a partial sum over F, folded in by the wider psum.
+    ``ep_sizes`` are the static mesh sizes of ``ep_axes`` (same order).
     """
     B, S, D = xb.shape
     e_loc = w1.shape[0]
     psum_axes = psum_axes or ep_axes
     my_rank = jnp.int32(0)
-    for a in ep_axes:
-        my_rank = my_rank * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    for a, sz in zip(ep_axes, ep_sizes):
+        my_rank = my_rank * sz + jax.lax.axis_index(a)
 
     xf = xb.reshape(B * S, D)
     t = xf.shape[0]
@@ -334,11 +335,11 @@ def moe_layer(
         x = rules.constrain(x, rules.dp, rules.ep[0] if len(rules.ep) == 1 else rules.ep, None)
         body = functools.partial(
             _a2a_body, top_k=top_k, n_experts=n_experts, n_slots=n_slots,
-            capacity=capacity, ep_axes=ep_axes, dp_axes=dp_axes,
+            capacity=capacity, ep=ep, ep_axes=ep_axes, dp_axes=dp_axes,
             fsdp_axes=fsdp_axes, ffn=ffn)
         ep_spec = ep_axes[0] if len(ep_axes) == 1 else ep_axes
         w_spec = P(ep_spec, fsdp_axes if fsdp_axes else None, None)
-        out, tally, aux = jax.shard_map(
+        out, tally, aux = compat.shard_map(
             body, mesh=mesh,
             in_specs=(P(dp_axes if dp_axes else None, ep_spec, None),
                       P(None, None), w_spec, w_spec,
@@ -346,7 +347,6 @@ def moe_layer(
                       P(None, None), P(None)),
             out_specs=(P(dp_axes if dp_axes else None, ep_spec, None),
                        P(None), P()),
-            check_vma=False,
         )(x, p["router"], p["w1"], p["w3"], p["w2"], slots_of, n_copies)
         return out, tally, aux
 
@@ -368,15 +368,15 @@ def moe_layer(
                 (ftp_axes[0] if ftp_axes else None))
     body = functools.partial(
         _replicated_body, top_k=top_k, n_experts=n_experts, n_slots=n_slots,
-        capacity=capacity, ep_axes=ep_axes, ffn=ffn,
+        capacity=capacity, ep_axes=ep_axes,
+        ep_sizes=tuple(rules.axis_size(a) for a in ep_axes), ffn=ffn,
         psum_axes=ep_axes + ftp_axes)
-    out, tally, aux = jax.shard_map(
+    out, tally, aux = compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(None, None, None), P(None, None),
                   P(ep_spec, None, ftp_spec), P(ep_spec, None, ftp_spec),
                   P(ep_spec, ftp_spec, None), P(None, None), P(None)),
         out_specs=(P(None, None, None), P(None), P()),
-        check_vma=False,
     )(x, p["router"], p["w1"], p["w3"], p["w2"], slots_of, n_copies)
     return out, tally, aux
 

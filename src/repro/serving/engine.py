@@ -70,10 +70,19 @@ class Engine:
                                     if cfg.is_moe else (0, 0))
         self._perm = (np.tile(np.arange(self.n_slots, dtype=np.int32),
                               (self.n_moe, 1)) if cfg.is_moe else None)
+        if cfg.is_moe and controller is not None:
+            # ViBE-R: when the controller's placement uses a slot budget
+            # beyond one-per-expert (replicated copies), grow the stacked
+            # expert tensors to match. The budget is read off the placement
+            # itself, so engine and controller cannot disagree.
+            want = controller.placement.perm.shape[1]
+            if want > self.n_slots:
+                self._expand_slots(want)
         if controller is not None:
             self._apply_perm(self._controller_perm(), charge=False)
         self.moe_tables = make_moe_tables(
-            cfg, rules, perm=self._perm) if cfg.is_moe else None
+            cfg, rules, perm=self._perm,
+            n_slots=self.n_slots) if cfg.is_moe else None
         self._prefill = jax.jit(prefill_fn(cfg, rules))
         self._decode = jax.jit(decode_fn(cfg, rules))
         # slot state
@@ -86,6 +95,34 @@ class Engine:
         self.waiting: collections.deque = collections.deque()
 
     # -- placement plumbing -------------------------------------------------
+
+    def _expand_slots(self, n_slots: int) -> None:
+        """Grow stacked expert tensors to ``n_slots`` physical slots.
+
+        New slot p starts holding logical expert p % E (round-robin replica),
+        gathered from the identity layout — the slot-table application path
+        (``apply_placement`` + ``make_moe_tables``) then works unchanged for
+        replicated placements.
+        """
+        if n_slots < self.n_slots:
+            raise ValueError(f"cannot shrink slots {self.n_slots}→{n_slots}")
+        if n_slots == self.n_slots:
+            return
+        E = self.cfg.n_experts
+        src = np.concatenate([np.arange(self.n_slots, dtype=np.int32),
+                              np.arange(self.n_slots, n_slots,
+                                        dtype=np.int32) % E])
+        gi = jnp.asarray(src)
+        _, specs = block_layout(self.cfg)
+        for i, spec in enumerate(specs):
+            if spec.ffn != "moe":
+                continue
+            leaf = self.params["blocks"][i]["ffn"]
+            grown = {k: jnp.take(leaf[k], gi, axis=1)
+                     for k in ("w1", "w2", "w3") if k in leaf}
+            self.params["blocks"][i]["ffn"] = {**leaf, **grown}
+        self._perm = np.tile(src, (self.n_moe, 1))
+        self.n_slots = n_slots
 
     def _controller_perm(self) -> np.ndarray:
         pl = self.controller.placement
@@ -100,8 +137,6 @@ class Engine:
         nb, specs = block_layout(self.cfg)
         m = self.n_moe // nb
         moved_total = 0
-        for j, spec in enumerate(s for s in specs if s.ffn == "moe"):
-            pass
         moe_positions = [i for i, s in enumerate(specs) if s.ffn == "moe"]
         for jj, i in enumerate(moe_positions):
             old_j = self._perm[jj::m] if m else self._perm
@@ -112,7 +147,8 @@ class Engine:
             moved_total += moved
         self._perm = new_perm.copy()
         self.moe_tables = make_moe_tables(self.cfg, self.rules,
-                                          perm=self._perm)
+                                          perm=self._perm,
+                                          n_slots=self.n_slots)
         if charge:
             per_slot = 3 * self.cfg.d_model * self.cfg.moe_d_ff * 2
             self.stats.migrations += 1
@@ -123,12 +159,21 @@ class Engine:
     def _observe(self, tallies: np.ndarray, tokens: float) -> None:
         if self.controller is None:
             return
-        t = np.asarray(tallies, dtype=np.float64)
-        if t.shape[1] < self.n_slots:                   # phantom padding
-            t = np.pad(t, ((0, 0), (0, self.n_slots - t.shape[1])))
+        t = self._controller_tallies(tallies)
         upd = self.controller.observe(t, tokens=tokens)
         if upd is not None:
             self._apply_perm(self._controller_perm())
+
+    def _controller_tallies(self, tallies: np.ndarray) -> np.ndarray:
+        """Pad router tallies (logical experts) to the controller's width.
+
+        Singleton controllers treat every physical slot as an expert
+        (phantoms see zero load); a ViBE-R controller works on logical
+        experts directly, so its width can be below the slot count."""
+        t = np.asarray(tallies, dtype=np.float64)
+        if t.shape[1] < self.controller.E:
+            t = np.pad(t, ((0, 0), (0, self.controller.E - t.shape[1])))
+        return t
 
     # -- virtual clock -------------------------------------------------------
 
@@ -139,9 +184,7 @@ class Engine:
             dt = 1e-3 * max(tokens, 1)                  # trivial fallback
         else:
             pl = self.controller.placement
-            t = np.asarray(tallies, dtype=np.float64)
-            if t.shape[1] < self.n_slots:
-                t = np.pad(t, ((0, 0), (0, self.n_slots - t.shape[1])))
+            t = self._controller_tallies(tallies)
             rank_load = pl.rank_loads(t)
             dt = float(rank_latency_matrix(self.cluster, rank_load).max(1).sum())
         self.stats.virtual_time += dt

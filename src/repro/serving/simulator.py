@@ -45,6 +45,10 @@ def rank_latency_matrix(cluster: ClusterVariability, n_lg: np.ndarray,
     """(L, G) per-rank token loads → (L, G) ground-truth MoE kernel seconds.
 
     Vectorized version of ``ClusterVariability.latency`` (same formula).
+    The per-rank loads already reflect replica-aware splitting when they
+    come from ``ReplicatedPlacement.rank_loads`` (each expert's tokens are
+    divided over its copies by the solver's traffic shares), so latency
+    projection is placement-representation-agnostic.
     """
     n = np.maximum(np.asarray(n_lg, dtype=np.float64), 0.0)
     stress = np.clip(n / cluster.n_tdp, 0.0, 1.0) ** cluster.stress_gamma
@@ -187,6 +191,9 @@ class EPSimulator:
         if loads is None:
             loads = self._draw_loads(tokens)
         pl = self.placement
+        # replica-aware dispatch: ReplicatedPlacement splits each expert's
+        # tokens over its copies (speed-proportional shares); singleton
+        # placements map expert→rank one-to-one. Same call either way.
         rank_load = pl.rank_loads(loads)                         # (L, G)
         rank_time = rank_latency_matrix(self.cluster, rank_load, self.rng)
         layer_t = rank_time.max(axis=1)

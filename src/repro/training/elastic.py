@@ -23,7 +23,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import PerfModel, Placement, vibe_placement, eplb_placement
+from repro.core import PerfModel, Placement, solve_model_placement
+from repro.core.placement import AnyPlacement
 
 __all__ = ["StragglerDetector", "replan_after_loss", "elastic_targets"]
 
@@ -63,8 +64,9 @@ def replan_after_loss(
     perf_models: Sequence[PerfModel],   # original G models
     lost_ranks: Sequence[int],
     policy: str = "vibe",
-) -> Tuple[Placement, np.ndarray]:
-    """Re-solve placement over surviving ranks.
+) -> Tuple[AnyPlacement, np.ndarray]:
+    """Re-solve placement over surviving ranks (any registered policy;
+    vibe_r yields a ReplicatedPlacement over the survivors).
 
     Returns (placement over G' survivors, rank_map (G',) giving each new
     rank index its original physical rank id — the launcher uses it to
@@ -75,10 +77,9 @@ def replan_after_loss(
     if not survivors:
         raise ValueError("no surviving ranks")
     models = [perf_models[g] for g in survivors]
-    if policy == "vibe":
-        pl = vibe_placement(w, models)
-    else:
-        pl = eplb_placement(w, len(survivors))
+    pl = solve_model_placement(
+        policy, w, len(survivors),
+        perf_models=models if policy in ("vibe", "vibe_r") else None)
     return pl, np.asarray(survivors, dtype=np.int32)
 
 

@@ -1,0 +1,131 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The test suite's property tests use a small slice of the hypothesis API:
+``@settings(max_examples=N, deadline=None)`` stacked on ``@given(**kwargs)``
+with ``st.integers`` / ``st.sampled_from`` style strategies. Some dev
+containers cannot install hypothesis (no network); rather than losing the
+property tests there, ``conftest.py`` registers this module under the
+``hypothesis`` / ``hypothesis.strategies`` names when the real import
+fails. CI installs real hypothesis and never sees this file.
+
+The fallback runs each property ``max_examples`` times with values drawn
+from a per-test seeded numpy generator — deterministic across runs, so a
+failure is reproducible, but with no shrinking or example database.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies", "HealthCheck"]
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    """A draw(rng) callable; covers the strategy surface the suite uses."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred, _tries: int = 1000):
+        def draw(rng):
+            for _ in range(_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+        return _Strategy(draw)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value=0, max_value=2 ** 31 - 1):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(
+            lambda rng: elements[int(rng.integers(len(elements)))])
+
+    @staticmethod
+    def lists(elem, min_size=0, max_size=10):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elem.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*elems):
+        return _Strategy(lambda rng: tuple(e.example(rng) for e in elems))
+
+
+strategies = _Strategies()
+
+
+class HealthCheck:
+    """Placeholder so ``suppress_health_check=[...]`` settings parse."""
+    too_slow = data_too_large = filter_too_much = all = None
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_kw):
+    """Decorator recording ``max_examples``; other knobs are no-ops here."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategy_kwargs):
+    """Run the test ``max_examples`` times with deterministic draws.
+
+    Keyword-only, matching the suite's usage; works on plain functions and
+    methods (positional args — e.g. ``self`` — pass through untouched).
+    """
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for i in range(n):
+                drawn = {k: s.example(rng)
+                         for k, s in strategy_kwargs.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"property falsified on example {i + 1}/{n}: "
+                        f"{drawn!r}") from e
+
+        # hide the drawn parameters from pytest's fixture resolution (real
+        # hypothesis does the same); keep `self` so method collection works
+        params = [p for p in inspect.signature(fn).parameters.values()
+                  if p.name not in strategy_kwargs]
+        wrapper.__signature__ = inspect.Signature(params)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

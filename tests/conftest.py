@@ -3,3 +3,23 @@ import sys
 
 # tests run with PYTHONPATH=src; make that robust when invoked otherwise
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Property tests prefer real hypothesis (installed in CI); containers
+# without it get the deterministic fallback so the tests still collect
+# and run (see tests/_hypothesis_fallback.py).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_fallback
+
+    sys.modules["hypothesis"] = _hypothesis_fallback
+    sys.modules["hypothesis.strategies"] = _hypothesis_fallback.strategies
+
+
+def pytest_configure(config):
+    # registered in pyproject.toml as well; kept here so ad-hoc invocations
+    # (pytest path/to/test.py from any cwd) never warn on unknown marks
+    config.addinivalue_line(
+        "markers", "slow: heavy multi-process/e2e tests (skipped on the CI "
+        "fast lane via -m 'not slow')")

@@ -19,11 +19,12 @@ import sys
 sys.path.insert(0, os.environ['REPRO_SRC'])
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.models.sharding import ShardingRules, build_slots_of
 from repro.models import moe as MOE
 
-mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+set_mesh = compat.use_mesh
+mesh = compat.make_mesh((2, 4), ('data', 'model'))
 E, D, F, K = 16, 64, 128, 4
 p = MOE.moe_init(jax.random.PRNGKey(0), d=D, f=F, n_experts=E, n_slots=E)
 B, S = 4, 8
@@ -42,7 +43,7 @@ def check(tag, y, tally, tol=1e-6):
 # 1. a2a dispatch == dense oracle
 rules = ShardingRules(mesh=mesh, dp=('data',), ep=('model',), fsdp=None,
                       capacity_factor=8.0)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     y, t, _ = jax.jit(lambda p, x: MOE.moe_layer(
         p, x, top_k=K, n_experts=E, rules=rules, phase='train'))(p, x)
 check('a2a', y, t)
@@ -50,7 +51,7 @@ check('a2a', y, t)
 # 2. a2a + FSDP weight sharding
 rules_f = ShardingRules(mesh=mesh, dp=('data',), ep=('model',), fsdp='data',
                         capacity_factor=8.0)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     y, t, _ = jax.jit(lambda p, x: MOE.moe_layer(
         p, x, top_k=K, n_experts=E, rules=rules_f, phase='train'))(p, x)
 check('a2a+fsdp', y, t)
@@ -59,7 +60,7 @@ check('a2a+fsdp', y, t)
 rules_r = ShardingRules(mesh=mesh, dp=('data',), ep=('model',),
                         ep_all=('data', 'model'), fsdp=None,
                         moe_dispatch='replicated', capacity_factor=8.0)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     y, t, _ = jax.jit(lambda p, x: MOE.moe_layer(
         p, x, top_k=K, n_experts=E, rules=rules_r, phase='decode'))(p, x)
 check('replicated', y, t)
@@ -69,7 +70,7 @@ rules_tp = ShardingRules(mesh=mesh, dp=('data',), ep=('model',),
                          ep_all=('data', 'model'), fsdp=None,
                          moe_dispatch='replicated', capacity_factor=8.0,
                          decode_expert_tp=True)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     y, t, _ = jax.jit(lambda p, x: MOE.moe_layer(
         p, x, top_k=K, n_experts=E, rules=rules_tp, phase='decode'))(p, x)
 check('expert-tp', y, t, tol=2e-2)   # different reduction order (bf16)
@@ -79,7 +80,7 @@ def loss(p, x):
     y, t, a = MOE.moe_layer(p, x, top_k=K, n_experts=E, rules=rules_f,
                             phase='train')
     return (y.astype(jnp.float32) ** 2).mean() + 0.01 * a
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     g = jax.jit(jax.grad(loss))(p, x)
 for k, v in g.items():
     n = float(jnp.linalg.norm(v.astype(jnp.float32)))
@@ -94,7 +95,7 @@ migrated, moved = MOE.apply_placement(
     np.arange(E)[None], perm)
 p2 = dict(p, **{k: migrated[k][0] for k in ('w1', 'w2', 'w3')})
 slots_of, n_copies = build_slots_of(perm, E, E)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     y, t, _ = jax.jit(lambda p2, x: MOE.moe_layer(
         p2, x, top_k=K, n_experts=E, rules=rules,
         slots_of=jnp.asarray(slots_of[0]), n_copies=jnp.asarray(n_copies[0]),
@@ -112,7 +113,7 @@ so3, nc3 = build_slots_of(perm3, E2, ns)
 y_ref3, t_ref3, _ = MOE.moe_layer(p3, x, top_k=2, n_experts=E2, rules=None,
                                   slots_of=jnp.asarray(so3[0]),
                                   n_copies=jnp.asarray(nc3[0]))
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     y3, t3, _ = jax.jit(lambda p3, x: MOE.moe_layer(
         p3, x, top_k=2, n_experts=E2, rules=rules,
         slots_of=jnp.asarray(so3[0]), n_copies=jnp.asarray(nc3[0]),

@@ -78,6 +78,7 @@ def test_router_weights_normalized():
     np.testing.assert_allclose(np.asarray(w).sum(-1), 1.0, rtol=1e-5)
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(seed=st.integers(0, 10_000))
 def test_property_moe_ffn_matches_oracle(seed):

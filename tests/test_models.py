@@ -41,7 +41,10 @@ def _smoke_batch(cfg, B=2, S=16, seed=0):
                                   jnp.int32)}
 
 
-@pytest.mark.parametrize("arch", ALL_ARCHS + EXTRA_ARCHS)
+@pytest.mark.parametrize(
+    "arch", [pytest.param(a, marks=pytest.mark.slow)
+             if a == "jamba-1.5-large-398b" else a
+             for a in ALL_ARCHS + EXTRA_ARCHS])
 def test_arch_smoke_train_step(arch):
     cfg = get_smoke(arch)
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -69,7 +72,10 @@ def test_arch_smoke_train_step(arch):
     assert jax.tree.structure(new_params) == jax.tree.structure(params)
 
 
-@pytest.mark.parametrize("arch", ALL_ARCHS)
+@pytest.mark.parametrize(
+    "arch", [pytest.param(a, marks=pytest.mark.slow)
+             if a == "jamba-1.5-large-398b" else a
+             for a in ALL_ARCHS])
 def test_arch_smoke_prefill_decode(arch):
     cfg = get_smoke(arch)
     if not cfg.is_decoder:

@@ -1,0 +1,239 @@
+"""ViBE-R: replication invariants, solver vectorization, model semantics."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ReplicatedPlacement, default_slots_per_rank,
+                        incremental_update_replicated, layer_latency_span,
+                        make_cluster, predicted_rank_latencies,
+                        solve_model_placement, vibe_placement,
+                        vibe_r_placement)
+from repro.core.placement import (_greedy_target_assign,
+                                  _greedy_target_assign_vec, _speed_targets,
+                                  eplb_placement)
+
+
+def zipf_loads(rng, L, E, alpha=1.2, tokens=200_000.0):
+    z = 1.0 / np.arange(1, E + 1) ** alpha
+    prof = np.stack([rng.permutation(z) for _ in range(L)])
+    return prof / prof.sum(axis=1, keepdims=True) * tokens
+
+
+def paper_perf(G, seed=0, **kw):
+    cluster = make_cluster(G, "mi325x", d_model=1024, d_ff=512,
+                           experts_per_rank=8, seed=seed, **kw)
+    return cluster.fit_models()
+
+
+# ---------------------------------------------------------------------------
+# solver vectorization equivalence
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 1000), n_ranks=st.sampled_from([2, 4, 8]),
+       e_per=st.integers(1, 6), n_layers=st.integers(1, 5))
+def test_vectorized_greedy_matches_perlayer_reference(seed, n_ranks, e_per,
+                                                      n_layers):
+    """The layer-vectorized greedy fill is a pure reimplementation of the
+    per-layer reference loop: identical assignment, bit for bit."""
+    E = n_ranks * e_per
+    rng = np.random.default_rng(seed)
+    w = rng.random((n_layers, E)) * 1000
+    targets = rng.random((n_layers, n_ranks)) \
+        * w.sum(1, keepdims=True) / n_ranks * 2
+    vec = _greedy_target_assign_vec(w, targets)
+    ref = np.stack([_greedy_target_assign(w[l], targets[l].copy(), n_ranks)
+                    for l in range(n_layers)])
+    np.testing.assert_array_equal(vec, ref)
+
+
+def test_vibe_solver_matches_legacy_perlayer_path():
+    """vibe_placement (vectorized) == per-layer greedy over speed targets."""
+    G = 8
+    perf = paper_perf(G)
+    rng = np.random.default_rng(3)
+    w = rng.dirichlet(np.full(64, 0.3), size=6) * 50_000
+    pl = vibe_placement(w, perf)
+    _, targets = _speed_targets(w, perf, "rank")
+    ref = np.stack([_greedy_target_assign(w[l], targets[l].copy(), G)
+                    for l in range(6)])
+    np.testing.assert_array_equal(pl.assign, ref)
+
+
+# ---------------------------------------------------------------------------
+# replication invariants (property tests)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 1000), n_ranks=st.sampled_from([2, 4, 8]),
+       e_per=st.integers(1, 4), extra=st.integers(0, 3),
+       n_layers=st.integers(1, 4))
+def test_every_expert_placed_and_slot_budget_respected(seed, n_ranks, e_per,
+                                                       extra, n_layers):
+    E = n_ranks * e_per
+    s_loc = e_per + extra
+    if s_loc > E:
+        s_loc = E
+    rng = np.random.default_rng(seed)
+    w = rng.random((n_layers, E)) * 1000 + 1e-6
+    models = paper_perf(n_ranks, seed=seed % 7)
+    rp = vibe_r_placement(w, models, slots_per_rank=s_loc)
+    # slot budget: exactly slots_per_rank × G physical slots, rank-major
+    assert rp.n_slots == s_loc * n_ranks
+    assert rp.slots_per_rank == s_loc
+    # every logical expert holds ≥ 1 copy, shares sum to 1 per expert
+    nc = rp.n_copies()
+    assert nc.shape == (n_layers, E)
+    assert (nc >= 1).all()
+    assert int(nc.sum()) == rp.n_slots * n_layers
+    # traffic conservation: splitting over copies never loses tokens
+    np.testing.assert_allclose(rp.rank_loads(w).sum(1), w.sum(1))
+
+
+def test_copies_never_colocated_on_one_rank():
+    """A replica on the rank that already holds its sibling absorbs no
+    skew; the greedy must spread copies across ranks."""
+    rng = np.random.default_rng(0)
+    G, E = 8, 32
+    w = zipf_loads(rng, 4, E)
+    rp = vibe_r_placement(w, paper_perf(G), slots_per_rank=6)
+    L, S = rp.slot_expert.shape
+    s_loc = rp.slots_per_rank
+    for l in range(L):
+        per_rank = rp.slot_expert[l].reshape(G, s_loc)
+        for g in range(G):
+            assert len(set(per_rank[g])) == s_loc, (l, g)
+
+
+def test_replicated_placement_validation():
+    with pytest.raises(ValueError):   # expert 1 has no slot
+        ReplicatedPlacement(np.array([[0, 0]]), np.array([[0.5, 0.5]]),
+                            n_ranks=2, n_experts=2)
+    with pytest.raises(ValueError):   # shares don't sum to 1
+        ReplicatedPlacement(np.array([[0, 1]]), np.array([[0.5, 0.5]]),
+                            n_ranks=2, n_experts=2)
+    with pytest.raises(ValueError):   # budget cannot hold every expert
+        vibe_r_placement(np.ones((1, 8)), paper_perf(2), slots_per_rank=3)
+
+
+def test_default_slots_per_rank():
+    assert default_slots_per_rank(64, 8) == 9       # even split → +1 spare
+    assert default_slots_per_rank(40, 16) == 3      # ceil(40/16) padding
+    assert default_slots_per_rank(6, 4) == 2
+
+
+# ---------------------------------------------------------------------------
+# latency objective: replication beats singleton on skew
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 200))
+def test_replicated_span_never_worse_than_singleton_on_skew(seed):
+    """Paper Fig 15 regime: on Zipf-skewed loads the replicated solution's
+    predicted max-layer latency is at most singleton ViBE's (the extra
+    slots strictly add placement freedom)."""
+    rng = np.random.default_rng(seed)
+    G, E, L = 8, 64, 4
+    perf = paper_perf(G, seed=seed % 5)
+    w = zipf_loads(rng, L, E)
+    span_r = layer_latency_span(
+        vibe_r_placement(w, perf, slots_per_rank=E // G + 1), w, perf)
+    span_v = layer_latency_span(vibe_placement(w, perf), w, perf)
+    assert span_r[:, 0].max() <= span_v[:, 0].max() * 1.01
+
+
+def test_replication_strictly_helps_on_hot_expert():
+    """One mega-hot expert pins a singleton placement; copies split it."""
+    G, E, L = 4, 16, 2
+    perf = paper_perf(G)
+    w = np.full((L, E), 100.0)
+    w[:, 0] = 50_000.0
+    rp = vibe_r_placement(w, perf, slots_per_rank=E // G + 2)
+    pv = vibe_placement(w, perf)
+    r = layer_latency_span(rp, w, perf)[:, 0].mean()
+    v = layer_latency_span(pv, w, perf)[:, 0].mean()
+    assert r < 0.7 * v
+    assert rp.n_copies()[:, 0].min() >= 2     # the hot expert got replicas
+
+
+# ---------------------------------------------------------------------------
+# incremental updates over (expert, copy) slots
+# ---------------------------------------------------------------------------
+
+class TestIncrementalReplicated:
+    def setup_method(self):
+        self.perf = paper_perf(8, seed=1)
+        rng = np.random.default_rng(4)
+        self.w0 = zipf_loads(rng, 5, 64)
+        self.w1 = np.roll(self.w0, 9, axis=1)
+        self.rp = vibe_r_placement(self.w0, self.perf, slots_per_rank=9)
+
+    def test_never_increases_max_latency(self):
+        res = incremental_update_replicated(self.rp, self.w1, self.perf)
+        before = predicted_rank_latencies(self.rp, self.w1, self.perf).max(1)
+        after = predicted_rank_latencies(res.placement, self.w1,
+                                         self.perf).max(1)
+        assert (after <= before + 1e-12).all()
+
+    def test_invariants_preserved_and_moves_are_slots(self):
+        res = incremental_update_replicated(self.rp, self.w1, self.perf)
+        new = res.placement
+        assert isinstance(new, ReplicatedPlacement)   # re-validated on build
+        # replica counts are swap-invariant (copies move, never (dis)appear)
+        np.testing.assert_array_equal(new.n_copies(), self.rp.n_copies())
+        assert new.moved_experts(self.rp) == 2 * len(res.swaps)
+        assert res.per_layer_swaps.sum() == len(res.swaps)
+
+
+# ---------------------------------------------------------------------------
+# solve_model_placement plumbing
+# ---------------------------------------------------------------------------
+
+def test_solve_model_placement_vibe_r_dispatch():
+    w = np.ones((2, 8))
+    perf = paper_perf(4)
+    rp = solve_model_placement("vibe_r", w, 4, perf_models=perf)
+    assert isinstance(rp, ReplicatedPlacement)
+    assert rp.slots_per_rank == default_slots_per_rank(8, 4)
+    with pytest.raises(ValueError):
+        solve_model_placement("vibe_r", w, 4)         # needs perf models
+    with pytest.raises(ValueError):
+        solve_model_placement("vibe_r", w, 2, perf_models=perf)  # G mismatch
+
+
+# ---------------------------------------------------------------------------
+# model layer: replicated slot table is semantically invisible
+# ---------------------------------------------------------------------------
+
+def test_moe_layer_replicated_slot_table_semantics():
+    """Dispatching through a ViBE-R slot table (copies of hot experts in
+    the spare slots) must produce the same outputs and router tallies as
+    the singleton identity layout — replicas only redistribute load."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import moe as MOE
+    from repro.models.sharding import build_slots_of
+
+    E, D, F, K, G = 8, 32, 64, 2, 4
+    p = MOE.moe_init(jax.random.PRNGKey(0), d=D, f=F, n_experts=E, n_slots=E)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, D)) \
+        .astype(jnp.bfloat16)
+    y_ref, tally_ref, _ = MOE.moe_layer(p, x, top_k=K, n_experts=E,
+                                        rules=None)
+
+    w = np.full((1, E), 10.0)
+    w[0, 0] = 1000.0
+    rp = vibe_r_placement(w, paper_perf(G), slots_per_rank=3)   # S=12 > E=8
+    perm = rp.perm[0]
+    p_rep = dict(p)
+    for k in ("w1", "w2", "w3"):
+        p_rep[k] = p[k][perm]                       # slot p ← expert perm[p]
+    slots_of, n_copies = build_slots_of(rp.perm, E, rp.n_slots)
+    y, tally, _ = MOE.moe_layer(p_rep, x, top_k=K, n_experts=E, rules=None,
+                                slots_of=jnp.asarray(slots_of[0]),
+                                n_copies=jnp.asarray(n_copies[0]))
+    err = float(jnp.abs(y_ref.astype(jnp.float32)
+                        - y.astype(jnp.float32)).max())
+    assert err < 1e-5, err
+    np.testing.assert_allclose(np.asarray(tally_ref), np.asarray(tally))

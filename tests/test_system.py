@@ -92,7 +92,8 @@ def test_hlo_parser_trip_count_exact():
         costs = parse_hlo(c.as_text())
         expect = 2 * 32 * 128 * 128 * L
         assert costs.flops == pytest.approx(expect, rel=1e-6)
-        ca = c.cost_analysis()
+        from repro.compat import cost_analysis_dict
+        ca = cost_analysis_dict(c)   # list-of-dicts on 0.4.x, dict on newer
         # rel=0.05 absorbs elementwise-op flops; a trip-count-multiplying
         # XLA would be off by ~L×, far outside this tolerance
         assert ca["flops"] == pytest.approx(2 * 32 * 128 * 128, rel=0.05), \

@@ -116,9 +116,9 @@ os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
 import sys; sys.path.insert(0, {repr(os.path.join(os.path.dirname(__file__), '..', 'src'))})
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import compat
 from repro.training import load_checkpoint
-mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat.make_mesh((2, 4), ('data', 'model'))
 like = {{'w': jnp.zeros((8, 8), jnp.float32)}}
 sh = {{'w': NamedSharding(mesh, P('data', 'model'))}}
 tree, _ = load_checkpoint({repr(d)}, 1, like, shardings=sh)
@@ -131,6 +131,7 @@ print('REMESH_OK')
                                  capture_output=True, text=True, timeout=300)
             assert "REMESH_OK" in res.stdout, res.stderr[-2000:]
 
+    @pytest.mark.slow
     def test_train_resume_matches_uninterrupted(self):
         """Fault tolerance: crash+restart reproduces the uninterrupted run
         exactly (deterministic data + full state in the checkpoint)."""
