@@ -12,8 +12,8 @@ from .placement import (Placement, ReplicatedPlacement,
                         eplb_placement, layer_latency_span,
                         placement_to_permutation, permutation_to_placement,
                         predicted_layer_latency, predicted_rank_latencies,
-                        solve_model_placement, vibe_placement,
-                        vibe_r_placement)
+                        reweight_shares_by_speed, solve_model_placement,
+                        vibe_placement, vibe_r_placement)
 from .variability import (REGIMES, ClusterVariability, VariabilityRegime,
                           make_cluster)
 
@@ -28,7 +28,7 @@ __all__ = [
     "default_slots_per_rank", "eplb_placement",
     "layer_latency_span", "placement_to_permutation",
     "permutation_to_placement", "predicted_layer_latency",
-    "predicted_rank_latencies", "solve_model_placement", "vibe_placement",
-    "vibe_r_placement",
+    "predicted_rank_latencies", "reweight_shares_by_speed",
+    "solve_model_placement", "vibe_placement", "vibe_r_placement",
     "REGIMES", "ClusterVariability", "VariabilityRegime", "make_cluster",
 ]

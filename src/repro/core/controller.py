@@ -50,6 +50,11 @@ class ViBEConfig:
     slots_per_rank: Optional[int] = None
     # vibe_r only: physical slot budget per rank (≥ ceil(E/G)); the excess
     # slots hold hot-expert replicas. None = placement.default_slots_per_rank.
+    reweight_shares: bool = False
+    # vibe_r only: after an incremental (swap-based) recalibration,
+    # re-proportion each expert's copy shares to the speeds of the ranks its
+    # copies landed on (placement.reweight_shares_by_speed) so the weighted
+    # dispatch keeps steering traffic toward fast copies.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,7 +146,8 @@ class ViBEController:
         elif self.cfg.policy in _PERF_POLICIES:
             if self.cfg.policy == "vibe_r":
                 res: IncrementalResult = incremental_update_replicated(
-                    old, w, self.perf_models, epsilon=self.cfg.epsilon)
+                    old, w, self.perf_models, epsilon=self.cfg.epsilon,
+                    reweight_shares=self.cfg.reweight_shares)
             else:
                 res = incremental_update(
                     old, w, self.perf_models, epsilon=self.cfg.epsilon)

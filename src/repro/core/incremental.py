@@ -24,7 +24,8 @@ from typing import List, Sequence, Tuple
 import numpy as np
 
 from .perf_model import PerfModel
-from .placement import Placement, ReplicatedPlacement
+from .placement import (Placement, ReplicatedPlacement,
+                        reweight_shares_by_speed)
 
 __all__ = ["Swap", "IncrementalResult", "incremental_update",
            "SlotSwap", "incremental_update_replicated"]
@@ -156,17 +157,26 @@ def incremental_update_replicated(
     perf_models: Sequence[PerfModel],
     epsilon: float = 0.03,
     max_swaps_per_layer: int = 64,
+    reweight_shares: bool = False,
 ) -> IncrementalResult:
     """Algorithm 2 at (expert, copy)-slot granularity (ViBE-R placements).
 
     The swap unit is a physical *slot*: exchanging the residents of one slot
     on the slowest rank with one on the fastest moves exactly two expert
-    copies (and their traffic shares) — shares travel with their copy, so
-    per-expert share sums and replica counts are invariant, which keeps
-    every logical expert resident somewhere. Swaps that would colocate two
-    copies of the same expert on one rank are skipped (a colocated replica
-    absorbs no skew). The swap log doubles as the weight-migration plan,
-    exactly as in the singleton solver.
+    copies (and their traffic shares) — the share tables are updated in
+    place alongside the slot table, so per-expert share sums and replica
+    counts are invariant, which keeps every logical expert resident
+    somewhere. Swaps that would colocate two copies of the same expert on
+    one rank are skipped (a colocated replica absorbs no skew). The swap
+    log doubles as the weight-migration plan, exactly as in the singleton
+    solver.
+
+    ``reweight_shares=True`` additionally re-proportions each expert's copy
+    shares to the speeds of the ranks its copies now sit on (solver phase 3
+    re-applied; see :func:`reweight_shares_by_speed`). Off by default: the
+    swap loop scores swaps under the *carried* shares, so reweighting
+    afterwards trades the loop's monotone-latency guarantee for shares that
+    match the new copy→rank map.
     """
     w = np.atleast_2d(np.asarray(w, dtype=np.float64))
     G = placement.n_ranks
@@ -237,8 +247,11 @@ def incremental_update_replicated(
         if lat.max() <= (1.0 + epsilon) * lat.mean():
             converged += 1
 
+    new = ReplicatedPlacement(se, sh, G, placement.n_experts)
+    if reweight_shares:
+        new = reweight_shares_by_speed(new, w, perf_models)
     return IncrementalResult(
-        placement=ReplicatedPlacement(se, sh, G, placement.n_experts),
+        placement=new,
         swaps=swaps,
         converged_layers=converged,
         per_layer_swaps=per_layer,

@@ -52,11 +52,14 @@ from .perf_model import PerfModel
 __all__ = [
     "Placement",
     "ReplicatedPlacement",
+    "copy_enumeration",
+    "copy_share_cdf",
     "contiguous_placement",
     "eplb_placement",
     "vibe_placement",
     "vibe_r_placement",
     "solve_model_placement",
+    "reweight_shares_by_speed",
     "placement_to_permutation",
     "permutation_to_placement",
     "predicted_layer_latency",
@@ -188,6 +191,40 @@ class ReplicatedPlacement:
         """(L, E) replica count per logical expert."""
         return _replica_counts(self.slot_expert, self.n_experts)
 
+    def copy_shares(self, r_max: Optional[int] = None) -> np.ndarray:
+        """(L, E, r_max) per-copy traffic shares, copies in slot order.
+
+        The copy axis matches the enumeration ``build_slots_of`` uses for
+        its ``slots_of`` table (ascending physical slot), so index r here
+        is the share of the copy living in ``slots_of[l, e, r]``. Entries
+        past an expert's replica count are zero. ``r_max`` pads the copy
+        axis (must be ≥ the actual maximum replica count).
+        """
+        se = self.slot_expert
+        L, S = se.shape
+        counts = self.n_copies()
+        rm = int(counts.max()) if r_max is None else int(r_max)
+        if rm < int(counts.max()):
+            raise ValueError(f"r_max={rm} < max replica count {counts.max()}")
+        order, e_sorted, occ = copy_enumeration(se)
+        sh_sorted = np.take_along_axis(self.share, order, axis=1)
+        out = np.zeros((L, self.n_experts, rm))
+        rows = np.repeat(np.arange(L), S)
+        out[rows, e_sorted.ravel(), occ.ravel()] = sh_sorted.ravel()
+        return out
+
+    def copy_cdf(self, r_max: Optional[int] = None) -> np.ndarray:
+        """(L, E, r_max) cumulative copy-share table for weighted dispatch.
+
+        This is what the model layer consumes (via ``make_moe_tables``) for
+        inverse-CDF replica selection: assignment with uniform u picks the
+        first copy r with u < cdf[l, e, r]. Delegates to the canonical
+        :func:`copy_share_cdf` builder — one implementation for the solver
+        and the model seam.
+        """
+        return copy_share_cdf(self.slot_expert, self.n_experts,
+                              share=self.share, r_max=r_max)
+
     def rank_loads(self, w: np.ndarray) -> np.ndarray:
         """Per-rank token loads (L, G): expert loads split over copies."""
         w = np.atleast_2d(np.asarray(w, dtype=np.float64))
@@ -208,6 +245,77 @@ def _replica_counts(slot_expert: np.ndarray, n_experts: int) -> np.ndarray:
     """(L, S) slot table → (L, E) copies per logical expert."""
     return np.apply_along_axis(np.bincount, 1, slot_expert,
                                minlength=n_experts)
+
+
+def copy_enumeration(slot_table: np.ndarray):
+    """Canonical copy enumeration of a (L, S) slot table, vectorized.
+
+    Groups each layer's slots by resident id — stable, so slot-ascending
+    within an id — and indexes each slot's occurrence within its run:
+    returns ``(order, id_sorted, occ)``, all (L, S), where ``order`` maps
+    sorted position → physical slot, ``id_sorted`` is the resident id at
+    that position, and ``occ`` says "this is the id's occ-th copy".
+
+    This ordering is THE copy axis: ``build_slots_of`` (models/sharding)
+    lays out ``slots_of[l, e, r]`` in it, and every share/CDF table must
+    enumerate copies identically or solver-side shares and model-side
+    dispatch silently disagree — which is why all of them call this one
+    helper.
+    """
+    slot_table = np.atleast_2d(slot_table)
+    L, S = slot_table.shape
+    order = np.argsort(slot_table, axis=1, kind="stable")
+    id_sorted = np.take_along_axis(slot_table, order, axis=1)
+    pos = np.arange(S)[None, :]
+    new_run = np.concatenate(
+        [np.ones((L, 1), bool), id_sorted[:, 1:] != id_sorted[:, :-1]],
+        axis=1)
+    run_start = np.maximum.accumulate(np.where(new_run, pos, 0), axis=1)
+    return order, id_sorted, pos - run_start
+
+
+def copy_share_cdf(slot_table: np.ndarray, n_experts: int,
+                   share: Optional[np.ndarray] = None,
+                   r_max: Optional[int] = None) -> np.ndarray:
+    """THE cumulative copy-share table: (L, S) slot table → (L, E, r_max).
+
+    The single normalization behind ``ReplicatedPlacement.copy_cdf`` and
+    ``models.sharding.build_copy_cdf`` — solver-side scoring and
+    model-side dispatch must agree bit-for-bit on this table, so there is
+    exactly one implementation. Entries ≥ ``n_experts`` are phantom
+    padding and take no share; ``share=None`` means a uniform split over
+    each expert's copies; trailing (padding) entries along the copy axis
+    are 1.0 so inverse-CDF selection can never land outside an expert's
+    real copies. Experts whose shares sum to zero (fully starved) fall
+    back to a uniform split. Returns float32.
+    """
+    slot_table = np.atleast_2d(slot_table)
+    L, S = slot_table.shape
+    if share is not None:
+        share = np.atleast_2d(np.asarray(share, dtype=np.float64))
+        if share.shape != slot_table.shape:
+            raise ValueError(
+                f"share shape {share.shape} != table {slot_table.shape}")
+    clipped = np.minimum(slot_table, n_experts)      # phantoms → sentinel E
+    counts = np.apply_along_axis(np.bincount, 1, clipped,
+                                 minlength=n_experts + 1)[:, :n_experts]
+    rm = int(counts.max()) if r_max is None else int(r_max)
+    if rm < int(counts.max()):
+        raise ValueError(f"r_max={rm} < max replica count {counts.max()}")
+    order, e_sorted, occ = copy_enumeration(clipped)
+    sh_sorted = (np.ones((L, S))
+                 if share is None else np.take_along_axis(share, order, 1))
+    acc = np.zeros((L, n_experts, rm), dtype=np.float64)
+    li, si = np.nonzero(e_sorted < n_experts)
+    acc[li, e_sorted[li, si], occ[li, si]] = sh_sorted[li, si]
+    totals = acc.sum(-1)
+    dead = totals <= 0.0
+    if dead.any():
+        uniform = (np.arange(rm)[None, None, :] < counts[..., None]) * 1.0
+        acc = np.where(dead[..., None], uniform, acc)
+        totals = acc.sum(-1)
+    cdf = np.cumsum(acc, axis=-1) / totals[..., None]
+    return np.minimum(cdf, 1.0).astype(np.float32)
 
 
 def placement_to_permutation(assign: np.ndarray, n_ranks: int) -> np.ndarray:
@@ -477,6 +585,37 @@ def vibe_r_placement(
         slot_expert=np.take_along_axis(ce, lay, axis=1),
         share=np.take_along_axis(share, lay, axis=1),
         n_ranks=G, n_experts=E)
+
+
+def reweight_shares_by_speed(
+    placement: ReplicatedPlacement,
+    w: np.ndarray,                 # (L, E) activation matrix
+    perf_models: Sequence[PerfModel],
+    n_ref_mode: str = "rank",
+) -> ReplicatedPlacement:
+    """Re-proportion each expert's copy shares to its ranks' current speeds.
+
+    Solver phase 3 applied to an *existing* slot table: after slot-granular
+    swaps (incremental updates) move copies between ranks, the shares riding
+    with them still reflect the ranks they came from. This recomputes
+    share ∝ s_g = 1/f_g(n_ref) for the rank each copy now occupies, keeping
+    per-expert sums at 1 and the slot table untouched — so the weighted
+    dispatch keeps steering traffic toward the fast copies.
+    """
+    w = np.atleast_2d(np.asarray(w, dtype=np.float64))
+    se = placement.slot_expert
+    L, S = se.shape
+    if w.shape != (L, placement.n_experts):
+        raise ValueError(f"w shape {w.shape} != {(L, placement.n_experts)}")
+    speeds, _ = _speed_targets(w, perf_models, n_ref_mode)
+    rank_of = np.arange(S) // placement.slots_per_rank
+    sp = speeds[:, rank_of]                                      # (L, S)
+    rows = np.arange(L)
+    denom = np.zeros((L, placement.n_experts))
+    np.add.at(denom, (rows[:, None], se), sp)
+    share = sp / np.take_along_axis(denom, se, axis=1)
+    return ReplicatedPlacement(se.copy(), share, placement.n_ranks,
+                               placement.n_experts)
 
 
 def solve_model_placement(

@@ -74,8 +74,9 @@ def input_specs(arch: str, shape_name: str, mesh) -> Dict[str, Any]:
     out["param_specs"] = pspecs
 
     if cfg.is_moe:
-        st, nc = make_moe_tables(cfg, rules, phase=phase)
-        out["moe_tables"] = (jax.device_put(st), jax.device_put(nc))
+        st, nc, cdf = make_moe_tables(cfg, rules, phase=phase)
+        out["moe_tables"] = (jax.device_put(st), jax.device_put(nc),
+                             jax.device_put(cdf))
     else:
         out["moe_tables"] = None
 

@@ -27,7 +27,8 @@ __all__ = ["serve", "main"]
 def serve(arch: str, *, policy: str = "vibe", n_requests: int = 12,
           qps: float = 50.0, workload: str = "sharegpt",
           regime: str = "mi325x", max_batch: int = 4, max_seq: int = 96,
-          adaptive: bool = True, seed: int = 0):
+          adaptive: bool = True, weighted_routing: bool = True,
+          seed: int = 0):
     cfg = get_smoke(arch)
     if not cfg.is_moe:
         raise SystemExit(f"{arch} has no MoE layers — ViBE serving n/a")
@@ -46,8 +47,12 @@ def serve(arch: str, *, policy: str = "vibe", n_requests: int = 12,
         ViBEConfig(policy=policy, adaptive=adaptive,
                    drift=DriftConfig(window=20, interval=5, cooldown=5),
                    expert_bytes=3 * cfg.d_model * cfg.moe_d_ff * 2))
+    # weighted_routing threads the vibe_r solver's per-copy traffic shares
+    # into the dispatch tables (share-weighted replica routing); disabling
+    # it keeps the legacy uniform split for A/B comparison.
     engine = Engine(cfg, controller=controller, cluster=cluster,
-                    max_batch=max_batch, max_seq=max_seq, seed=seed)
+                    max_batch=max_batch, max_seq=max_seq,
+                    weighted_routing=weighted_routing, seed=seed)
     wl = WORKLOADS[workload]
     reqs = sample_requests(wl, n_requests, qps=qps, seed=seed)
     reqs = [type(r)(r.req_id, r.arrival, min(r.prompt_len, max_seq // 2),
@@ -66,21 +71,32 @@ def main() -> int:
     ap.add_argument("--workload", default="sharegpt")
     ap.add_argument("--regime", default="mi325x")
     ap.add_argument("--static", dest="adaptive", action="store_false")
+    ap.add_argument("--uniform-replica-routing", dest="weighted_routing",
+                    action="store_false",
+                    help="ignore the solver's per-copy traffic shares and "
+                         "split assignments uniformly across replicas "
+                         "(share-oblivious A/B baseline; vibe_r only)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     engine, records = serve(args.arch, policy=args.policy,
                             n_requests=args.requests,
                             workload=args.workload, regime=args.regime,
-                            adaptive=args.adaptive, seed=args.seed)
+                            adaptive=args.adaptive,
+                            weighted_routing=args.weighted_routing,
+                            seed=args.seed)
     s = summarize(records)
     st = engine.stats
-    print(f"[serve] {args.policy} on {args.arch}: {st.steps} steps "
+    routing = ("share-weighted" if args.weighted_routing
+               else "uniform") + " replica routing"
+    print(f"[serve] {args.policy} on {args.arch} ({routing}): "
+          f"{st.steps} steps "
           f"({st.prefill_steps} prefill / {st.decode_steps} decode), "
           f"virtual time {st.virtual_time:.3f}s")
     print(f"[serve] TTFT p50/p90 = {s['ttft_p50']:.4f}/{s['ttft_p90']:.4f}s "
           f"TPOT p50 = {s['tpot_p50']:.5f}s")
     print(f"[serve] recalibrations: {st.migrations}, migrated slots "
-          f"{st.migrated_slots}, bytes {st.migration_bytes}")
+          f"{st.migrated_slots}, bytes {st.migration_bytes}, dropped "
+          f"assignments {st.dropped_assignments:.0f}")
     return 0
 
 

@@ -69,7 +69,9 @@ def train(arch: str, *, smoke: bool = True, steps: int = 20,
         loss = float(loss)
         losses.append(loss)
         if cfg.is_moe:
-            t = np.asarray(tallies)
+            # keep the logical-expert columns; the last column is the
+            # capacity-dropped-assignment count (see models.moe_layer)
+            t = np.asarray(tallies)[:, :cfg.n_experts]
             tallies_acc = t if tallies_acc is None else tallies_acc + t
         if s % log_every == 0 or s == steps - 1:
             print(f"[train] step {s} loss {loss:.4f} "

@@ -40,7 +40,7 @@ from .common import apply_rope, dense_init, mlp, mlp_init, rms_norm, \
 from .flash import flash_attention, flash_decode
 from .moe import (default_perm_a2a, default_perm_replicated, moe_init,
                   moe_layer, n_slots_a2a)
-from .sharding import ShardingRules, build_slots_of
+from .sharding import ShardingRules, build_copy_cdf, build_slots_of
 from . import ssm
 
 __all__ = [
@@ -189,16 +189,26 @@ def count_params(params) -> int:
 def make_moe_tables(cfg: ArchConfig, rules: Optional[ShardingRules],
                     perm: Optional[np.ndarray] = None,
                     phase: str = "train",
-                    n_slots: Optional[int] = None):
-    """Build the (slots_of, n_copies) scan inputs from a slot permutation.
+                    n_slots: Optional[int] = None,
+                    share: Optional[np.ndarray] = None,
+                    r_max: Optional[int] = None):
+    """Build the (slots_of, n_copies, copy_cdf) scan inputs from a placement.
 
     ``perm``: (n_moe_layers, n_slots) — logical expert per physical slot
     (from a ViBE/EPLB/contiguous/ViBE-R placement; repeated entries are
     replicas); None = contiguous default. ``n_slots`` overrides the
     arch-derived slot count when the caller runs an expanded ViBE-R slot
     budget (extra replica slots beyond one-per-expert).
-    Returns arrays shaped (n_blocks, moe_per_block, E, r) / (…, E), or None
-    for non-MoE archs.
+
+    ``share``: (n_moe_layers, n_slots) per-slot traffic fractions (a
+    ``ReplicatedPlacement.share``) — folded into the cumulative-share table
+    the dispatch uses for inverse-CDF replica selection; None = uniform
+    split over copies. ``r_max`` pins the copy-axis width so placements
+    with different replication degrees keep identical table shapes (the
+    no-recompile discipline — tables are jit *inputs*, never statics).
+
+    Returns arrays shaped (n_blocks, moe_per_block, E, r) / (…, E) /
+    (…, E, r), or None for non-MoE archs.
     """
     if not cfg.is_moe:
         return None
@@ -217,10 +227,14 @@ def make_moe_tables(cfg: ArchConfig, rules: Optional[ShardingRules],
     perm = np.atleast_2d(perm)
     if perm.shape != (n_moe, n_slots):
         raise ValueError(f"perm shape {perm.shape} != {(n_moe, n_slots)}")
-    slots_of, n_copies = build_slots_of(perm, cfg.n_experts, n_slots)
+    slots_of, n_copies = build_slots_of(perm, cfg.n_experts, n_slots,
+                                        r_max=r_max)
     r = slots_of.shape[-1]
+    copy_cdf = build_copy_cdf(perm, cfg.n_experts, n_slots, share=share,
+                              r_max=r)
     return (jnp.asarray(slots_of.reshape(nb, m, cfg.n_experts, r)),
-            jnp.asarray(n_copies.reshape(nb, m, cfg.n_experts)))
+            jnp.asarray(n_copies.reshape(nb, m, cfg.n_experts)),
+            jnp.asarray(copy_cdf.reshape(nb, m, cfg.n_experts, r)))
 
 
 # ---------------------------------------------------------------------------
@@ -386,14 +400,21 @@ def _block_body(cfg, rules, specs, bp, x, *, windows_blk, moe_tables_blk,
                 tp = None if rules is None else P(rules.dp, None, rules.tp)
                 h2 = mlp(sub["ffn"], h2, cfg.mlp_gated, tp_spec=tp)
             else:
-                so = nc = None
+                so = nc = cdf = None
                 if moe_tables_blk is not None:
                     so = moe_tables_blk[0][moe_i]
                     nc = moe_tables_blk[1][moe_i]
+                    if len(moe_tables_blk) > 2:     # pre-share-table callers
+                        cdf = moe_tables_blk[2][moe_i]
+                # position-derived salt: decode positions advance every
+                # step, so tiny batches re-draw their replica-selection
+                # uniforms instead of replaying one fixed set forever
+                seed = jnp.sum(positions).astype(jnp.int32)
                 y, tally, aux = moe_layer(
                     sub["ffn"], h2, top_k=cfg.top_k,
                     n_experts=cfg.n_experts, rules=rules,
-                    slots_of=so, n_copies=nc, phase=phase)
+                    slots_of=so, n_copies=nc, copy_cdf=cdf,
+                    route_seed=seed, phase=phase)
                 if cfg.n_shared_experts:
                     tp = None if rules is None else P(rules.dp, None, rules.tp)
                     y = y + mlp(sub["shared"], h2, cfg.mlp_gated, tp_spec=tp)
@@ -403,7 +424,8 @@ def _block_body(cfg, rules, specs, bp, x, *, windows_blk, moe_tables_blk,
                 h2 = y
             x = x + h2
     tall = (jnp.stack(tallies) if tallies
-            else jnp.zeros((0, max(cfg.n_experts, 1)), jnp.float32))
+            else jnp.zeros((0, cfg.n_experts + 1 if cfg.is_moe else 1),
+                           jnp.float32))
     return x, tall, aux_total, new_cache
 
 
@@ -472,7 +494,9 @@ def _scan_blocks(cfg, rules, params, x, *, phase, moe_tables, positions,
 
     xs = (params["blocks"], win, moe_tables, cache)
     x, (tallies, aux, new_cache) = jax.lax.scan(body, x, xs)
-    # tallies (nb, m, E) → (n_moe_layers, E); aux summed
+    # tallies (nb, m, E+1) → (n_moe_layers, E+1): per-layer logical-expert
+    # routing counts plus a final capacity-dropped-assignment column
+    # (see moe_layer); aux summed
     tallies = tallies.reshape(-1, tallies.shape[-1])
     return x, tallies, aux.sum(), new_cache
 

@@ -22,8 +22,13 @@ Three dispatch paths, all semantically identical (modulo capacity drops):
 **Placement is positional** (DESIGN.md §3): the stacked expert weights live
 in *physical slot* order; the router produces *logical* expert ids; the
 ``slots_of`` lookup (built from a ViBE/EPLB/contiguous ``Placement``) maps
-logical → physical at runtime. Because ``slots_of`` is a plain array input,
-recalibration changes placement *without recompilation* — only the weight
+logical → physical at runtime. Replicated experts additionally carry a
+``copy_cdf`` cumulative-share table (ViBE-R solver phase 3): each
+assignment picks among an expert's copies by inverse CDF over a
+deterministic per-assignment uniform, so realized per-copy traffic matches
+the solver's speed-proportional shares (see ``_select_slots``). Because
+``slots_of``/``copy_cdf`` are plain array inputs, recalibration changes
+placement *and* traffic shares *without recompilation* — only the weight
 migration gather (:func:`apply_placement`) touches the expert tensors.
 
 Phantom padding: when E does not divide the EP degree (granite: 40 experts,
@@ -138,14 +143,64 @@ def _bucket_positions(slot_flat: jnp.ndarray, n_slots: int,
     return jnp.take_along_axis(pos, slot_flat[:, None], axis=1)[:, 0]
 
 
+#: Knuth multiplicative-hash constant: odd, so ``i * KNUTH mod 2^32`` is an
+#: equidistributed (Weyl) sequence over uint32 — successive assignment
+#: positions cover [0, 1) with low discrepancy, decorrelated from position.
+_HASH_MULT = np.uint32(2654435761)
+#: odd stride for the per-step salt: for a fixed assignment index, varying
+#: the seed walks its own Weyl sequence, so traffic aggregated *across*
+#: steps converges too (a decode batch has only t·K ≈ tens of assignments
+#: per step — without the salt those few uniforms would repeat forever and
+#: quantize the realized shares).
+_SEED_MULT = np.uint32(2246822519)
+
+
+def _assignment_uniforms(t: int, K: int, seed=None) -> jnp.ndarray:
+    """Deterministic per-assignment uniforms u ∈ [0, 1) → (t, K) f32.
+
+    Top 24 bits of a multiplicative hash of the flat assignment index
+    (offset by ``seed``, an int32 scalar that callers vary per step), so
+    every value is exactly representable in float32 and strictly < 1.
+    """
+    i = jnp.arange(t * K, dtype=jnp.uint32)
+    if seed is not None:
+        i = i + jnp.asarray(seed).astype(jnp.uint32) * _SEED_MULT
+    h = i * _HASH_MULT
+    u = (h >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0 ** -24)
+    return u.reshape(t, K)
+
+
 def _select_slots(idx: jnp.ndarray, slots_of: jnp.ndarray,
-                  n_copies: jnp.ndarray) -> jnp.ndarray:
-    """Map logical ids (t, K) to physical slots, hashing across replicas."""
+                  n_copies: jnp.ndarray,
+                  copy_cdf: Optional[jnp.ndarray] = None,
+                  route_seed=None) -> jnp.ndarray:
+    """Map logical ids (t, K) to physical slots across replicas.
+
+    With ``copy_cdf`` (E, r_max) — the cumulative per-copy traffic shares
+    from the placement solver — each assignment draws a deterministic,
+    position-decorrelated uniform and picks its copy by inverse CDF, so
+    realized per-copy traffic converges to the solver's shares (ViBE-R
+    phase 3 honored by the actual dispatch, not just the objective).
+    ``route_seed`` (int32 scalar) salts the hash; the model threads a
+    step-varying value through so tiny decode batches converge across
+    steps rather than replaying one fixed set of uniforms.
+    ``copy_cdf=None`` keeps the legacy uniform ``% n_copies`` hash (the
+    share-oblivious path the parity suite uses as its regression tripwire).
+    """
     t, K = idx.shape
     r_max = slots_of.shape[-1]
     if r_max == 1:
         return slots_of[:, 0][idx]
-    copy = (jnp.arange(t * K, dtype=jnp.int32).reshape(t, K)) % n_copies[idx]
+    if copy_cdf is None:
+        copy = (jnp.arange(t * K, dtype=jnp.int32).reshape(t, K)) \
+            % n_copies[idx]
+    else:
+        u = _assignment_uniforms(t, K, route_seed)
+        # smallest r with u < cdf[r]; trailing entries are 1.0 > u, and the
+        # min() guards f32 round-up of a copy's cumulative share past u
+        copy = jnp.sum(u[:, :, None] >= copy_cdf[idx], axis=-1,
+                       dtype=jnp.int32)
+        copy = jnp.minimum(copy, n_copies[idx] - 1)
     return slots_of[idx, copy]
 
 
@@ -153,9 +208,11 @@ def _select_slots(idx: jnp.ndarray, slots_of: jnp.ndarray,
 # dense (reference) dispatch
 # ---------------------------------------------------------------------------
 
-def _dense_dispatch(p, xf, *, top_k, n_experts, slots_of, n_copies):
+def _dense_dispatch(p, xf, route_seed, *, top_k, n_experts, slots_of,
+                    n_copies, copy_cdf):
     weights, idx, mean_prob = route(p["router"], xf, top_k)
-    slots = _select_slots(idx, slots_of, n_copies)          # (t, K) physical
+    slots = _select_slots(idx, slots_of, n_copies, copy_cdf,
+                          route_seed)                   # (t, K) physical
     n_slots = p["w1"].shape[0]
     # scatter gate weights into a (t, n_slots) combine matrix
     comb = jnp.zeros((xf.shape[0], n_slots), jnp.float32).at[
@@ -165,6 +222,8 @@ def _dense_dispatch(p, xf, *, top_k, n_experts, slots_of, n_copies):
     out = jnp.einsum("te,etd->td", comb, y.astype(jnp.float32))
     tally = jax.nn.one_hot(idx, n_experts, dtype=jnp.float32).sum((0, 1))
     aux = _aux_loss(tally, mean_prob, n_experts)
+    # dense computes every expert on every token: nothing can be dropped
+    tally = jnp.concatenate([tally, jnp.zeros((1,), jnp.float32)])
     return out.astype(xf.dtype), tally, aux
 
 
@@ -177,9 +236,9 @@ def _aux_loss(tally, mean_prob, n_experts):
 # a2a dispatch (train / prefill)
 # ---------------------------------------------------------------------------
 
-def _a2a_body(xb, router_w, w1, w3, w2, slots_of, n_copies, *,
-              top_k, n_experts, n_slots, capacity, ep, ep_axes, dp_axes,
-              fsdp_axes, ffn):
+def _a2a_body(xb, router_w, w1, w3, w2, slots_of, n_copies, copy_cdf,
+              route_seed, *, top_k, n_experts, n_slots, capacity, ep,
+              ep_axes, dp_axes, fsdp_axes, ffn):
     """Per-device block of the a2a EP MoE layer.
 
     xb: (B_loc, S_loc, D). Expert weights arrive sharded (E_loc, D/f, F)
@@ -197,7 +256,8 @@ def _a2a_body(xb, router_w, w1, w3, w2, slots_of, n_copies, *,
     xf = xb.reshape(Bl * Sl, D)
     t = xf.shape[0]
     weights, idx, mean_prob = route(router_w, xf, top_k)
-    slots = _select_slots(idx, slots_of, n_copies)          # (t, K)
+    slots = _select_slots(idx, slots_of, n_copies, copy_cdf,
+                          route_seed)                   # (t, K)
     slot_flat = slots.reshape(-1)
     wgt_flat = weights.reshape(-1)
     tok_flat = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)
@@ -224,9 +284,13 @@ def _a2a_body(xb, router_w, w1, w3, w2, slots_of, n_copies, *,
     out = jnp.zeros((t, D), jnp.float32).at[tok_flat].add(contrib)
 
     tally = jax.nn.one_hot(idx, n_experts, dtype=jnp.float32).sum((0, 1))
+    # capacity-overflow accounting: assignments past a slot's bucket are
+    # zeroed above; surface the count instead of dropping them silently
+    dropped = jnp.sum(1.0 - keep.astype(jnp.float32))[None]
+    tally = jnp.concatenate([tally, dropped])
     tally = jax.lax.psum(tally, ep_axes + dp_axes)
     mean_prob = jax.lax.pmean(mean_prob, ep_axes + dp_axes)
-    aux = _aux_loss(tally, mean_prob, n_experts)
+    aux = _aux_loss(tally[:n_experts], mean_prob, n_experts)
     return out.astype(xb.dtype).reshape(Bl, Sl, D), tally, aux
 
 
@@ -234,9 +298,9 @@ def _a2a_body(xb, router_w, w1, w3, w2, slots_of, n_copies, *,
 # replicated dispatch (decode)
 # ---------------------------------------------------------------------------
 
-def _replicated_body(xb, router_w, w1, w3, w2, slots_of, n_copies, *,
-                     top_k, n_experts, n_slots, capacity, ep_axes, ep_sizes,
-                     ffn, psum_axes=None):
+def _replicated_body(xb, router_w, w1, w3, w2, slots_of, n_copies, copy_cdf,
+                     route_seed, *, top_k, n_experts, n_slots, capacity,
+                     ep_axes, ep_sizes, ffn, psum_axes=None):
     """Tokens replicated fleet-wide; each device computes its slots only.
 
     With expert-TP (big experts) the local w1/w3 carry an F-slice and w2 the
@@ -253,7 +317,7 @@ def _replicated_body(xb, router_w, w1, w3, w2, slots_of, n_copies, *,
     xf = xb.reshape(B * S, D)
     t = xf.shape[0]
     weights, idx, mean_prob = route(router_w, xf, top_k)
-    slots = _select_slots(idx, slots_of, n_copies)
+    slots = _select_slots(idx, slots_of, n_copies, copy_cdf, route_seed)
     slot_flat = slots.reshape(-1)
     wgt_flat = weights.reshape(-1)
     tok_flat = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)
@@ -274,6 +338,11 @@ def _replicated_body(xb, router_w, w1, w3, w2, slots_of, n_copies, *,
 
     tally = jax.nn.one_hot(idx, n_experts, dtype=jnp.float32).sum((0, 1))
     aux = _aux_loss(tally, mean_prob, n_experts)
+    # local capacity overflow (each device drops its own bucket excess);
+    # psum over the slot axes only — expert-TP ranks see duplicate drops
+    dropped = jnp.sum((mine & (pos >= capacity)).astype(jnp.float32))[None]
+    dropped = jax.lax.psum(dropped, ep_axes)
+    tally = jnp.concatenate([tally, dropped])
     return out.astype(xb.dtype).reshape(B, S, D), tally, aux
 
 
@@ -294,15 +363,39 @@ def moe_layer(
     rules: Optional[ShardingRules] = None,
     slots_of: Optional[jnp.ndarray] = None,     # (E, r_max) physical lookup
     n_copies: Optional[jnp.ndarray] = None,     # (E,)
+    copy_cdf: Optional[jnp.ndarray] = None,     # (E, r_max) cumulative shares
+    route_seed=None,                   # int32 scalar salt (varies per step)
     phase: str = "train",              # "train" | "prefill" | "decode"
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Returns (y (B,S,D), tally (E,) logical-expert counts, aux_loss)."""
+    """Returns (y (B,S,D), tally (E+1,), aux_loss).
+
+    ``tally[:E]`` — logical-expert routing counts (pre-capacity, so each
+    token contributes exactly top_k); ``tally[E]`` — assignments dropped by
+    the capacity buckets this pass (0 on the dense path).
+
+    ``copy_cdf`` carries the placement solver's per-copy traffic shares
+    (cumulative, from ``make_moe_tables``/``build_copy_cdf``); replicas are
+    then traffic-weighted by inverse-CDF selection. None = uniform split
+    over copies — correct for round-robin duplication, share-oblivious for
+    ViBE-R placements. ``route_seed`` decorrelates the selection across
+    steps (the model passes a position-derived salt) so small decode
+    batches don't replay one fixed uniform set forever.
+    """
     B, S, D = x.shape
     n_slots = p["w1"].shape[0]
     if slots_of is None:
         slots_of = jnp.arange(n_experts, dtype=jnp.int32)[:, None]
     if n_copies is None:
         n_copies = jnp.ones((n_experts,), jnp.int32)
+    if copy_cdf is None:
+        # uniform fallback: copy r of expert e covers ((r+1)/n_copies[e])
+        r_pad = slots_of.shape[-1]
+        copy_cdf = jnp.minimum(
+            jnp.arange(1, r_pad + 1, dtype=jnp.float32)[None, :]
+            / jnp.maximum(n_copies[:, None].astype(jnp.float32), 1.0), 1.0)
+    if route_seed is None:
+        route_seed = jnp.int32(0)
+    route_seed = jnp.asarray(route_seed).astype(jnp.int32)
 
     mode = "dense"
     if rules is not None and rules.mesh is not None:
@@ -317,8 +410,9 @@ def moe_layer(
 
     if mode == "dense":
         out, tally, aux = _dense_dispatch(
-            p, x.reshape(B * S, D), top_k=top_k, n_experts=n_experts,
-            slots_of=slots_of, n_copies=n_copies)
+            p, x.reshape(B * S, D), route_seed, top_k=top_k,
+            n_experts=n_experts, slots_of=slots_of, n_copies=n_copies,
+            copy_cdf=copy_cdf)
         return out.reshape(B, S, D), tally, aux
 
     cf = rules.capacity_factor
@@ -344,10 +438,11 @@ def moe_layer(
             in_specs=(P(dp_axes if dp_axes else None, ep_spec, None),
                       P(None, None), w_spec, w_spec,
                       P(ep_spec, fsdp_axes if fsdp_axes else None, None),
-                      P(None, None), P(None)),
+                      P(None, None), P(None), P(None, None), P()),
             out_specs=(P(dp_axes if dp_axes else None, ep_spec, None),
                        P(None), P()),
-        )(x, p["router"], p["w1"], p["w3"], p["w2"], slots_of, n_copies)
+        )(x, p["router"], p["w1"], p["w3"], p["w2"], slots_of, n_copies,
+          copy_cdf, route_seed)
         return out, tally, aux
 
     # replicated decode: one-or-few slots per device across the whole fleet
@@ -375,9 +470,11 @@ def moe_layer(
         body, mesh=mesh,
         in_specs=(P(None, None, None), P(None, None),
                   P(ep_spec, None, ftp_spec), P(ep_spec, None, ftp_spec),
-                  P(ep_spec, ftp_spec, None), P(None, None), P(None)),
+                  P(ep_spec, ftp_spec, None), P(None, None), P(None),
+                  P(None, None), P()),
         out_specs=(P(None, None, None), P(None), P()),
-    )(x, p["router"], p["w1"], p["w3"], p["w2"], slots_of, n_copies)
+    )(x, p["router"], p["w1"], p["w3"], p["w2"], slots_of, n_copies,
+      copy_cdf, route_seed)
     return out, tally, aux
 
 

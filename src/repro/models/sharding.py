@@ -20,7 +20,9 @@ import numpy as np
 import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
-__all__ = ["ShardingRules", "build_slots_of"]
+from repro.core.placement import copy_share_cdf
+
+__all__ = ["ShardingRules", "build_slots_of", "build_copy_cdf"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,12 +108,16 @@ class ShardingRules:
         return jax.lax.with_sharding_constraint(x, self.spec(*parts))
 
 
-def build_slots_of(perm: np.ndarray, n_experts: int,
-                   n_slots: int) -> Tuple[np.ndarray, np.ndarray]:
+def build_slots_of(perm: np.ndarray, n_experts: int, n_slots: int,
+                   r_max: Optional[int] = None
+                   ) -> Tuple[np.ndarray, np.ndarray]:
     """Logical-expert → physical-slot lookup tables from a slot permutation.
 
     ``perm``: (L, n_slots) int — logical expert held in each physical slot
     (entries ≥ n_experts are phantom padding; entries may repeat = replicas).
+    ``r_max`` optionally pins the copy-axis width (≥ the actual maximum
+    replica count) so successive placements with different replication
+    degrees keep identical table shapes — no recompile on recalibration.
     Returns ``slots_of`` (L, E, r_max) int32 (padded with the first copy so
     any hash lands on a valid slot) and ``n_copies`` (L, E) int32.
     """
@@ -125,7 +131,10 @@ def build_slots_of(perm: np.ndarray, n_experts: int,
                 counts[l, e] += 1
     if np.any(counts == 0):
         raise ValueError("some logical expert has no physical slot")
-    r_max = int(counts.max())
+    if r_max is None:
+        r_max = int(counts.max())
+    elif r_max < int(counts.max()):
+        raise ValueError(f"r_max={r_max} < max replica count {counts.max()}")
     slots_of = np.zeros((L, n_experts, r_max), dtype=np.int32)
     fill = np.zeros((L, n_experts), dtype=np.int32)
     for l in range(L):
@@ -137,3 +146,25 @@ def build_slots_of(perm: np.ndarray, n_experts: int,
         for e in range(n_experts):
             slots_of[l, e, counts[l, e]:] = slots_of[l, e, 0]
     return slots_of, counts
+
+
+def build_copy_cdf(perm: np.ndarray, n_experts: int, n_slots: int,
+                   share: Optional[np.ndarray] = None,
+                   r_max: Optional[int] = None) -> np.ndarray:
+    """Per-(layer, expert) cumulative copy-share table for weighted dispatch.
+
+    ``share``: (L, n_slots) per-slot traffic fraction aligned with ``perm``
+    (a ``ReplicatedPlacement.share``); None = uniform over each expert's
+    copies. Copies are enumerated in slot order — the same order
+    :func:`build_slots_of` lays them out, so ``cdf[l, e, r]`` is the
+    cumulative share of the copy held in ``slots_of[l, e, r]``; phantom
+    slots (ids ≥ E) take no share. Entries past the last copy are 1.0, so
+    inverse-CDF selection never lands on padding. Returns (L, E, r_max)
+    float32. Thin wrapper over the canonical
+    :func:`repro.core.placement.copy_share_cdf` so the solver and the
+    model seam share one table construction.
+    """
+    perm = np.atleast_2d(perm)
+    if perm.shape[1] != n_slots:
+        raise ValueError(f"perm has {perm.shape[1]} slots != {n_slots}")
+    return copy_share_cdf(perm, n_experts, share=share, r_max=r_max)

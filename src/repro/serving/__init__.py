@@ -3,7 +3,8 @@
 from .engine import Engine, EngineStats
 from .metrics import PAPER_SLOS, SLO, RequestRecord, goodput, slo_frontier, \
     summarize
-from .simulator import EPSimulator, LayerStats, SimConfig, rank_latency_matrix
+from .simulator import (EPSimulator, LayerStats, SimConfig,
+                        rank_latency_matrix, realized_rank_loads)
 from .workload import WORKLOADS, Request, WorkloadSpec, routing_profile, \
     sample_requests, step_loads
 
@@ -12,6 +13,7 @@ __all__ = [
     "PAPER_SLOS", "SLO", "RequestRecord", "goodput", "slo_frontier",
     "summarize",
     "EPSimulator", "LayerStats", "SimConfig", "rank_latency_matrix",
+    "realized_rank_loads",
     "WORKLOADS", "Request", "WorkloadSpec", "routing_profile",
     "sample_requests", "step_loads",
 ]

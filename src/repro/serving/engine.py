@@ -25,13 +25,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import ClusterVariability, Placement, ViBEController
+from repro.core import (ClusterVariability, Placement, ReplicatedPlacement,
+                        ViBEController)
 from repro.models import (ShardingRules, decode_fn, init_cache, init_params,
                           make_moe_tables, moe_perm_shape, prefill_fn)
 from repro.models.model import block_layout
 from repro.models.moe import apply_placement
 from .metrics import RequestRecord
-from .simulator import rank_latency_matrix
+from .simulator import rank_latency_matrix, realized_rank_loads
 from .workload import Request
 
 __all__ = ["Engine", "EngineStats"]
@@ -45,6 +46,7 @@ class EngineStats:
     migrations: int = 0
     migrated_slots: int = 0
     migration_bytes: int = 0
+    dropped_assignments: float = 0.0  # capacity-overflow drops (all layers)
     virtual_time: float = 0.0
 
 
@@ -56,6 +58,7 @@ class Engine:
                  controller: Optional[ViBEController] = None,
                  cluster: Optional[ClusterVariability] = None,
                  max_batch: int = 4, max_seq: int = 64,
+                 weighted_routing: bool = True,
                  seed: int = 0):
         self.cfg = cfg
         self.rules = rules
@@ -63,6 +66,12 @@ class Engine:
         self.cluster = cluster
         self.max_batch = max_batch
         self.max_seq = max_seq
+        # share-weighted replica routing: fold the controller placement's
+        # per-copy traffic shares into the dispatch tables so the model
+        # steers tokens the way the solver's latency objective assumes.
+        # False = share-oblivious uniform split over copies (same selector,
+        # flat CDF) — the A/B + regression knob.
+        self.weighted_routing = weighted_routing
         self.stats = EngineStats()
         key = jax.random.PRNGKey(seed)
         self.params = init_params(cfg, key, rules)
@@ -70,6 +79,8 @@ class Engine:
                                     if cfg.is_moe else (0, 0))
         self._perm = (np.tile(np.arange(self.n_slots, dtype=np.int32),
                               (self.n_moe, 1)) if cfg.is_moe else None)
+        self._share: Optional[np.ndarray] = None
+        self._r_max: Optional[int] = None
         if cfg.is_moe and controller is not None:
             # ViBE-R: when the controller's placement uses a slot budget
             # beyond one-per-expert (replicated copies), grow the stacked
@@ -78,11 +89,19 @@ class Engine:
             want = controller.placement.perm.shape[1]
             if want > self.n_slots:
                 self._expand_slots(want)
+            if isinstance(controller.placement, ReplicatedPlacement):
+                # pin the copy-axis width to its reachable maximum (≤ one
+                # copy per rank, ≤ spare slots + 1) so recalibrations that
+                # change replication degrees keep table shapes — and the
+                # compiled step functions — stable.
+                self._r_max = min(controller.G,
+                                  self.n_slots - controller.E + 1)
         if controller is not None:
             self._apply_perm(self._controller_perm(), charge=False)
-        self.moe_tables = make_moe_tables(
-            cfg, rules, perm=self._perm,
-            n_slots=self.n_slots) if cfg.is_moe else None
+        else:
+            self.moe_tables = make_moe_tables(
+                cfg, rules, perm=self._perm,
+                n_slots=self.n_slots) if cfg.is_moe else None
         self._prefill = jax.jit(prefill_fn(cfg, rules))
         self._decode = jax.jit(decode_fn(cfg, rules))
         # slot state
@@ -132,8 +151,32 @@ class Engine:
                              f"{(self.n_moe, self.n_slots)}")
         return perm
 
-    def _apply_perm(self, new_perm: np.ndarray, charge: bool = True) -> int:
-        """Migrate expert weights + slot tables to a new permutation."""
+    def _controller_share(self) -> Optional[np.ndarray]:
+        """Per-slot traffic shares of the controller's placement, or None.
+
+        None (singleton placements, or ``weighted_routing=False``) keeps the
+        uniform split over copies in the dispatch tables.
+        """
+        if self.controller is None or not self.weighted_routing:
+            return None
+        return getattr(self.controller.placement, "share", None)
+
+    _AUTO_SHARE = object()      # sentinel: derive from the controller
+
+    def _apply_perm(self, new_perm: np.ndarray, share=_AUTO_SHARE,
+                    charge: bool = True) -> int:
+        """Migrate expert weights + slot/share tables to a new placement.
+
+        ``share`` defaults to the controller placement's traffic shares
+        (respecting ``weighted_routing``) so dispatch tables and the
+        virtual clock can never desync; pass an explicit array (or None
+        for a uniform split) only to override. The share table rides along
+        exactly like the slot table: both are plain array inputs to the
+        jitted step functions (copy-axis width pinned via ``_r_max``), so
+        recalibration — including share-only changes — never recompiles.
+        """
+        if share is Engine._AUTO_SHARE:
+            share = self._controller_share()
         nb, specs = block_layout(self.cfg)
         m = self.n_moe // nb
         moved_total = 0
@@ -146,9 +189,12 @@ class Engine:
             self.params["blocks"][i]["ffn"] = {**leaf, **migrated}
             moved_total += moved
         self._perm = new_perm.copy()
+        self._share = None if share is None else np.array(share)
         self.moe_tables = make_moe_tables(self.cfg, self.rules,
                                           perm=self._perm,
-                                          n_slots=self.n_slots)
+                                          n_slots=self.n_slots,
+                                          share=self._share,
+                                          r_max=self._r_max)
         if charge:
             per_slot = 3 * self.cfg.d_model * self.cfg.moe_d_ff * 2
             self.stats.migrations += 1
@@ -167,25 +213,54 @@ class Engine:
     def _controller_tallies(self, tallies: np.ndarray) -> np.ndarray:
         """Pad router tallies (logical experts) to the controller's width.
 
-        Singleton controllers treat every physical slot as an expert
-        (phantoms see zero load); a ViBE-R controller works on logical
-        experts directly, so its width can be below the slot count."""
-        t = np.asarray(tallies, dtype=np.float64)
+        The model returns (n_moe, E+1) tallies — logical-expert counts plus
+        a capacity-dropped column (accounted in ``stats``, not load); strip
+        the drop column first. Singleton controllers treat every physical
+        slot as an expert (phantoms see zero load); a ViBE-R controller
+        works on logical experts directly, so its width can be below the
+        slot count."""
+        t = np.asarray(tallies, dtype=np.float64)[:, :self.cfg.n_experts]
         if t.shape[1] < self.controller.E:
             t = np.pad(t, ((0, 0), (0, self.controller.E - t.shape[1])))
         return t
 
     # -- virtual clock -------------------------------------------------------
 
+    def _clock_placement(self):
+        """The placement whose traffic split the virtual clock prices.
+
+        With weighted routing the dispatch follows the solver's shares, so
+        the clock prices the controller placement directly. With
+        ``weighted_routing=False`` the dispatch splits uniformly over
+        copies — pricing the solver's shares then would hide exactly the
+        gap the A/B knob exists to measure, so the clock uses a uniform-
+        share view of the same slot table (cached per placement object).
+        """
+        pl = self.controller.placement
+        if self.weighted_routing or not isinstance(pl, ReplicatedPlacement):
+            return pl
+        if getattr(self, "_uniform_clock_src", None) is not pl:
+            nc = pl.n_copies()
+            share = 1.0 / np.take_along_axis(nc, pl.slot_expert, axis=1)
+            self._uniform_clock_pl = ReplicatedPlacement(
+                pl.slot_expert, share, pl.n_ranks, pl.n_experts)
+            self._uniform_clock_src = pl
+        return self._uniform_clock_pl
+
     def _charge(self, tallies: np.ndarray, tokens: int) -> float:
-        """Advance virtual time using ground-truth cluster latencies."""
+        """Advance virtual time using ground-truth cluster latencies.
+
+        Loads are the *realized* token-granular split of the routing-mode
+        placement (``realized_rank_loads``), so the clock prices what the
+        dispatch tables actually did this step — weighted vs uniform
+        replica routing shows up in TTFT/TPOT, not just in the tables.
+        """
         if self.cluster is None or self.controller is None \
                 or not self.cfg.is_moe:
             dt = 1e-3 * max(tokens, 1)                  # trivial fallback
         else:
-            pl = self.controller.placement
             t = self._controller_tallies(tallies)
-            rank_load = pl.rank_loads(t)
+            rank_load = realized_rank_loads(self._clock_placement(), t)
             dt = float(rank_latency_matrix(self.cluster, rank_load).max(1).sum())
         self.stats.virtual_time += dt
         return dt
@@ -237,6 +312,8 @@ class Engine:
             self.slot_req[slot] = r
             self.slot_left[slot] = r.output_len - 1
             tall = np.asarray(tallies)
+            if self.cfg.is_moe and tall.size:
+                self.stats.dropped_assignments += float(tall[:, -1].sum())
             dt = self._charge(tall, r.prompt_len)
             self._observe(tall, float(r.prompt_len))
             rec = self.records[r.req_id]
@@ -258,6 +335,8 @@ class Engine:
         nxt = jnp.argmax(logits, -1).astype(jnp.int32)
         self.tokens = nxt[:, None]
         tall = np.asarray(tallies)
+        if self.cfg.is_moe and tall.size:
+            self.stats.dropped_assignments += float(tall[:, -1].sum())
         self._charge(tall, len(active))
         self._observe(tall, float(len(active)))
         for b in active:

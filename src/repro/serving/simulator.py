@@ -29,11 +29,13 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import (ClusterVariability, PerfModel, Placement,
                         ViBEController)
+from repro.core.placement import copy_enumeration
 from .metrics import RequestRecord
 from .workload import (Request, WorkloadSpec, routing_profile, step_loads,
                        topic_loadings)
 
-__all__ = ["SimConfig", "EPSimulator", "rank_latency_matrix", "LayerStats"]
+__all__ = ["SimConfig", "EPSimulator", "rank_latency_matrix", "LayerStats",
+           "realized_rank_loads"]
 
 
 # ---------------------------------------------------------------------------
@@ -61,6 +63,61 @@ def rank_latency_matrix(cluster: ClusterVariability, n_lg: np.ndarray,
     if rng is not None and cluster.jitter_sigma > 0:
         t = t * (1.0 + rng.normal(0.0, cluster.jitter_sigma, size=t.shape))
     return np.maximum(t, 1e-9)
+
+
+def realized_rank_loads(placement, loads: np.ndarray) -> np.ndarray:
+    """(L, E) expert loads → (L, G) per-rank loads as *dispatch* realizes them.
+
+    ``Placement.rank_loads`` scores the solver's intended split — for a
+    ``ReplicatedPlacement`` that means fractional tokens per copy. The real
+    model layer sends whole tokens: each assignment picks one copy by
+    inverse-CDF over the share table (models/moe.py ``_select_slots``).
+    This scores that token-granular dispatch: each expert's integer load is
+    apportioned over its copies by largest-remainder rounding of the shares
+    — the allocation the hash-based selection converges to, exact to ±1
+    token per copy. Singleton placements pass through unchanged (one copy
+    holds all of an expert's tokens either way), so the function is
+    placement-representation-agnostic like ``rank_latency_matrix``.
+
+    Fully vectorized (this runs per simulated step, and the engine's
+    virtual clock calls it per engine step): copies are grouped with the
+    canonical ``copy_enumeration``, and the largest-remainder top-up is a
+    second in-run ranking by descending fractional part.
+    """
+    loads = np.atleast_2d(np.asarray(loads, dtype=np.float64))
+    share = getattr(placement, "share", None)
+    if share is None:
+        return placement.rank_loads(loads)
+    se = placement.slot_expert
+    L, S = se.shape
+    E = placement.n_experts
+    rows = np.arange(L)[:, None]
+    order, e_sorted, _ = copy_enumeration(se)
+    sh = np.take_along_axis(share, order, axis=1)
+    denom = np.zeros((L, E))
+    np.add.at(denom, (rows, e_sorted), sh)
+    exact = sh / denom[rows, e_sorted] * loads[rows, e_sorted]
+    base = np.floor(exact)
+    base_sum = np.zeros((L, E))
+    np.add.at(base_sum, (rows, e_sorted), base)
+    rem = np.maximum(np.round(loads - base_sum), 0.0)      # leftovers (L, E)
+    # rank copies within each expert's run by descending fractional part
+    # (stable → slot order breaks ties, matching the copy axis); the first
+    # rem[l, e] of them absorb one leftover token each
+    frac = exact - base
+    key = e_sorted.astype(np.float64) * 2.0 + (1.0 - frac)
+    ford = np.argsort(key, axis=1, kind="stable")
+    e_f = np.take_along_axis(e_sorted, ford, axis=1)
+    pos = np.arange(S)[None, :]
+    new_run = np.concatenate(
+        [np.ones((L, 1), bool), e_f[:, 1:] != e_f[:, :-1]], axis=1)
+    run_start = np.maximum.accumulate(np.where(new_run, pos, 0), axis=1)
+    bump = ((pos - run_start) < rem[rows, e_f]).astype(np.float64)
+    slot_tok = np.zeros((L, S))
+    slot_tok[rows, np.take_along_axis(order, ford, axis=1)] = \
+        np.take_along_axis(base, ford, axis=1) + bump
+    return slot_tok.reshape(L, placement.n_ranks,
+                            placement.slots_per_rank).sum(axis=2)
 
 
 @dataclasses.dataclass
@@ -96,6 +153,9 @@ class SimConfig:
     act_bytes: float = 1.0           # a2a payload bytes/elem (FP8, Table 2a)
     attn_flops_scale: float = 0.35   # MLA-compression adjustment (DESIGN §4)
     poisson_loads: bool = True       # Poisson approx to multinomial (fast)
+    realized_loads: bool = False     # score token-granular dispatched loads
+    # (realized_rank_loads) instead of the solver's fractional copy shares —
+    # makes the simulator's per-rank traffic match model-layer dispatch
     record_layer_stats: bool = False
     migration_overhead: float = 2e-3 # fixed coordination cost per rearrange
     step_overhead: float = 8e-3      # engine scheduling/launch cost per step
@@ -194,7 +254,11 @@ class EPSimulator:
         # replica-aware dispatch: ReplicatedPlacement splits each expert's
         # tokens over its copies (speed-proportional shares); singleton
         # placements map expert→rank one-to-one. Same call either way.
-        rank_load = pl.rank_loads(loads)                         # (L, G)
+        # ``realized_loads`` swaps the fractional split for the
+        # token-granular one the model-layer dispatch actually produces.
+        rank_load = (realized_rank_loads(pl, loads)
+                     if self.cfg.realized_loads
+                     else pl.rank_loads(loads))                  # (L, G)
         rank_time = rank_latency_matrix(self.cluster, rank_load, self.rng)
         layer_t = rank_time.max(axis=1)
         moe_t = float(layer_t.sum())

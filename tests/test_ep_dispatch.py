@@ -20,7 +20,8 @@ sys.path.insert(0, os.environ['REPRO_SRC'])
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro import compat
-from repro.models.sharding import ShardingRules, build_slots_of
+from repro.models.sharding import ShardingRules, build_copy_cdf, \
+    build_slots_of
 from repro.models import moe as MOE
 
 set_mesh = compat.use_mesh
@@ -121,6 +122,44 @@ with set_mesh(mesh):
 err = float(jnp.abs(y_ref3.astype(jnp.float32) - y3.astype(jnp.float32)).max())
 assert err < 1e-6, f'phantom: {err}'
 print('phantom padding: OK')
+
+# 8. share-weighted replica routing == dense oracle on both production paths
+# 24 slots: experts 0..15 plus replicas of 0..7 with skewed 0.25/0.75 shares
+ns8 = 24
+perm8 = np.concatenate([np.arange(E), np.arange(8)])[None, :].astype(np.int32)
+p8 = {k: (v if k == 'router' else v[perm8[0]]) for k, v in p.items()}
+share8 = np.ones((1, ns8))
+share8[0, :8] = 0.25
+share8[0, 16:] = 0.75
+so8, nc8 = build_slots_of(perm8, E, ns8)
+cdf8 = build_copy_cdf(perm8, E, ns8, share=share8)
+with set_mesh(mesh):
+    y8, t8, _ = jax.jit(lambda p8, x: MOE.moe_layer(
+        p8, x, top_k=K, n_experts=E, rules=rules,
+        slots_of=jnp.asarray(so8[0]), n_copies=jnp.asarray(nc8[0]),
+        copy_cdf=jnp.asarray(cdf8[0]), phase='train'))(p8, x)
+check('a2a+weighted', y8, t8)
+rules8r = ShardingRules(mesh=mesh, dp=('data',), ep=('model',),
+                        ep_all=('data', 'model'), fsdp=None,
+                        moe_dispatch='replicated', capacity_factor=8.0)
+with set_mesh(mesh):
+    y8r, t8r, _ = jax.jit(lambda p8, x: MOE.moe_layer(
+        p8, x, top_k=K, n_experts=E, rules=rules8r,
+        slots_of=jnp.asarray(so8[0]), n_copies=jnp.asarray(nc8[0]),
+        copy_cdf=jnp.asarray(cdf8[0]), phase='decode'))(p8, x)
+check('replicated+weighted', y8r, t8r)
+
+# 9. capacity drops surface in the tally's final column (a2a, starved cf;
+# long sequence so per-device buckets can exceed the rounded-up capacity)
+x9 = jax.random.normal(jax.random.PRNGKey(3), (4, 32, D)).astype(jnp.bfloat16)
+rules9 = ShardingRules(mesh=mesh, dp=('data',), ep=('model',), fsdp=None,
+                       capacity_factor=0.25)
+with set_mesh(mesh):
+    _, t9, _ = jax.jit(lambda p, x: MOE.moe_layer(
+        p, x, top_k=K, n_experts=E, rules=rules9, phase='train'))(p, x9)
+assert float(t9[-1]) > 0, 'starved capacity produced no drops'
+assert float(jnp.sum(t9[:E])) == x9.shape[0] * x9.shape[1] * K
+print(f'capacity drop column: OK ({float(t9[-1]):.0f} dropped)')
 
 print('ALL_EP_CHECKS_PASSED')
 """

@@ -60,12 +60,15 @@ def test_arch_smoke_train_step(arch):
     if cfg.is_moe:
         nb, specs = block_layout(cfg)
         n_moe = nb * sum(1 for s in specs if s.ffn == "moe")
-        assert tallies.shape == (n_moe, cfg.n_experts)
+        # logical-expert counts + capacity-dropped-assignment column
+        assert tallies.shape == (n_moe, cfg.n_experts + 1)
+        assert (np.asarray(tallies)[:, -1] == 0).all()   # dense never drops
         # every token routed top_k times per MoE layer
         t = batch.get("tokens", batch.get("feats"))
-        np.testing.assert_allclose(np.asarray(tallies).sum(1),
+        logical = np.asarray(tallies)[:, :cfg.n_experts]
+        np.testing.assert_allclose(logical.sum(1),
                                    t.shape[0] * t.shape[1] * cfg.top_k
-                                   if "tokens" in batch else tallies.sum(1))
+                                   if "tokens" in batch else logical.sum(1))
     # one optimizer step runs
     opt = adamw_init(params)
     new_params, _ = adamw_update(grads, opt, params)

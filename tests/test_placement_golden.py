@@ -1,0 +1,114 @@
+"""Golden regression fixture for the ViBE-R solver + validation coverage.
+
+The placement, per-copy traffic shares, and predicted max-layer latency for
+a fixed small fixture are checked in verbatim: a solver refactor that
+changes tie-breaking, share computation, or the slot layout — even while
+still "optimal" — fails here and must update the goldens *deliberately*.
+Perf models are synthetic affine curves (not cluster-calibrated) so the
+fixture is immune to profiling-harness changes.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (PerfModel, ReplicatedPlacement,
+                        predicted_rank_latencies, vibe_r_placement)
+
+
+def affine_perf(slopes, base=5e-4):
+    return [PerfModel(knots=np.array([0.0, 1e6]),
+                      lat=np.array([base, base + s * 1e6]), device_id=g)
+            for g, s in enumerate(slopes)]
+
+
+GOLDEN_W = np.array([
+    [4000., 2500., 150., 900., 300., 80., 60., 10.],
+    [120., 40., 5000., 700., 2200., 350., 90., 500.],
+])
+GOLDEN_SLOPES = [1e-8, 2e-8, 4e-8, 8e-8]
+GOLDEN_SLOT_EXPERT = np.array([
+    [0, 1, 6, 0, 1, 7, 0, 3, 5, 0, 2, 4],
+    [2, 4, 6, 1, 2, 4, 2, 3, 5, 0, 2, 7],
+], dtype=np.int32)
+GOLDEN_SHARE = np.array([
+    [0.2741683909, 0.5094339623, 1.0, 0.2640140060, 0.4905660377, 1.0,
+     0.2458061436, 1.0, 1.0, 0.2160114595, 1.0, 1.0],
+    [0.2768019609, 0.5105386417, 1.0, 1.0, 0.2653743570, 0.4894613583,
+     0.2451339400, 1.0, 1.0, 1.0, 0.2126897420, 1.0],
+])
+GOLDEN_MAX_LATENCY = np.array([0.0006051237, 0.0006346759])
+
+
+def test_vibe_r_solver_golden_fixture():
+    perf = affine_perf(GOLDEN_SLOPES)
+    rp = vibe_r_placement(GOLDEN_W, perf, slots_per_rank=3)
+    np.testing.assert_array_equal(rp.slot_expert, GOLDEN_SLOT_EXPERT)
+    np.testing.assert_allclose(rp.share, GOLDEN_SHARE, atol=1e-9)
+    lat = predicted_rank_latencies(rp, GOLDEN_W, perf)
+    np.testing.assert_allclose(lat.max(1), GOLDEN_MAX_LATENCY, rtol=1e-6)
+
+
+def test_golden_fixture_is_share_skewed():
+    """Sanity on the fixture itself: it must exercise non-uniform shares
+    (otherwise it can't catch a regression in the share computation)."""
+    replicated = GOLDEN_SHARE[GOLDEN_SHARE < 1.0]
+    assert replicated.size > 0
+    assert replicated.max() / replicated.min() > 2.0
+
+
+# ---------------------------------------------------------------------------
+# ReplicatedPlacement.__post_init__ validation error paths
+# ---------------------------------------------------------------------------
+
+class TestReplicatedPlacementValidation:
+    def _ok(self):
+        # 2 experts on 2 ranks, expert 0 replicated into the spare slots
+        se = np.array([[0, 1, 0, 1]])
+        sh = np.array([[0.75, 1.0, 0.25, 0.0]])
+        return se, sh
+
+    def test_valid_baseline(self):
+        se, sh = self._ok()
+        rp = ReplicatedPlacement(se, sh, n_ranks=2, n_experts=2)
+        np.testing.assert_array_equal(rp.n_copies(), [[2, 2]])
+
+    def test_shares_must_sum_to_one(self):
+        se, sh = self._ok()
+        for bad in (sh * 0.5, sh * 2.0, sh + 0.01):
+            with pytest.raises(ValueError,
+                               match="copy shares must sum to 1"):
+                ReplicatedPlacement(se, bad, n_ranks=2, n_experts=2)
+
+    def test_negative_share_rejected(self):
+        se = np.array([[0, 1, 0, 1]])
+        sh = np.array([[1.25, 1.0, -0.25, 0.0]])
+        with pytest.raises(ValueError, match="negative copy share"):
+            ReplicatedPlacement(se, sh, n_ranks=2, n_experts=2)
+
+    def test_shape_mismatch_rejected(self):
+        with pytest.raises(ValueError, match="!= share"):
+            ReplicatedPlacement(np.array([[0, 1]]),
+                                np.array([[0.5, 0.25, 0.25]]),
+                                n_ranks=2, n_experts=2)
+
+    def test_slot_count_must_divide_ranks(self):
+        with pytest.raises(ValueError, match="not divisible"):
+            ReplicatedPlacement(np.array([[0, 1, 0]]),
+                                np.array([[0.5, 1.0, 0.5]]),
+                                n_ranks=2, n_experts=2)
+
+    def test_expert_ids_in_range(self):
+        with pytest.raises(ValueError, match="outside"):
+            ReplicatedPlacement(np.array([[0, 2]]), np.array([[1.0, 1.0]]),
+                                n_ranks=2, n_experts=2)
+
+    def test_every_expert_needs_a_slot(self):
+        with pytest.raises(ValueError, match="no physical slot"):
+            ReplicatedPlacement(np.array([[0, 0]]), np.array([[0.5, 0.5]]),
+                                n_ranks=2, n_experts=2)
+
+    def test_copy_shares_r_max_too_small(self):
+        se, sh = self._ok()
+        rp = ReplicatedPlacement(se, sh, n_ranks=2, n_experts=2)
+        with pytest.raises(ValueError, match="r_max"):
+            rp.copy_shares(r_max=1)

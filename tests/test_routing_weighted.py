@@ -1,0 +1,231 @@
+"""Property tests for share-weighted replica selection (models/moe.py).
+
+Runs under real hypothesis in CI and under tests/_hypothesis_fallback.py in
+containers without it (conftest registers the shim). Properties:
+
+* inverse-CDF selection is a pure function — deterministic for fixed inputs;
+* it matches an independent numpy searchsorted reference;
+* it degenerates to the singleton path when ``r_max == 1``;
+* realized per-copy traffic converges to the solver's shares (bounded TV
+  distance, shrinking with token count — heavy sweep marked ``slow``).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PerfModel, reweight_shares_by_speed, vibe_r_placement
+from repro.models import build_copy_cdf, build_slots_of
+from repro.models.moe import _assignment_uniforms, _select_slots
+
+
+def affine_perf(slopes, base=5e-4):
+    return [PerfModel(knots=np.array([0.0, 1e6]),
+                      lat=np.array([base, base + s * 1e6]), device_id=g)
+            for g, s in enumerate(slopes)]
+
+
+def random_tables(rng, E, r_max):
+    """Random slots_of / n_copies / copy_cdf with skewed per-copy shares."""
+    n_copies = rng.integers(1, r_max + 1, size=E).astype(np.int32)
+    slots_of = np.zeros((E, r_max), np.int32)
+    slot = 0
+    for e in range(E):
+        for r in range(int(n_copies[e])):
+            slots_of[e, r] = slot
+            slot += 1
+        slots_of[e, n_copies[e]:] = slots_of[e, 0]
+    shares = rng.dirichlet(np.full(r_max, 0.5), size=E)
+    cdf = np.ones((E, r_max), np.float32)
+    for e in range(E):
+        c = int(n_copies[e])
+        s = shares[e, :c] / shares[e, :c].sum()
+        cdf[e, :c] = np.cumsum(s)
+        cdf[e, c - 1:] = 1.0
+    return slots_of, n_copies, cdf
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), E=st.sampled_from([4, 8, 16]),
+       r_max=st.integers(2, 4))
+def test_selection_matches_searchsorted_reference(seed, E, r_max):
+    """The jnp inverse-CDF pick equals a literal numpy searchsorted over the
+    same deterministic uniforms — independent reimplementation check."""
+    rng = np.random.default_rng(seed)
+    slots_of, n_copies, cdf = random_tables(rng, E, r_max)
+    t, K = 512, 2
+    idx = rng.integers(0, E, size=(t, K)).astype(np.int32)
+    got = np.asarray(_select_slots(jnp.asarray(idx), jnp.asarray(slots_of),
+                                   jnp.asarray(n_copies), jnp.asarray(cdf)))
+    u = np.asarray(_assignment_uniforms(t, K))
+    copy = np.empty((t, K), np.int64)
+    for i in range(t):
+        for k in range(K):
+            copy[i, k] = np.searchsorted(cdf[idx[i, k]], u[i, k],
+                                         side="right")
+    copy = np.minimum(copy, n_copies[idx] - 1)
+    np.testing.assert_array_equal(got, slots_of[idx, copy])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_selection_deterministic(seed):
+    rng = np.random.default_rng(seed)
+    slots_of, n_copies, cdf = random_tables(rng, 8, 3)
+    idx = rng.integers(0, 8, size=(256, 4)).astype(np.int32)
+    args = (jnp.asarray(idx), jnp.asarray(slots_of), jnp.asarray(n_copies),
+            jnp.asarray(cdf))
+    np.testing.assert_array_equal(np.asarray(_select_slots(*args)),
+                                  np.asarray(_select_slots(*args)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), E=st.sampled_from([4, 16]))
+def test_singleton_degenerates_to_direct_lookup(seed, E):
+    """r_max == 1: weighted, uniform-hash, and direct lookup all coincide."""
+    rng = np.random.default_rng(seed)
+    slots_of = rng.permutation(E).astype(np.int32)[:, None]
+    n_copies = np.ones(E, np.int32)
+    cdf = np.ones((E, 1), np.float32)
+    idx = rng.integers(0, E, size=(128, 2)).astype(np.int32)
+    want = slots_of[:, 0][idx]
+    for c in (jnp.asarray(cdf), None):
+        got = np.asarray(_select_slots(jnp.asarray(idx),
+                                       jnp.asarray(slots_of),
+                                       jnp.asarray(n_copies), c))
+        np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_realized_copy_traffic_converges_to_shares(seed):
+    """Bounded TV distance: the realized per-copy split of each expert's
+    traffic lands within a few sigma of the share table."""
+    rng = np.random.default_rng(seed)
+    E, r_max = 8, 4
+    slots_of, n_copies, cdf = random_tables(rng, E, r_max)
+    t, K = 20_000, 2
+    idx = rng.integers(0, E, size=(t, K)).astype(np.int32)
+    slots = np.asarray(_select_slots(jnp.asarray(idx), jnp.asarray(slots_of),
+                                     jnp.asarray(n_copies),
+                                     jnp.asarray(cdf)))
+    counts = np.bincount(slots.ravel(), minlength=int(n_copies.sum()))
+    for e in range(E):
+        c = int(n_copies[e])
+        if c == 1:
+            continue
+        got = counts[slots_of[e, :c]].astype(float)
+        n = got.sum()
+        share = np.diff(np.concatenate([[0.0], cdf[e, :c]]))
+        tv = 0.5 * np.abs(got / n - share / share.sum()).sum()
+        assert tv < 0.03, (e, tv)
+
+
+@pytest.mark.slow
+def test_convergence_sweep_tv_shrinks_with_tokens():
+    """The heavy sweep: TV distance to the share table decays as the token
+    count grows (hash equidistribution, not luck)."""
+    rng = np.random.default_rng(0)
+    E, r_max = 8, 4
+    slots_of, n_copies, cdf = random_tables(rng, E, r_max)
+    share = np.diff(np.concatenate([np.zeros((E, 1)), cdf], axis=1), axis=1)
+
+    def worst_tv(t):
+        idx = rng.integers(0, E, size=(t, 2)).astype(np.int32)
+        slots = np.asarray(_select_slots(
+            jnp.asarray(idx), jnp.asarray(slots_of),
+            jnp.asarray(n_copies), jnp.asarray(cdf)))
+        counts = np.bincount(slots.ravel(),
+                             minlength=int(n_copies.sum())).astype(float)
+        tvs = []
+        for e in range(E):
+            c = int(n_copies[e])
+            if c == 1:
+                continue
+            got = counts[slots_of[e, :c]]
+            sh = share[e, :c] / share[e, :c].sum()
+            tvs.append(0.5 * np.abs(got / got.sum() - sh).sum())
+        return max(tvs)
+
+    tv = [worst_tv(t) for t in (2_000, 16_000, 128_000)]
+    assert tv[-1] < tv[0], tv
+    assert tv[-1] < 0.01, tv
+
+
+def test_route_seed_converges_decode_sized_batches():
+    """The decode regime: a handful of assignments per step. With a fixed
+    seed the same uniforms replay forever and the realized split stays
+    quantized; a per-step seed re-draws them, so traffic aggregated across
+    steps converges to the share table."""
+    import jax
+
+    slots_of = np.array([[0, 1], [2, 3]], np.int32)
+    n_copies = np.array([2, 2], np.int32)
+    cdf = np.array([[0.8, 1.0], [0.7, 1.0]], np.float32)
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, 2, size=(4, 2)).astype(np.int32)   # 8 assignments
+    sel = jax.jit(_select_slots)
+
+    def run(seed):
+        return np.bincount(np.asarray(sel(
+            jnp.asarray(idx), jnp.asarray(slots_of), jnp.asarray(n_copies),
+            jnp.asarray(cdf), jnp.int32(seed))).ravel(), minlength=4)
+
+    steps = 400
+    varying = sum(run(s) for s in range(steps))
+    fixed = sum(run(0) for _ in range(steps))
+    # fixed seed: every step replays step 0 exactly — no convergence
+    np.testing.assert_array_equal(fixed, steps * run(0))
+    # varying seed: expert 0's copy split approaches its 0.8 / 0.2 shares
+    share0 = varying[0] / (varying[0] + varying[1])
+    assert abs(share0 - 0.8) < 0.05, share0
+    share1 = varying[2] / (varying[2] + varying[3])
+    assert abs(share1 - 0.7) < 0.05, share1
+
+
+# ---------------------------------------------------------------------------
+# share reweighting after incremental swaps
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_reweight_shares_by_speed_invariants(seed):
+    """Reweighting re-proportions shares to the ranks copies sit on: sums
+    stay 1 per expert, the slot table is untouched, and within an expert
+    the share ordering follows rank speed."""
+    rng = np.random.default_rng(seed)
+    G, E, L = 4, 16, 2
+    perf = affine_perf([1e-8, 2e-8, 4e-8, 8e-8])
+    w = rng.random((L, E)) * 50_000 + 1
+    rp = vibe_r_placement(w, perf, slots_per_rank=6)
+    rw = reweight_shares_by_speed(rp, w, perf)
+    np.testing.assert_array_equal(rw.slot_expert, rp.slot_expert)
+    np.testing.assert_array_equal(rw.n_copies(), rp.n_copies())
+    rank_of = np.arange(rp.n_slots) // rp.slots_per_rank
+    for l in range(L):
+        for e in range(E):
+            slots = np.flatnonzero(rw.slot_expert[l] == e)
+            if slots.size < 2:
+                continue
+            sh = rw.share[l, slots]
+            # affine f_g with increasing slope → rank 0 fastest: the copy on
+            # the lower-slope rank must carry the larger share
+            order = np.argsort(rank_of[slots])
+            assert (np.diff(sh[order]) <= 1e-12).all(), (l, e, sh)
+
+
+def test_incremental_update_reweight_opt_in():
+    from repro.core import incremental_update_replicated
+
+    rng = np.random.default_rng(4)
+    perf = affine_perf([1e-8, 2e-8, 4e-8, 8e-8])
+    w0 = rng.random((3, 16)) * 50_000 + 1
+    rp = vibe_r_placement(w0, perf, slots_per_rank=6)
+    w1 = np.roll(w0, 5, axis=1)
+    res = incremental_update_replicated(rp, w1, perf, reweight_shares=True)
+    new = res.placement
+    np.testing.assert_array_equal(new.n_copies(), rp.n_copies())
+    want = reweight_shares_by_speed(
+        incremental_update_replicated(rp, w1, perf).placement, w1, perf)
+    np.testing.assert_allclose(new.share, want.share, atol=1e-12)
