@@ -7,14 +7,16 @@ per-GPU busy-share (frequency proxy) tightens under ViBE.
 import numpy as np
 
 from repro.serving import sample_requests, WORKLOADS
-from .common import POLICIES, emit, make_sim
+from repro.core import registered_policies
+
+from .common import emit, make_sim
 
 
 def run(model="deepseek-v3-671b", workload="sonnet", quick=True):
     rows = []
     med_gap = {}
     avg_moe = {}
-    for policy in POLICIES:
+    for policy in registered_policies():
         sim = make_sim(model, workload, policy, seed=1, record_layers=True)
         reqs = sample_requests(WORKLOADS[workload], 120 if quick else 400,
                                qps=20.0, seed=2)

@@ -10,7 +10,9 @@ import numpy as np
 from repro.serving import PAPER_SLOS, WORKLOADS, goodput, sample_requests, \
     slo_frontier
 from repro.serving.simulator import rank_latency_matrix
-from .common import POLICIES, emit, make_sim, paper_cluster, qps_grid
+from repro.core import registered_policies
+
+from .common import emit, make_sim, paper_cluster, qps_grid
 
 
 def run(model="deepseek-v3-671b", workload="sonnet", quick=True):
@@ -26,7 +28,7 @@ def run(model="deepseek-v3-671b", workload="sonnet", quick=True):
         })
         grid = qps_grid(model, workload, cluster)
         frontiers = {}
-        for policy in POLICIES:
+        for policy in registered_policies():
             g2q = {}
             for qps in grid:
                 sim = make_sim(model, workload, policy, regime=regime,

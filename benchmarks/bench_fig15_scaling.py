@@ -10,12 +10,18 @@ ViBE-R extends the sweep past that convergence point: with one spare slot
 per rank for hot-expert replicas, the straggler-vs-freedom trade-off bends
 back — replicated copies absorb the skew that singleton placement can no
 longer spread once experts-per-rank gets small.
+
+The policy set is *enumerated from the registry* (repro.core.policy):
+registering a new placement policy adds it to this sweep — including the
+GEM-style and HarMoEny-style related-work baselines — with no per-policy
+special-casing here (capability flags decide what each solve consumes).
 """
 
 import numpy as np
 
 from repro.configs import get
-from repro.core import make_cluster, solve_model_placement
+from repro.core import (SolveContext, get_policy, make_cluster,
+                        registered_policies)
 from repro.serving import WORKLOADS, routing_profile
 from repro.serving.simulator import rank_latency_matrix
 from .common import PROFILE_TOKENS, emit
@@ -26,7 +32,7 @@ def run(model="deepseek-v3-671b", workload="sharegpt", quick=True,
     m = get(model)
     L, E = m._n_moe_layers(), m.n_experts
     spec = WORKLOADS[workload]
-    policies = ("contiguous", "eplb", "vibe", "vibe_r")
+    policies = registered_policies()
     rows = []
     for ep in (8, 16, 32, 64, 128):
         if E % ep:
@@ -44,12 +50,13 @@ def run(model="deepseek-v3-671b", workload="sharegpt", quick=True,
             # paper's projection methodology: static profiled loads +
             # per-invocation jitter, tail over repeated layer executions
             for policy in policies:
-                # vibe_r: solver default slot budget (one spare replica
-                # slot per rank — default_slots_per_rank)
-                pl = solve_model_placement(
-                    policy, W, ep,
-                    perf_models=(perf if policy in ("vibe", "vibe_r")
-                                 else None))
+                # replication-capable policies run their default slot
+                # budget (one spare replica slot per rank)
+                pol = get_policy(policy)
+                pl = pol.solve(SolveContext(
+                    w=W, n_ranks=ep,
+                    perf_models=(perf if pol.capabilities.needs_perf_models
+                                 else None)))
                 rank_load = pl.rank_loads(W)
                 maxes = [rank_latency_matrix(cluster, rank_load,
                                              rng=rng).max(1)
@@ -58,16 +65,15 @@ def run(model="deepseek-v3-671b", workload="sharegpt", quick=True,
                     float(np.percentile(np.concatenate(maxes), 99)))
             gain.append(tail["eplb"][-1] / tail["vibe"][-1] - 1)
             gain_r.append(tail["vibe"][-1] / tail["vibe_r"][-1] - 1)
-        rows.append({
+        row = {
             "bench": "fig15", "label": f"EP{ep}",
             "ep": ep, "experts_per_rank": E // ep,
-            "p99_layer_ms_contiguous": 1e3 * float(np.mean(tail["contiguous"])),
-            "p99_layer_ms_eplb": 1e3 * float(np.mean(tail["eplb"])),
-            "p99_layer_ms_vibe": 1e3 * float(np.mean(tail["vibe"])),
-            "p99_layer_ms_vibe_r": 1e3 * float(np.mean(tail["vibe_r"])),
             "vibe_gain_over_eplb_pct": 100 * float(np.mean(gain)),
             "vibe_r_gain_over_vibe_pct": 100 * float(np.mean(gain_r)),
-        })
+        }
+        row.update({f"p99_layer_ms_{p}": 1e3 * float(np.mean(tail[p]))
+                    for p in policies})
+        rows.append(row)
     emit(rows, "fig15_scaling")
     return rows
 

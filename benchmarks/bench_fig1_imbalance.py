@@ -8,14 +8,16 @@ imbalance; ViBE targets the latency-balanced regime.
 import numpy as np
 
 from repro.serving.simulator import rank_latency_matrix
-from .common import POLICIES, emit, paper_cluster, placement_for, profile_W
+from repro.core import registered_policies
+
+from .common import emit, paper_cluster, placement_for, profile_W
 
 
 def run(model="deepseek-v3-671b", workload="sonnet", quick=True):
     cluster = paper_cluster(model, "mi325x")
     W = profile_W(model, workload)
     rows = []
-    for policy in POLICIES:
+    for policy in registered_policies():
         pl = placement_for(policy, model, workload, cluster)
         loads = pl.rank_loads(W)
         lat = rank_latency_matrix(cluster, loads)

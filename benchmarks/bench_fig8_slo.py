@@ -7,7 +7,9 @@ figures share one sweep).
 
 from repro.serving import PAPER_SLOS, goodput, sample_requests, \
     slo_frontier, summarize, WORKLOADS
-from .common import MODELS, POLICIES, emit, make_sim, qps_grid
+from repro.core import registered_policies
+
+from .common import MODELS, emit, make_sim, qps_grid
 
 
 def run(quick=True, phase="prefill"):
@@ -19,7 +21,7 @@ def run(quick=True, phase="prefill"):
         slo = PAPER_SLOS[(workload, model)]
         grid = qps_grid(model, workload)
         frontiers = {}
-        for policy in POLICIES:
+        for policy in registered_policies():
             g2q = {}
             for qps in grid:
                 sim = make_sim(model, workload, policy, seed=1)

@@ -20,7 +20,7 @@ import time
 import numpy as np
 
 from repro.core import (default_slots_per_rank, layer_latency_span,
-                        make_cluster, solve_model_placement)
+                        make_cluster, vibe_r_placement)
 from repro.core.placement import (_greedy_target_assign, _speed_targets,
                                   vibe_placement)
 from .common import emit
@@ -57,10 +57,9 @@ def run(quick=True, seed=0):
         W = zipf_activation(L, E, seed=seed)
         s_loc = default_slots_per_rank(E, G)   # one replica slot per rank
 
-        t_vibe = _time(lambda: solve_model_placement(
-            "vibe", W, G, perf_models=perf))
-        t_vibe_r = _time(lambda: solve_model_placement(
-            "vibe_r", W, G, perf_models=perf, slots_per_rank=s_loc))
+        t_vibe = _time(lambda: vibe_placement(W, perf))
+        t_vibe_r = _time(lambda: vibe_r_placement(W, perf,
+                                                  slots_per_rank=s_loc))
 
         # per-layer reference greedy (the pre-vectorization code path)
         def legacy():
@@ -70,8 +69,7 @@ def run(quick=True, seed=0):
         t_legacy = _time(legacy, repeats=1)
 
         pv = vibe_placement(W, perf)
-        pr = solve_model_placement("vibe_r", W, G, perf_models=perf,
-                                   slots_per_rank=s_loc)
+        pr = vibe_r_placement(W, perf, slots_per_rank=s_loc)
         span_v = layer_latency_span(pv, W, perf)[:, 0]
         span_r = layer_latency_span(pr, W, perf)[:, 0]
         rows.append({

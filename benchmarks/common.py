@@ -15,15 +15,12 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.configs import get
-from repro.core import (ClusterVariability, DriftConfig, ViBEConfig,
-                        ViBEController, make_cluster, solve_model_placement)
+from repro.core import (ClusterVariability, DriftConfig, SolveContext,
+                        ViBEConfig, ViBEController, get_policy, make_cluster)
 from repro.serving import (EPSimulator, PAPER_SLOS, SimConfig, WORKLOADS,
                            goodput, routing_profile, sample_requests,
                            slo_frontier, summarize)
 
-POLICIES = ("contiguous", "eplb", "vibe", "vibe_r")
-#: policies that consume per-device performance models
-PERF_POLICIES = ("vibe", "vibe_r")
 MODELS = ("deepseek-v3-671b", "qwen3-moe-235b-a22b")
 PROFILE_TOKENS = 16_384            # paper's stressed operating point
 
@@ -45,13 +42,17 @@ def profile_W(model_name: str, workload: str, ep: int = 8) -> np.ndarray:
 
 def placement_for(policy: str, model_name: str, workload: str,
                   cluster: ClusterVariability, ep: int = 8,
-                  slots_per_rank: Optional[int] = None):
+                  slots_per_rank=None):
+    """Registry-driven solve: capabilities decide what the context carries
+    (no per-policy special-casing)."""
     W = profile_W(model_name, workload, ep)
-    perf = cluster.fit_models()
-    return solve_model_placement(
-        policy, W, ep,
-        perf_models=perf if policy in PERF_POLICIES else None,
-        slots_per_rank=slots_per_rank)
+    pol = get_policy(policy)
+    caps = pol.capabilities
+    ctx = SolveContext(
+        w=W, n_ranks=ep,
+        perf_models=cluster.fit_models() if caps.needs_perf_models else None,
+        slot_budget=slots_per_rank if caps.accepts_slot_budget else None)
+    return pol.solve(ctx)
 
 
 def make_sim(model_name: str, workload: str, policy: str,

@@ -1,13 +1,14 @@
-"""Quickstart: ViBE in 60 lines — profile, place, drift, recalibrate.
+"""Quickstart: ViBE in 80 lines — profile, place (every registered
+placement policy), drift, recalibrate.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core import (DriftConfig, ViBEConfig, ViBEController,
-                        eplb_placement, make_cluster, layer_latency_span,
-                        vibe_placement)
+from repro.core import (DriftConfig, SolveContext, ViBEConfig,
+                        ViBEController, get_policy, layer_latency_span,
+                        make_cluster, registered_policies)
 from repro.serving import WORKLOADS, routing_profile
 
 # A ground-truth 8-device cluster in the paper's MI325X regime: nominally
@@ -24,13 +25,22 @@ print("device speeds @stress:",
 L, E, TOP_K, TOKENS = 61, 256, 8, 16_384
 W = routing_profile(WORKLOADS["sonnet"], L, E) * TOKENS * TOP_K
 
-# Phase 2 — variability-informed placement vs token-balanced EPLB.
-vibe = vibe_placement(W, perf_models)
-eplb = eplb_placement(W, n_ranks=8)
-for name, pl in (("eplb", eplb), ("vibe", vibe)):
+# Phase 2 — placement. Policies are plugins: every entry in the registry
+# (vLLM-style contiguous, EPLB, GEM-style greedy, HarMoEny-style redundant
+# sharding, ViBE, ViBE-R) solves the same SolveContext; capability flags
+# say what each solve consumes. Register your own policy and it shows up
+# here — and in `launch/serve.py --policy` and the benchmark sweeps.
+ctx = SolveContext(w=W, n_ranks=8, perf_models=perf_models)
+for name in registered_policies():
+    pol = get_policy(name)
+    caps = pol.capabilities
+    pl = pol.solve(ctx if caps.needs_perf_models
+                   else SolveContext(w=W, n_ranks=8))
     span = layer_latency_span(pl, W, perf_models)
-    print(f"{name}: predicted layer latency max {span[:, 0].mean() * 1e3:.3f}ms"
-          f"  span {(span[:, 0] - span[:, 2]).mean() * 1e3:.3f}ms")
+    print(f"{name:>10}: predicted layer latency "
+          f"max {span[:, 0].mean() * 1e3:.3f}ms"
+          f"  span {(span[:, 0] - span[:, 2]).mean() * 1e3:.3f}ms"
+          f"  (max copies {int(pl.n_copies().max())})")
 
 # Phase 3 — serve with drift-aware recalibration.
 ctl = ViBEController(

@@ -6,13 +6,14 @@ engine, with ViBE placement, drift detection and live weight migration.
 
 import argparse
 
+from repro.core import registered_policies
 from repro.launch.serve import serve
 from repro.serving import summarize
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--policy", default="vibe",
-                    choices=["vibe", "eplb", "contiguous"])
+                    choices=list(registered_policies()))
     ap.add_argument("--arch", default="qwen3-moe-235b-a22b")
     args = ap.parse_args()
 

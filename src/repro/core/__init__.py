@@ -9,11 +9,16 @@ from .perf_model import (DeviceProfile, PerfModel, fit_perf_model,
                          profile_device)
 from .placement import (Placement, ReplicatedPlacement,
                         contiguous_placement, default_slots_per_rank,
-                        eplb_placement, layer_latency_span,
+                        eplb_placement, gem_placement, harmoeny_placement,
+                        layer_latency_span, normalize_slot_budget,
+                        pad_phantom_column,
                         placement_to_permutation, permutation_to_placement,
                         predicted_layer_latency, predicted_rank_latencies,
                         reweight_shares_by_speed, solve_model_placement,
                         vibe_placement, vibe_r_placement)
+from .policy import (PlacementPolicy, PolicyCapabilities, SolveContext,
+                     UnknownPolicyError, get_policy, register_policy,
+                     registered_policies)
 from .variability import (REGIMES, ClusterVariability, VariabilityRegime,
                           make_cluster)
 
@@ -25,10 +30,15 @@ __all__ = [
     "incremental_update_replicated",
     "DeviceProfile", "PerfModel", "fit_perf_model", "profile_device",
     "Placement", "ReplicatedPlacement", "contiguous_placement",
-    "default_slots_per_rank", "eplb_placement",
-    "layer_latency_span", "placement_to_permutation",
-    "permutation_to_placement", "predicted_layer_latency",
-    "predicted_rank_latencies", "reweight_shares_by_speed",
-    "solve_model_placement", "vibe_placement", "vibe_r_placement",
+    "default_slots_per_rank", "eplb_placement", "gem_placement",
+    "harmoeny_placement", "layer_latency_span", "normalize_slot_budget",
+    "pad_phantom_column", "placement_to_permutation",
+    "permutation_to_placement",
+    "predicted_layer_latency", "predicted_rank_latencies",
+    "reweight_shares_by_speed", "solve_model_placement", "vibe_placement",
+    "vibe_r_placement",
+    "PlacementPolicy", "PolicyCapabilities", "SolveContext",
+    "UnknownPolicyError", "get_policy", "register_policy",
+    "registered_policies",
     "REGIMES", "ClusterVariability", "VariabilityRegime", "make_cluster",
 ]

@@ -4,9 +4,11 @@ Ties the four components together across the three phases:
 
   Phase 1 (offline):  profile each EP rank → f_g(n); run representative
                       workload → activation matrix W.
-  Phase 2 (initial):  vibe_placement(W, {f_g}).
+  Phase 2 (initial):  registry policy solve over the SolveContext.
   Phase 3 (online):   every H forward passes check drift; on trigger refresh
-                      W from recent routing, run the incremental solver,
+                      W from recent routing, recalibrate (capability-gated:
+                      policies advertising ``supports_incremental`` refine
+                      with minimal-movement swaps, others re-solve in full),
                       snapshot the reference, cool down.
 
 The controller is engine-agnostic: the serving engine feeds it per-step
@@ -14,31 +16,35 @@ routing tallies + observed batch token counts and asks for the current
 placement; when a recalibration fires, the controller returns a
 :class:`PlacementUpdate` whose swap list doubles as the weight-migration
 plan (bytes accounted for the paper's transfer-volume comparison).
+
+The placement policy is resolved from the registry
+(:mod:`repro.core.policy`) by name — the controller never compares policy
+names itself; every branch reads :class:`PolicyCapabilities` flags, so a
+newly registered policy works here unchanged. Placements are always the
+unified :class:`ReplicatedPlacement` representation (singleton policies
+yield the r_max = 1 degenerate).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
 from .activation import ActivationProfiler
 from .drift import DriftConfig, DriftDetector, DriftEvent
-from .incremental import (IncrementalResult, incremental_update,
-                          incremental_update_replicated)
+from .incremental import IncrementalResult
 from .perf_model import PerfModel
-from .placement import Placement, ReplicatedPlacement, solve_model_placement
+from .placement import ReplicatedPlacement
+from .policy import PlacementPolicy, SolveContext, get_policy
 
 __all__ = ["ViBEConfig", "PlacementUpdate", "ViBEController"]
-
-#: policies that consume per-device performance models
-_PERF_POLICIES = ("vibe", "vibe_r")
 
 
 @dataclasses.dataclass(frozen=True)
 class ViBEConfig:
-    policy: str = "vibe"              # "vibe" | "vibe_r" | "eplb" | "contiguous"
+    policy: str = "vibe"              # any name in repro.core.policy registry
     adaptive: bool = True             # Phase 3 on/off (paper: static vs adaptive)
     drift: DriftConfig = dataclasses.field(default_factory=DriftConfig)
     epsilon: float = 0.03             # incremental solver tolerance
@@ -47,21 +53,53 @@ class ViBEConfig:
     # stress drift changes f_g's operating point → re-solve from scratch is
     # allowed there (the paper's magnitude-aware recalibration); routing-only
     # drift uses the minimal-movement incremental solver.
-    slots_per_rank: Optional[int] = None
-    # vibe_r only: physical slot budget per rank (≥ ceil(E/G)); the excess
-    # slots hold hot-expert replicas. None = placement.default_slots_per_rank.
+    slot_budget: Union[None, int, Sequence[int], np.ndarray] = None
+    # physical slot budget per rank for replication-capable policies: a
+    # scalar (uniform) or a (G,) array (non-uniform, device memory
+    # headroom). None = the policy's default. Only valid when the policy's
+    # capabilities report accepts_slot_budget.
+    slots_per_rank: Union[None, int, Sequence[int], np.ndarray] = None
+    # deprecated alias of slot_budget (the published pre-registry kwarg);
+    # the two are merged in __post_init__ and read identically afterwards.
     reweight_shares: bool = False
-    # vibe_r only: after an incremental (swap-based) recalibration,
-    # re-proportion each expert's copy shares to the speeds of the ranks its
-    # copies landed on (placement.reweight_shares_by_speed) so the weighted
-    # dispatch keeps steering traffic toward fast copies.
+    # replicated policies only: after an incremental (swap-based)
+    # recalibration, re-proportion each expert's copy shares to the speeds
+    # of the ranks its copies landed on (placement.reweight_shares_by_speed)
+    # so the weighted dispatch keeps steering traffic toward fast copies.
+
+    # -- validated against the registered policy's capabilities -----------
+    def __post_init__(self):
+        if self.slots_per_rank is not None:
+            if self.slot_budget is not None and not np.array_equal(
+                    np.asarray(self.slot_budget),
+                    np.asarray(self.slots_per_rank)):
+                raise ValueError("pass slot_budget or its deprecated alias "
+                                 "slots_per_rank, not conflicting both")
+            object.__setattr__(self, "slot_budget", self.slots_per_rank)
+        else:
+            object.__setattr__(self, "slots_per_rank", self.slot_budget)
+        caps = get_policy(self.policy).capabilities   # raises on unknown name
+        if self.slot_budget is not None and not caps.accepts_slot_budget:
+            raise ValueError(
+                f"slot_budget set, but policy {self.policy!r} has "
+                "capabilities.accepts_slot_budget=False — the budget would "
+                "be silently ignored")
+        if self.reweight_shares and not (caps.supports_replication
+                                         and caps.supports_incremental):
+            # the reweight only executes on the incremental refine path, so
+            # accepting it for a policy that never refines (or has no copy
+            # shares at all) would be silently inert
+            raise ValueError(
+                f"reweight_shares=True, but policy {self.policy!r} lacks "
+                "supports_replication+supports_incremental — the flag "
+                "would never take effect")
 
 
 @dataclasses.dataclass(frozen=True)
 class PlacementUpdate:
     step: int
     event: DriftEvent
-    placement: Placement
+    placement: ReplicatedPlacement
     moved_experts: int
     migration_bytes: int
     swaps_per_layer: Optional[np.ndarray] = None
@@ -81,6 +119,7 @@ class ViBEController:
         if len(perf_models) != n_ranks:
             raise ValueError("one perf model per EP rank required")
         self.cfg = config
+        self.policy: PlacementPolicy = get_policy(config.policy)
         self.L, self.E, self.G = n_layers, n_experts, n_ranks
         self.perf_models = list(perf_models)
         self.profiler = ActivationProfiler(n_layers, n_experts,
@@ -88,18 +127,24 @@ class ViBEController:
         self.detector = DriftDetector(n_layers, n_experts, config.drift)
         w0 = (np.atleast_2d(initial_w) if initial_w is not None
               else np.full((n_layers, n_experts), 1.0 / n_experts))
-        self.placement = self._solve(w0)
+        self.placement: ReplicatedPlacement = self._solve(w0)
         self._step = 0
         self.updates: List[PlacementUpdate] = []
 
     # ------------------------------------------------------------------
-    def _solve(self, w: np.ndarray):
+    def _context(self, w: np.ndarray) -> SolveContext:
+        """SolveContext carrying this controller's knobs and profiles."""
+        caps = self.policy.capabilities
+        return SolveContext(
+            w=w, n_ranks=self.G,
+            perf_models=self.perf_models if caps.needs_perf_models else None,
+            slot_budget=self.cfg.slot_budget,
+            epsilon=self.cfg.epsilon,
+            reweight_shares=self.cfg.reweight_shares)
+
+    def _solve(self, w: np.ndarray) -> ReplicatedPlacement:
         """Full placement solve with this controller's policy and knobs."""
-        return solve_model_placement(
-            self.cfg.policy, w, self.G,
-            perf_models=(self.perf_models
-                         if self.cfg.policy in _PERF_POLICIES else None),
-            slots_per_rank=self.cfg.slots_per_rank)
+        return self.policy.solve(self._context(w))
 
     # ------------------------------------------------------------------
     @property
@@ -118,8 +163,10 @@ class ViBEController:
         self.profiler.update(step_counts)
         if tokens is None:
             tokens = float(step_counts[0].sum())
-        if not self.cfg.adaptive or self.cfg.policy == "contiguous":
-            # still track (so static-vs-adaptive comparisons share stats)
+        if not self.cfg.adaptive \
+                or not self.policy.capabilities.workload_aware:
+            # static layouts can't react to routing — still track (so
+            # static-vs-adaptive comparisons share stats)
             self.detector.observe(step_counts, tokens)
             return None
         event = self.detector.observe(step_counts, tokens)
@@ -131,33 +178,25 @@ class ViBEController:
     def _recalibrate(self, event: DriftEvent) -> PlacementUpdate:
         w = self.profiler.window_matrix()
         old = self.placement
-        if event.kind == "stress" and self.cfg.full_resolve_on_stress:
+        if event.kind != "stress" or not self.cfg.full_resolve_on_stress:
+            incremental = self.policy.capabilities.supports_incremental
+        else:
             # magnitude shift: operating point of every f_g moved → full
             # re-solve at the new stress level (still same machinery).
-            # ``moved_experts`` counts changed (layer, slot) residents, so
-            # for vibe_r every migrated *copy* is charged expert_bytes.
-            new = self._solve(w)
-            moved = new.moved_experts(old)
-            upd = PlacementUpdate(
-                step=self._step, event=event, placement=new,
-                moved_experts=moved,
-                migration_bytes=moved * self.cfg.expert_bytes,
-                full_resolve=True)
-        elif self.cfg.policy in _PERF_POLICIES:
-            if self.cfg.policy == "vibe_r":
-                res: IncrementalResult = incremental_update_replicated(
-                    old, w, self.perf_models, epsilon=self.cfg.epsilon,
-                    reweight_shares=self.cfg.reweight_shares)
-            else:
-                res = incremental_update(
-                    old, w, self.perf_models, epsilon=self.cfg.epsilon)
+            incremental = False
+        if incremental:
+            res: IncrementalResult = self.policy.refine(old, self._context(w))
             new, moved = res.placement, res.moved_expert_count()
             upd = PlacementUpdate(
                 step=self._step, event=event, placement=new,
                 moved_experts=moved,
                 migration_bytes=moved * self.cfg.expert_bytes,
                 swaps_per_layer=res.per_layer_swaps)
-        else:  # eplb-style full greedy re-solve (the paper's contrast)
+        else:
+            # full greedy re-solve (the paper's contrast for eplb-style
+            # policies; also the stress-event path for every policy).
+            # ``moved_experts`` counts changed (layer, slot) residents, so
+            # every migrated *copy* is charged expert_bytes.
             new = self._solve(w)
             moved = new.moved_experts(old)
             upd = PlacementUpdate(

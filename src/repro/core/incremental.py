@@ -24,7 +24,7 @@ from typing import List, Sequence, Tuple
 import numpy as np
 
 from .perf_model import PerfModel
-from .placement import (Placement, ReplicatedPlacement,
+from .placement import (Placement, ReplicatedPlacement, pad_phantom_column,
                         reweight_shares_by_speed)
 
 __all__ = ["Swap", "IncrementalResult", "incremental_update",
@@ -181,15 +181,17 @@ def incremental_update_replicated(
     w = np.atleast_2d(np.asarray(w, dtype=np.float64))
     G = placement.n_ranks
     L, S = placement.slot_expert.shape
+    E = placement.n_experts
     s_loc = placement.slots_per_rank
-    if w.shape != (L, placement.n_experts):
-        raise ValueError(f"w shape {w.shape} != "
-                         f"{(L, placement.n_experts)}")
+    if w.shape != (L, E):
+        raise ValueError(f"w shape {w.shape} != {(L, E)}")
 
     se = placement.slot_expert.copy()
     sh = placement.share.copy()
-    # frozen per-slot traffic under the fresh activation matrix
-    slot_load = np.take_along_axis(w, se, axis=1) * sh
+    # frozen per-slot traffic under the fresh activation matrix (phantom
+    # slots — ids == E, zero share — carry no load and never move: they
+    # encode a rank's missing memory budget, not migratable capacity)
+    slot_load = np.take_along_axis(pad_phantom_column(w), se, axis=1) * sh
     swaps: List[SlotSwap] = []
     per_layer = np.zeros(L, dtype=np.int64)
     converged = 0
@@ -218,9 +220,11 @@ def incremental_update_replicated(
             experts_m = set(int(e) for e in se[l, slots_m])
             for si in slots_p:
                 ei = int(se[l, si])
+                if ei >= E:
+                    continue                  # phantom slot: nothing to move
                 for sj in slots_m:
                     ej = int(se[l, sj])
-                    if ei == ej:
+                    if ei == ej or ej >= E:
                         continue
                     # dedup: arriving copy must not meet a sibling copy
                     if ei in experts_m or ej in experts_p:

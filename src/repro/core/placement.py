@@ -43,6 +43,7 @@ tests.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, List, Optional, Sequence, Union
 
 import numpy as np
@@ -58,6 +59,8 @@ __all__ = [
     "eplb_placement",
     "vibe_placement",
     "vibe_r_placement",
+    "gem_placement",
+    "harmoeny_placement",
     "solve_model_placement",
     "reweight_shares_by_speed",
     "placement_to_permutation",
@@ -66,6 +69,8 @@ __all__ = [
     "predicted_rank_latencies",
     "layer_latency_span",
     "default_slots_per_rank",
+    "normalize_slot_budget",
+    "pad_phantom_column",
 ]
 
 
@@ -132,15 +137,25 @@ class Placement:
 class ReplicatedPlacement:
     """(expert, copy)→slot placement with per-copy traffic shares (ViBE-R).
 
+    This is the *unified* placement representation: singleton placements are
+    the r_max = 1 degenerate (one copy per expert, all shares 1), so every
+    consumer — controller, engine, simulator, benchmarks — handles one type
+    (see :meth:`from_singleton` / :meth:`to_singleton` / :attr:`assign`).
+
     ``slot_expert``: (L, S) int array — logical expert whose weights occupy
         physical slot s. Slots are rank-major (rank g owns
         [g*S_loc, (g+1)*S_loc)); entries *repeat* when an expert is
-        replicated. Every logical expert holds ≥ 1 slot per layer.
+        replicated. Every logical expert holds ≥ 1 slot per layer. Entries
+        equal to ``n_experts`` are *phantom* slots (no resident expert,
+        zero share) — how a non-uniform per-rank slot budget is expressed
+        over the uniform rank-major physical layout: ranks with a smaller
+        budget pad their tail slots with phantoms.
     ``share``: (L, S) float array — fraction of the expert's token traffic
         dispatched to this copy; sums to 1 over the copies of each
-        (layer, expert). The model layer approximates fractional shares by
-        hashing assignments across copies; the solver's shares are what the
-        latency objective (and the simulator) score.
+        (layer, expert); 0 on phantom slots. The model layer approximates
+        fractional shares by hashing assignments across copies; the
+        solver's shares are what the latency objective (and the simulator)
+        score.
     """
 
     slot_expert: np.ndarray
@@ -156,16 +171,20 @@ class ReplicatedPlacement:
         L, S = se.shape
         if S % self.n_ranks != 0:
             raise ValueError(f"S={S} not divisible by n_ranks={self.n_ranks}")
-        if se.min() < 0 or se.max() >= self.n_experts:
-            raise ValueError("slot_expert ids outside [0, n_experts)")
+        if se.min() < 0 or se.max() > self.n_experts:
+            raise ValueError("slot_expert ids outside [0, n_experts] "
+                             f"(= {self.n_experts} marks a phantom slot)")
         counts = _replica_counts(se, self.n_experts)
         if np.any(counts == 0):
             raise ValueError("some logical expert has no physical slot")
         if sh.min() < -1e-12:
             raise ValueError("negative copy share")
-        sums = np.zeros((L, self.n_experts))
-        np.add.at(sums, (np.arange(L)[:, None], se), sh)
-        if not np.allclose(sums, 1.0, atol=1e-6):
+        if np.any(sh[se >= self.n_experts] > 1e-12):
+            raise ValueError("phantom slots cannot carry traffic share")
+        sums = np.zeros((L, self.n_experts + 1))
+        np.add.at(sums, (np.arange(L)[:, None],
+                         np.minimum(se, self.n_experts)), sh)
+        if not np.allclose(sums[:, :self.n_experts], 1.0, atol=1e-6):
             raise ValueError("copy shares must sum to 1 per (layer, expert)")
         object.__setattr__(self, "slot_expert", se)
         object.__setattr__(self, "share", sh)
@@ -187,9 +206,40 @@ class ReplicatedPlacement:
         """Slot table consumed by models/moe.py (entries repeat = replicas)."""
         return self.slot_expert
 
+    @classmethod
+    def from_singleton(cls, placement: "Placement") -> "ReplicatedPlacement":
+        """Lift a singleton :class:`Placement` into the unified replicated
+        representation (one copy per expert, unit shares)."""
+        perm = placement.perm
+        return cls(perm, np.ones(perm.shape, dtype=np.float64),
+                   placement.n_ranks, placement.n_experts)
+
+    def to_singleton(self) -> "Placement":
+        """The inverse of :meth:`from_singleton`; only defined for the
+        degenerate r_max = 1 case with no phantom slots."""
+        if self.n_slots != self.n_experts or int(self.n_copies().max()) > 1:
+            raise ValueError("placement is genuinely replicated (or padded); "
+                             "no singleton equivalent")
+        return Placement(permutation_to_placement(self.slot_expert,
+                                                  self.n_ranks), self.n_ranks)
+
+    @property
+    def assign(self) -> np.ndarray:
+        """(L, E) expert→rank map of the singleton degenerate (raises for a
+        genuinely replicated placement) — lets Placement consumers read the
+        unified type without type-switching."""
+        return self.to_singleton().assign
+
     def n_copies(self) -> np.ndarray:
-        """(L, E) replica count per logical expert."""
+        """(L, E) replica count per logical expert (phantoms excluded)."""
         return _replica_counts(self.slot_expert, self.n_experts)
+
+    def rank_slot_budget(self) -> np.ndarray:
+        """(L, G) count of *real* (non-phantom) slots per rank — the
+        per-rank slot budget the solve actually used."""
+        real = (self.slot_expert < self.n_experts)
+        return real.reshape(self.n_layers, self.n_ranks,
+                            self.slots_per_rank).sum(axis=2)
 
     def copy_shares(self, r_max: Optional[int] = None) -> np.ndarray:
         """(L, E, r_max) per-copy traffic shares, copies in slot order.
@@ -209,8 +259,8 @@ class ReplicatedPlacement:
         order, e_sorted, occ = copy_enumeration(se)
         sh_sorted = np.take_along_axis(self.share, order, axis=1)
         out = np.zeros((L, self.n_experts, rm))
-        rows = np.repeat(np.arange(L), S)
-        out[rows, e_sorted.ravel(), occ.ravel()] = sh_sorted.ravel()
+        li, si = np.nonzero(e_sorted < self.n_experts)    # skip phantoms
+        out[li, e_sorted[li, si], occ[li, si]] = sh_sorted[li, si]
         return out
 
     def copy_cdf(self, r_max: Optional[int] = None) -> np.ndarray:
@@ -227,9 +277,9 @@ class ReplicatedPlacement:
 
     def rank_loads(self, w: np.ndarray) -> np.ndarray:
         """Per-rank token loads (L, G): expert loads split over copies."""
-        w = np.atleast_2d(np.asarray(w, dtype=np.float64))
         L, S = self.slot_expert.shape
-        slot_load = np.take_along_axis(w, self.slot_expert, axis=1) * self.share
+        slot_load = np.take_along_axis(pad_phantom_column(w),
+                                       self.slot_expert, axis=1) * self.share
         return slot_load.reshape(L, self.n_ranks, self.slots_per_rank).sum(2)
 
     def moved_experts(self, other: "ReplicatedPlacement") -> int:
@@ -241,10 +291,26 @@ class ReplicatedPlacement:
 AnyPlacement = Union[Placement, ReplicatedPlacement]
 
 
+def pad_phantom_column(w: np.ndarray) -> np.ndarray:
+    """(L, E) expert loads → (L, E+1) with a zero column at index E.
+
+    THE gather guard for phantom slots: a slot table may contain the
+    sentinel id ``n_experts`` (budget-padding phantom), so every
+    ``take_along_axis(w, slot_expert)`` must read from a padded matrix
+    where the sentinel column is 0 — one helper instead of each consumer
+    re-deriving the incantation (rank_loads, incremental swap loads, the
+    simulator's realized-dispatch split all go through here).
+    """
+    w = np.atleast_2d(np.asarray(w, dtype=np.float64))
+    return np.concatenate([w, np.zeros((w.shape[0], 1))], axis=1)
+
+
 def _replica_counts(slot_expert: np.ndarray, n_experts: int) -> np.ndarray:
-    """(L, S) slot table → (L, E) copies per logical expert."""
-    return np.apply_along_axis(np.bincount, 1, slot_expert,
-                               minlength=n_experts)
+    """(L, S) slot table → (L, E) copies per logical expert (ids ≥ E are
+    phantom padding and are not counted)."""
+    clipped = np.minimum(slot_expert, n_experts)
+    return np.apply_along_axis(np.bincount, 1, clipped,
+                               minlength=n_experts + 1)[:, :n_experts]
 
 
 def copy_enumeration(slot_table: np.ndarray):
@@ -479,6 +545,42 @@ def default_slots_per_rank(n_experts: int, n_ranks: int) -> int:
     return base + (1 if base * n_ranks == n_experts else 0)
 
 
+def normalize_slot_budget(
+    slot_budget,                   # None | int | (G,) array-like
+    n_experts: int,
+    n_ranks: int,
+) -> np.ndarray:
+    """Per-rank physical slot budget → validated (G,) int array.
+
+    ``None`` → :func:`default_slots_per_rank` on every rank; a scalar is a
+    uniform budget; an array gives each rank its own budget (device memory
+    headroom — paper §5.1's non-uniform allocation). Every rank needs ≥ 1
+    slot, the fleet must hold all E experts, and no rank may hold more
+    slots than E (it would be forced to colocate sibling copies).
+    """
+    if slot_budget is None:
+        budget = np.full(n_ranks, default_slots_per_rank(n_experts, n_ranks),
+                         dtype=np.int64)
+    else:
+        budget = np.asarray(slot_budget, dtype=np.int64)
+        if budget.ndim == 0:
+            budget = np.full(n_ranks, int(budget), dtype=np.int64)
+    if budget.shape != (n_ranks,):
+        raise ValueError(f"slot budget shape {budget.shape} != ({n_ranks},)")
+    if budget.min() < 1:
+        raise ValueError("every rank needs a slot budget of at least 1")
+    S = int(budget.sum())
+    if S < n_experts:
+        raise ValueError(
+            f"slot budget {S} (over {n_ranks} ranks) cannot hold "
+            f"{n_experts} experts")
+    if budget.max() > n_experts:
+        raise ValueError(f"per-rank slot budget {int(budget.max())} > "
+                         f"E={n_experts}: that rank would hold the full "
+                         "expert set and colocate sibling copies")
+    return budget
+
+
 def _replication_degrees(
     w: np.ndarray,                 # (L, E)
     n_extra: int,                  # copies beyond one-per-expert
@@ -502,41 +604,39 @@ def _replication_degrees(
     return copies
 
 
-def vibe_r_placement(
+def _replicated_solve(
     w: np.ndarray,                 # (L, E) activation matrix
-    perf_models: Sequence[PerfModel],
-    slots_per_rank: Optional[int] = None,
-    n_ref_mode: str = "rank",
+    speeds: np.ndarray,            # (L, G) per-rank speed estimates s_{l,g}
+    targets: np.ndarray,           # (L, G) per-rank token targets τ_{l,g}
+    n_ranks: int,
+    budget: np.ndarray,            # (G,) per-rank physical slot budget
 ) -> ReplicatedPlacement:
-    """ViBE-R: co-optimize replication degree with per-device speed.
+    """Shared replication machinery behind ViBE-R and HarMoEny-style solves.
 
     Three phases, all vectorized across layers:
 
-    1. **Replicate** — under the slot budget S = slots_per_rank × G, grant
-       the S − E spare slots to the hottest experts (largest per-copy load
+    1. **Replicate** — under the slot budget S = Σ_g budget_g, grant the
+       S − E spare slots to the hottest experts (largest per-copy load
        first), capped at one copy per rank.
-    2. **Place** — greedy speed-target fill over the (expert, copy) items in
-       descending per-copy load order, to the rank farthest below its ViBE
-       token target τ_g; a copy avoids ranks already holding a copy of the
-       same expert (a colocated replica absorbs no skew).
+    2. **Place** — greedy target fill over the (expert, copy) items in
+       descending per-copy load order, to the rank farthest below its token
+       target τ_g with free budget; a copy avoids ranks already holding a
+       copy of the same expert (a colocated replica absorbs no skew).
     3. **Share** — split each expert's traffic over its copies
        proportionally to the *speed* of the rank each copy landed on, so
-       the share lands where f_g is fastest.
+       the share lands where f_g is fastest (uniform speeds → uniform
+       shares).
+
+    The physical layout is rank-major with ``max(budget)`` slots per rank;
+    ranks below the maximum pad their tail slots with phantoms (id E,
+    share 0) so non-uniform budgets ride the uniform slot table every
+    consumer already understands.
     """
-    w = np.atleast_2d(np.asarray(w, dtype=np.float64))
     L, E = w.shape
-    G = len(perf_models)
-    s_loc = (default_slots_per_rank(E, G) if slots_per_rank is None
-             else int(slots_per_rank))
-    S = s_loc * G
-    if S < E:
-        raise ValueError(
-            f"slot budget {S} (= {s_loc}×{G}) cannot hold {E} experts")
-    if s_loc > E:
-        raise ValueError(f"slots_per_rank={s_loc} > E={E}: every rank would "
-                         "hold the full expert set")
+    G = n_ranks
+    s_max = int(budget.max())
+    S = int(budget.sum())
     rows = np.arange(L)
-    speeds, targets = _speed_targets(w, perf_models, n_ref_mode)
 
     # Phase 1: replication degrees (S − E spare copies, ≤ G copies each)
     copies = _replication_degrees(w, S - E, max_copies=G)
@@ -552,7 +652,7 @@ def vibe_r_placement(
     # Phase 2: vectorized greedy fill over copies (descending per-copy load)
     order = np.argsort(-cl, axis=1, kind="stable")
     load = np.zeros((L, G))
-    slots_free = np.full((L, G), s_loc, dtype=np.int64)
+    slots_free = np.tile(budget, (L, 1))
     on_rank = np.zeros((L, G, E), dtype=bool)
     copy_rank = np.empty((L, S), dtype=np.int32)
     for i in range(S):
@@ -581,10 +681,109 @@ def vibe_r_placement(
     # Lay out rank-major slots, copies ordered by expert id within a rank
     key = copy_rank.astype(np.int64) * (E + 1) + ce
     lay = np.argsort(key, axis=1, kind="stable")
-    return ReplicatedPlacement(
-        slot_expert=np.take_along_axis(ce, lay, axis=1),
-        share=np.take_along_axis(share, lay, axis=1),
-        n_ranks=G, n_experts=E)
+    if s_max * G == S:             # uniform budget: no phantom padding
+        return ReplicatedPlacement(
+            slot_expert=np.take_along_axis(ce, lay, axis=1),
+            share=np.take_along_axis(share, lay, axis=1),
+            n_ranks=G, n_experts=E)
+    # Non-uniform budget: each rank g filled exactly budget_g copies (the
+    # greedy consumes every slot), so the rank-sorted items form contiguous
+    # runs of length budget_g — scatter each run to the head of its rank's
+    # s_max-slot window, phantoms (id E, share 0) fill the tail.
+    ce_l = np.take_along_axis(ce, lay, axis=1)
+    sh_l = np.take_along_axis(share, lay, axis=1)
+    rk_l = np.take_along_axis(copy_rank, lay, axis=1)
+    offsets = np.concatenate([[0], np.cumsum(budget)[:-1]])      # (G,)
+    dest = rk_l * s_max + (np.arange(S)[None, :] - offsets[rk_l])
+    slot_expert = np.full((L, s_max * G), E, dtype=np.int32)
+    share_phys = np.zeros((L, s_max * G))
+    lr = np.repeat(rows, S)
+    slot_expert[lr, dest.ravel()] = ce_l.ravel()
+    share_phys[lr, dest.ravel()] = sh_l.ravel()
+    return ReplicatedPlacement(slot_expert=slot_expert, share=share_phys,
+                               n_ranks=G, n_experts=E)
+
+
+def vibe_r_placement(
+    w: np.ndarray,                 # (L, E) activation matrix
+    perf_models: Sequence[PerfModel],
+    slots_per_rank=None,           # None | int | (G,) per-rank budgets
+    n_ref_mode: str = "rank",
+) -> ReplicatedPlacement:
+    """ViBE-R: co-optimize replication degree with per-device speed.
+
+    :func:`_replicated_solve` under ViBE's speed-proportional token targets
+    (τ_g ∝ s_g = 1/f_g(n_ref)). ``slots_per_rank`` may be a scalar (the
+    paper's uniform memory footprint) or a (G,) array of per-rank budgets
+    driven by device memory headroom — ranks below the maximum pad with
+    phantom slots.
+    """
+    w = np.atleast_2d(np.asarray(w, dtype=np.float64))
+    L, E = w.shape
+    G = len(perf_models)
+    budget = normalize_slot_budget(slots_per_rank, E, G)
+    speeds, targets = _speed_targets(w, perf_models, n_ref_mode)
+    return _replicated_solve(w, speeds, targets, G, budget)
+
+
+def harmoeny_placement(
+    w: np.ndarray,                 # (L, E) activation matrix
+    n_ranks: int,
+    slots_per_rank=None,           # None | int | (G,) per-rank budgets
+) -> ReplicatedPlacement:
+    """HarMoEny-style baseline: redundant sharding for *pure load balance*.
+
+    The replication machinery of ViBE-R with all hardware awareness
+    removed: every rank is assumed equally fast (f_g(n) = n), so token
+    targets are uniform (τ_g = N/G) and each expert's traffic splits
+    uniformly over its copies. Isolates what redundant hot-expert sharding
+    buys *without* variability awareness — the HarMoEny baseline family the
+    paper's benchmark sweep compares against.
+    """
+    w = np.atleast_2d(np.asarray(w, dtype=np.float64))
+    L, E = w.shape
+    G = n_ranks
+    budget = normalize_slot_budget(slots_per_rank, E, G)
+    speeds = np.ones((L, G))
+    targets = np.repeat(w.sum(axis=1, keepdims=True) / G, G, axis=1)
+    return _replicated_solve(w, speeds, targets, G, budget)
+
+
+def gem_placement(
+    w: np.ndarray,                 # (L, E) activation matrix
+    perf_models: Sequence[PerfModel],
+) -> Placement:
+    """GEM-style variability-aware greedy mapping (no replication).
+
+    Experts in descending load order go to the rank whose *predicted
+    completion time* f_g(n_g + w_e) is lowest among ranks with free slots —
+    a direct greedy on the profiled latency curves (GEM's expert-to-GPU
+    mapping), in contrast to ViBE's precomputed speed-proportional token
+    targets. Vectorized across layers like the other solvers.
+    """
+    w = np.atleast_2d(np.asarray(w, dtype=np.float64))
+    L, E = w.shape
+    G = len(perf_models)
+    if E % G != 0:
+        raise ValueError(f"E={E} not divisible by n_ranks={G}")
+    e_loc = E // G
+    order = np.argsort(-w, axis=1, kind="stable")                # (L, E)
+    rows = np.arange(L)
+    load = np.zeros((L, G))
+    slots = np.full((L, G), e_loc, dtype=np.int64)
+    assign = np.empty((L, E), dtype=np.int32)
+    for i in range(E):
+        item = order[:, i]                                       # (L,)
+        wl = w[rows, item]                                       # (L,)
+        t = np.stack([np.asarray(perf_models[g](load[:, g] + wl),
+                                 dtype=np.float64) for g in range(G)],
+                     axis=1)                                     # (L, G)
+        t[slots == 0] = np.inf
+        g = np.argmin(t, axis=1)                                 # (L,)
+        assign[rows, item] = g
+        load[rows, g] += wl
+        slots[rows, g] -= 1
+    return Placement(assign, G)
 
 
 def reweight_shares_by_speed(
@@ -605,17 +804,19 @@ def reweight_shares_by_speed(
     w = np.atleast_2d(np.asarray(w, dtype=np.float64))
     se = placement.slot_expert
     L, S = se.shape
-    if w.shape != (L, placement.n_experts):
-        raise ValueError(f"w shape {w.shape} != {(L, placement.n_experts)}")
+    E = placement.n_experts
+    if w.shape != (L, E):
+        raise ValueError(f"w shape {w.shape} != {(L, E)}")
     speeds, _ = _speed_targets(w, perf_models, n_ref_mode)
     rank_of = np.arange(S) // placement.slots_per_rank
-    sp = speeds[:, rank_of]                                      # (L, S)
+    sp = np.where(se < E, speeds[:, rank_of], 0.0)               # (L, S)
     rows = np.arange(L)
-    denom = np.zeros((L, placement.n_experts))
-    np.add.at(denom, (rows[:, None], se), sp)
-    share = sp / np.take_along_axis(denom, se, axis=1)
-    return ReplicatedPlacement(se.copy(), share, placement.n_ranks,
-                               placement.n_experts)
+    se_c = np.minimum(se, E)
+    denom = np.zeros((L, E + 1))
+    np.add.at(denom, (rows[:, None], se_c), sp)
+    denom[:, E] = 1.0                                            # phantoms
+    share = sp / np.take_along_axis(denom, se_c, axis=1)
+    return ReplicatedPlacement(se.copy(), share, placement.n_ranks, E)
 
 
 def solve_model_placement(
@@ -623,29 +824,36 @@ def solve_model_placement(
     w: np.ndarray,
     n_ranks: int,
     perf_models: Optional[Sequence[PerfModel]] = None,
-    slots_per_rank: Optional[int] = None,
+    slots_per_rank=None,
 ) -> AnyPlacement:
-    """Uniform entry point used by the serving engine and benchmarks.
+    """DEPRECATED string-dispatch entry point (use the policy registry).
 
-    ``slots_per_rank`` only applies to the ``"vibe_r"`` policy: the physical
-    slot budget per rank (≥ ceil(E/G); the excess becomes hot-expert
-    replicas). Other policies keep the paper's uniform one-slot-per-expert
-    memory footprint.
+    Thin shim over ``repro.core.policy``: resolves the name in the registry
+    and solves through the :class:`~repro.core.policy.PlacementPolicy`
+    protocol. Return types match the historical if/elif chain bit for bit —
+    singleton policies (``contiguous``/``eplb``/``vibe``/``gem``) yield a
+    :class:`Placement`, replication-capable ones (``vibe_r``/``harmoeny``)
+    a :class:`ReplicatedPlacement`. ``slots_per_rank`` is forwarded only to
+    policies whose capabilities accept a slot budget (the old behaviour:
+    silently ignored elsewhere). New code should build a
+    :class:`~repro.core.policy.SolveContext` and call
+    ``get_policy(name).solve(ctx)`` directly.
     """
-    w = np.atleast_2d(w)
-    if policy == "contiguous":
-        return contiguous_placement(w.shape[0], w.shape[1], n_ranks)
-    if policy == "eplb":
-        return eplb_placement(w, n_ranks)
-    if policy in ("vibe", "vibe_r"):
-        if perf_models is None:
-            raise ValueError(f"{policy} placement requires perf_models")
-        if len(perf_models) != n_ranks:
-            raise ValueError("need one perf model per rank")
-        if policy == "vibe":
-            return vibe_placement(w, perf_models)
-        return vibe_r_placement(w, perf_models, slots_per_rank=slots_per_rank)
-    raise ValueError(f"unknown policy {policy!r}")
+    warnings.warn(
+        "solve_model_placement is deprecated; use "
+        "repro.core.policy.get_policy(name).solve(SolveContext(...))",
+        DeprecationWarning, stacklevel=2)
+    from . import policy as _policy          # late: policy imports this module
+    pol = _policy.get_policy(policy)
+    caps = pol.capabilities
+    if caps.needs_perf_models and perf_models is None:
+        raise ValueError(f"{policy} placement requires perf_models")
+    ctx = _policy.SolveContext(
+        w=w, n_ranks=n_ranks,
+        perf_models=perf_models if caps.needs_perf_models else None,
+        slot_budget=slots_per_rank if caps.accepts_slot_budget else None)
+    solved = pol.solve(ctx)
+    return solved if caps.supports_replication else solved.to_singleton()
 
 
 # ---------------------------------------------------------------------------

@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.configs import get_smoke
 from repro.core import (DriftConfig, ViBEConfig, ViBEController,
-                        make_cluster)
+                        make_cluster, registered_policies)
 from repro.models import moe_perm_shape
 from repro.serving import Engine, WORKLOADS, sample_requests, summarize
 
@@ -39,9 +39,10 @@ def serve(arch: str, *, policy: str = "vibe", n_requests: int = 12,
                            experts_per_rank=max(n_slots // ranks, 1),
                            seed=seed)
     perf = cluster.fit_models()                    # Phase 1: profiling
-    # vibe_r uses the solver's default slot budget (singleton footprint
-    # plus one spare replica slot per rank — default_slots_per_rank); the
-    # engine reads the resulting budget off the controller's placement.
+    # ``policy`` may be any name in the repro.core.policy registry;
+    # replication-capable policies use their default slot budget (singleton
+    # footprint plus one spare replica slot per rank) and the engine reads
+    # the resulting budget off the controller's placement.
     controller = ViBEController(
         n_moe, n_slots, ranks, perf,
         ViBEConfig(policy=policy, adaptive=adaptive,
@@ -66,7 +67,7 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-moe-235b-a22b")
     ap.add_argument("--policy", default="vibe",
-                    choices=["vibe", "vibe_r", "eplb", "contiguous"])
+                    choices=list(registered_policies()))
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--workload", default="sharegpt")
     ap.add_argument("--regime", default="mi325x")

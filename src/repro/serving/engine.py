@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import (ClusterVariability, Placement, ReplicatedPlacement,
+from repro.core import (ClusterVariability, ReplicatedPlacement,
                         ViBEController)
 from repro.models import (ShardingRules, decode_fn, init_cache, init_params,
                           make_moe_tables, moe_perm_shape, prefill_fn)
@@ -82,20 +82,22 @@ class Engine:
         self._share: Optional[np.ndarray] = None
         self._r_max: Optional[int] = None
         if cfg.is_moe and controller is not None:
-            # ViBE-R: when the controller's placement uses a slot budget
-            # beyond one-per-expert (replicated copies), grow the stacked
-            # expert tensors to match. The budget is read off the placement
-            # itself, so engine and controller cannot disagree.
+            # Replication-capable policies: when the controller's placement
+            # uses a slot budget beyond one-per-expert (replicated copies),
+            # grow the stacked expert tensors to match. The budget is read
+            # off the placement itself, so engine and controller cannot
+            # disagree. Placements are always the unified
+            # ReplicatedPlacement (singleton = r_max 1 degenerate), so no
+            # type-switching here.
             want = controller.placement.perm.shape[1]
             if want > self.n_slots:
                 self._expand_slots(want)
-            if isinstance(controller.placement, ReplicatedPlacement):
-                # pin the copy-axis width to its reachable maximum (≤ one
-                # copy per rank, ≤ spare slots + 1) so recalibrations that
-                # change replication degrees keep table shapes — and the
-                # compiled step functions — stable.
-                self._r_max = min(controller.G,
-                                  self.n_slots - controller.E + 1)
+            # pin the copy-axis width to its reachable maximum (≤ one
+            # copy per rank, ≤ spare slots + 1; exactly 1 for singleton
+            # policies) so recalibrations that change replication degrees
+            # keep table shapes — and the compiled step functions — stable.
+            self._r_max = min(controller.G,
+                              self.n_slots - controller.E + 1)
         if controller is not None:
             self._apply_perm(self._controller_perm(), charge=False)
         else:
@@ -237,13 +239,17 @@ class Engine:
         share view of the same slot table (cached per placement object).
         """
         pl = self.controller.placement
-        if self.weighted_routing or not isinstance(pl, ReplicatedPlacement):
+        if self.weighted_routing:
             return pl
         if getattr(self, "_uniform_clock_src", None) is not pl:
-            nc = pl.n_copies()
-            share = 1.0 / np.take_along_axis(nc, pl.slot_expert, axis=1)
+            se = pl.slot_expert
+            nc_pad = np.concatenate(          # phantom col: avoid 0-division
+                [pl.n_copies(), np.ones((pl.n_layers, 1))], axis=1)
+            share = np.where(se < pl.n_experts,
+                             1.0 / np.take_along_axis(nc_pad, se, axis=1),
+                             0.0)
             self._uniform_clock_pl = ReplicatedPlacement(
-                pl.slot_expert, share, pl.n_ranks, pl.n_experts)
+                se, share, pl.n_ranks, pl.n_experts)
             self._uniform_clock_src = pl
         return self._uniform_clock_pl
 

@@ -80,14 +80,23 @@ def goodput(records: Sequence[RequestRecord], slo: SLO) -> float:
 
 def slo_frontier(qps_to_goodput: Dict[float, float],
                  target: float = 0.90) -> float:
-    """Max sustainable QPS holding ≥ target goodput (linear interp)."""
+    """Max sustainable QPS holding ≥ target goodput (linear interpolation).
+
+    "Sustainable" means the piecewise-linear goodput curve stays ≥ target
+    at every rate up to the frontier, so the frontier is the *first*
+    downward crossing: if goodput dips below target anywhere in the sweep,
+    higher sampled rates do not extend the frontier even when a later
+    (non-monotone / noisy) sample pops back above target — previously such
+    a dip between non-adjacent above-target samples was sailed past and
+    the recovery point reported instead. Curves that never drop below the
+    target yield the largest sampled QPS; curves already below it at the
+    lowest sampled QPS yield 0.
+    """
     pts = sorted(qps_to_goodput.items())
-    best = 0.0
-    for i, (q, g) in enumerate(pts):
-        if g >= target:
-            best = q
-        elif i > 0 and pts[i - 1][1] >= target > g:
-            q0, g0 = pts[i - 1]
-            if g0 > g:
-                best = q0 + (q - q0) * (g0 - target) / (g0 - g)
-    return best
+    if not pts or pts[0][1] < target:
+        return 0.0
+    for (q0, g0), (q, g) in zip(pts, pts[1:]):
+        if g < target:
+            # first downward crossing: g0 ≥ target > g (g0 > g follows)
+            return q0 + (q - q0) * (g0 - target) / (g0 - g)
+    return pts[-1][0]

@@ -29,7 +29,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import (ClusterVariability, PerfModel, Placement,
                         ViBEController)
-from repro.core.placement import copy_enumeration
+from repro.core.placement import copy_enumeration, pad_phantom_column
 from .metrics import RequestRecord
 from .workload import (Request, WorkloadSpec, routing_profile, step_loads,
                        topic_loadings)
@@ -92,15 +92,21 @@ def realized_rank_loads(placement, loads: np.ndarray) -> np.ndarray:
     L, S = se.shape
     E = placement.n_experts
     rows = np.arange(L)[:, None]
+    # phantom slots (ids == E, budget padding) get a sentinel column with
+    # zero load, zero share, and a unit denominator so they contribute
+    # nothing without tripping 0/0
+    loads_pad = pad_phantom_column(loads)
     order, e_sorted, _ = copy_enumeration(se)
     sh = np.take_along_axis(share, order, axis=1)
-    denom = np.zeros((L, E))
+    denom = np.zeros((L, E + 1))
     np.add.at(denom, (rows, e_sorted), sh)
-    exact = sh / denom[rows, e_sorted] * loads[rows, e_sorted]
+    denom[:, E] = 1.0
+    exact = sh / denom[rows, e_sorted] * loads_pad[rows, e_sorted]
     base = np.floor(exact)
-    base_sum = np.zeros((L, E))
+    base_sum = np.zeros((L, E + 1))
     np.add.at(base_sum, (rows, e_sorted), base)
-    rem = np.maximum(np.round(loads - base_sum), 0.0)      # leftovers (L, E)
+    rem = np.maximum(np.round(loads_pad - base_sum), 0.0)  # leftovers (L, E+1)
+    rem[:, E] = 0.0
     # rank copies within each expert's run by descending fractional part
     # (stable → slot order breaks ties, matching the copy axis); the first
     # rem[l, e] of them absorb one leftover token each

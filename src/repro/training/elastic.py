@@ -23,8 +23,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import PerfModel, Placement, solve_model_placement
-from repro.core.placement import AnyPlacement
+from repro.core import (PerfModel, ReplicatedPlacement, SolveContext,
+                        get_policy)
 
 __all__ = ["StragglerDetector", "replan_after_loss", "elastic_targets"]
 
@@ -64,23 +64,27 @@ def replan_after_loss(
     perf_models: Sequence[PerfModel],   # original G models
     lost_ranks: Sequence[int],
     policy: str = "vibe",
-) -> Tuple[AnyPlacement, np.ndarray]:
-    """Re-solve placement over surviving ranks (any registered policy;
-    vibe_r yields a ReplicatedPlacement over the survivors).
+) -> Tuple[ReplicatedPlacement, np.ndarray]:
+    """Re-solve placement over surviving ranks with any registered policy.
 
-    Returns (placement over G' survivors, rank_map (G',) giving each new
-    rank index its original physical rank id — the launcher uses it to
-    rebuild the mesh and the migration plan).
+    Resolved through the :mod:`repro.core.policy` registry — perf models
+    are forwarded exactly when the policy's capabilities ask for them, so a
+    newly registered policy works here without edits. Returns (unified
+    placement over G' survivors — singleton policies give the r_max = 1
+    degenerate — and rank_map (G',) giving each new rank index its original
+    physical rank id; the launcher uses it to rebuild the mesh and the
+    migration plan).
     """
     G = len(perf_models)
     survivors = [g for g in range(G) if g not in set(lost_ranks)]
     if not survivors:
         raise ValueError("no surviving ranks")
+    pol = get_policy(policy)
     models = [perf_models[g] for g in survivors]
-    pl = solve_model_placement(
-        policy, w, len(survivors),
-        perf_models=models if policy in ("vibe", "vibe_r") else None)
-    return pl, np.asarray(survivors, dtype=np.int32)
+    ctx = SolveContext(
+        w=w, n_ranks=len(survivors),
+        perf_models=models if pol.capabilities.needs_perf_models else None)
+    return pol.solve(ctx), np.asarray(survivors, dtype=np.int32)
 
 
 def elastic_targets(perf_models: Sequence[PerfModel],

@@ -98,8 +98,20 @@ class TestReplicatedPlacementValidation:
                                 n_ranks=2, n_experts=2)
 
     def test_expert_ids_in_range(self):
+        # ids strictly beyond the phantom sentinel (== n_experts) are out
+        # of range; the sentinel itself marks a budget-padding phantom slot
         with pytest.raises(ValueError, match="outside"):
-            ReplicatedPlacement(np.array([[0, 2]]), np.array([[1.0, 1.0]]),
+            ReplicatedPlacement(np.array([[0, 3]]), np.array([[1.0, 1.0]]),
+                                n_ranks=2, n_experts=2)
+
+    def test_phantom_slots_carry_no_share(self):
+        se = np.array([[0, 1, 2, 1]])          # slot 2 is a phantom (id == E)
+        sh = np.array([[1.0, 0.5, 0.0, 0.5]])
+        rp = ReplicatedPlacement(se, sh, n_ranks=2, n_experts=2)
+        np.testing.assert_array_equal(rp.n_copies(), [[1, 2]])
+        np.testing.assert_array_equal(rp.rank_slot_budget(), [[2, 1]])
+        with pytest.raises(ValueError, match="phantom"):
+            ReplicatedPlacement(se, np.array([[1.0, 0.5, 0.25, 0.25]]),
                                 n_ranks=2, n_experts=2)
 
     def test_every_expert_needs_a_slot(self):

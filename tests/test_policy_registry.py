@@ -1,0 +1,426 @@
+"""Placement-policy registry: protocol, capabilities, shim parity, budgets.
+
+Covers the registry API surface end to end: unknown-name errors list what
+is registered, the deprecated ``solve_model_placement`` shim reproduces the
+old string-dispatch paths bit for bit, capability flags (not name
+comparisons) gate the controller's incremental path, and per-rank
+(non-uniform) slot budgets are first-class through ``SolveContext``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (DriftConfig, Placement, PerfModel,
+                        PolicyCapabilities, ReplicatedPlacement,
+                        SolveContext, UnknownPolicyError, ViBEConfig,
+                        ViBEController, contiguous_placement, eplb_placement,
+                        gem_placement, get_policy, harmoeny_placement,
+                        incremental_update_replicated, make_cluster,
+                        predicted_rank_latencies, register_policy,
+                        registered_policies, reweight_shares_by_speed,
+                        solve_model_placement, vibe_placement,
+                        vibe_r_placement)
+from repro.core import policy as policy_mod
+
+
+def linear_models(speeds):
+    """f_g(n) = n / speed — exact linear latency curves per device."""
+    return [PerfModel(np.array([0.0, 1e6]),
+                      np.array([1e-9, 1e6 / s]), device_id=g)
+            for g, s in enumerate(speeds)]
+
+
+@pytest.fixture
+def fixture():
+    rng = np.random.default_rng(11)
+    G, E, L = 4, 16, 3
+    w = rng.dirichlet(np.full(E, 0.3), size=L) * 20_000
+    perf = linear_models([1.0, 0.9, 1.1, 0.6])
+    return G, E, L, w, perf
+
+
+# ---------------------------------------------------------------------------
+# registry surface
+# ---------------------------------------------------------------------------
+
+def test_builtin_family_registered():
+    names = registered_policies()
+    for expected in ("contiguous", "eplb", "gem", "harmoeny", "vibe",
+                     "vibe_r"):
+        assert expected in names
+    assert names == tuple(sorted(names))
+
+
+def test_every_registered_policy_satisfies_protocol():
+    from repro.core.policy import PlacementPolicy
+    for name in registered_policies():
+        pol = get_policy(name)
+        assert isinstance(pol, PlacementPolicy)
+        assert pol.name == name
+        assert isinstance(pol.capabilities, PolicyCapabilities)
+
+
+def test_unknown_policy_error_lists_registered_names():
+    with pytest.raises(UnknownPolicyError) as ei:
+        get_policy("nope")
+    msg = str(ei.value)
+    for name in registered_policies():
+        assert name in msg
+    assert isinstance(ei.value, ValueError)       # legacy except-clauses work
+
+
+def test_register_custom_policy_and_duplicate_rejection(fixture):
+    G, E, L, w, perf = fixture
+
+    class RotatePolicy:
+        name = "_test_rotate"
+        capabilities = PolicyCapabilities(workload_aware=False)
+
+        def solve(self, ctx):
+            e_loc = ctx.n_experts // ctx.n_ranks
+            row = ((np.arange(ctx.n_experts) // e_loc + 1)
+                   % ctx.n_ranks).astype(np.int32)
+            return ReplicatedPlacement.from_singleton(
+                Placement(np.tile(row, (ctx.n_layers, 1)), ctx.n_ranks))
+
+    register_policy(RotatePolicy)
+    try:
+        assert "_test_rotate" in registered_policies()
+        pl = get_policy("_test_rotate").solve(SolveContext(w=w, n_ranks=G))
+        assert isinstance(pl, ReplicatedPlacement)
+        assert pl.n_copies().max() == 1
+        with pytest.raises(ValueError, match="already registered"):
+            register_policy(RotatePolicy)
+        register_policy(RotatePolicy, replace=True)   # explicit override ok
+    finally:
+        policy_mod._REGISTRY.pop("_test_rotate", None)
+
+
+def test_register_rejects_non_conforming_objects():
+    class NoSolve:
+        name = "_test_nosolve"
+        capabilities = PolicyCapabilities()
+
+    with pytest.raises(TypeError, match="protocol"):
+        register_policy(NoSolve)
+    assert "_test_nosolve" not in registered_policies()
+
+    class NoRefine:
+        name = "_test_norefine"
+        capabilities = PolicyCapabilities(supports_incremental=True)
+
+        def solve(self, ctx):
+            raise NotImplementedError
+
+    # advertising supports_incremental without refine must fail at
+    # registration, not as an AttributeError mid-serving
+    with pytest.raises(TypeError, match="refine"):
+        register_policy(NoRefine)
+    assert "_test_norefine" not in registered_policies()
+
+
+# ---------------------------------------------------------------------------
+# deprecation shim: bit-identical to the historical string-dispatch paths
+# ---------------------------------------------------------------------------
+
+def test_shim_golden_parity_all_legacy_policies(fixture):
+    G, E, L, w, perf = fixture
+    legacy = {
+        "contiguous": contiguous_placement(L, E, G),
+        "eplb": eplb_placement(w, G),
+        "vibe": vibe_placement(w, perf),
+        "vibe_r": vibe_r_placement(w, perf),
+    }
+    for name, ref in legacy.items():
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            got = solve_model_placement(
+                name, w, G,
+                perf_models=perf if name in ("vibe", "vibe_r") else None)
+        assert type(got) is type(ref)
+        if isinstance(ref, ReplicatedPlacement):
+            np.testing.assert_array_equal(got.slot_expert, ref.slot_expert)
+            np.testing.assert_array_equal(got.share, ref.share)
+        else:
+            np.testing.assert_array_equal(got.assign, ref.assign)
+
+
+def test_shim_preserves_legacy_error_behaviour(fixture):
+    G, E, L, w, perf = fixture
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="requires perf_models"):
+            solve_model_placement("vibe", w, G)
+        with pytest.raises(ValueError, match="per rank"):
+            solve_model_placement("vibe", w, G + 1, perf_models=perf)
+        with pytest.raises(ValueError):
+            solve_model_placement("nope", w, G)
+        # historical leniency: slots_per_rank silently ignored when the
+        # policy's capabilities don't accept a budget
+        pl = solve_model_placement("eplb", w, G, slots_per_rank=7)
+        assert isinstance(pl, Placement)
+
+
+# ---------------------------------------------------------------------------
+# unified placement representation
+# ---------------------------------------------------------------------------
+
+def test_registry_solves_are_unified_replicated(fixture):
+    G, E, L, w, perf = fixture
+    for name in registered_policies():
+        pol = get_policy(name)
+        ctx = SolveContext(
+            w=w, n_ranks=G,
+            perf_models=perf if pol.capabilities.needs_perf_models else None)
+        pl = pol.solve(ctx)
+        assert isinstance(pl, ReplicatedPlacement), name
+        lat = predicted_rank_latencies(pl, w, perf)
+        assert np.isfinite(lat).all(), name
+        if not pol.capabilities.supports_replication:
+            assert int(pl.n_copies().max()) == 1, name
+            # singleton degenerate: assign/to_singleton round-trip
+            single = pl.to_singleton()
+            np.testing.assert_array_equal(pl.assign, single.assign)
+            back = ReplicatedPlacement.from_singleton(single)
+            np.testing.assert_array_equal(back.slot_expert, pl.slot_expert)
+
+
+def test_to_singleton_rejects_genuine_replication(fixture):
+    G, E, L, w, perf = fixture
+    rp = vibe_r_placement(w, perf, slots_per_rank=E // G + 1)
+    with pytest.raises(ValueError, match="replicated"):
+        rp.to_singleton()
+    with pytest.raises(ValueError, match="replicated"):
+        rp.assign
+
+
+# ---------------------------------------------------------------------------
+# ViBEConfig capability validation
+# ---------------------------------------------------------------------------
+
+def test_config_rejects_budget_for_non_budget_policies():
+    for name in ("vibe", "eplb", "contiguous", "gem"):
+        with pytest.raises(ValueError, match="accepts_slot_budget"):
+            ViBEConfig(policy=name, slot_budget=3)
+    ViBEConfig(policy="vibe_r", slot_budget=3)            # fine
+    ViBEConfig(policy="harmoeny", slot_budget=[3, 2, 3, 2])
+
+
+def test_config_rejects_reweight_without_refine_path():
+    # the reweight only acts on the incremental refine path, so singleton
+    # policies AND replication-capable ones without refine (harmoeny) must
+    # reject it instead of accepting a silently inert flag
+    for name in ("vibe", "eplb", "contiguous", "gem", "harmoeny"):
+        with pytest.raises(ValueError, match="reweight_shares"):
+            ViBEConfig(policy=name, reweight_shares=True)
+    ViBEConfig(policy="vibe_r", reweight_shares=True)     # fine
+
+
+def test_config_rejects_unknown_policy():
+    with pytest.raises(UnknownPolicyError, match="registered"):
+        ViBEConfig(policy="definitely_not_registered")
+
+
+def test_config_legacy_slots_per_rank_kwarg_still_constructs():
+    """The published pre-registry kwarg keeps working as an alias."""
+    cfg = ViBEConfig(policy="vibe_r", slots_per_rank=6)
+    assert cfg.slot_budget == 6
+    assert cfg.slots_per_rank == 6
+    cfg = ViBEConfig(policy="vibe_r", slot_budget=[3, 2, 3, 2])
+    assert list(cfg.slots_per_rank) == [3, 2, 3, 2]
+    with pytest.raises(ValueError, match="not conflicting both"):
+        ViBEConfig(policy="vibe_r", slot_budget=6, slots_per_rank=7)
+    with pytest.raises(ValueError, match="accepts_slot_budget"):
+        ViBEConfig(policy="vibe", slots_per_rank=6)
+
+
+def test_context_validates_budget_feasibility_at_boundary(fixture):
+    """Infeasible budgets fail when the SolveContext is built — before any
+    policy (including third-party ones) can read them."""
+    G, E, L, w, perf = fixture
+    with pytest.raises(ValueError, match="cannot hold"):
+        SolveContext(w=w, n_ranks=G, slot_budget=[1, 1, 1, 1])   # Σ < E
+    with pytest.raises(ValueError, match="at least 1"):
+        SolveContext(w=w, n_ranks=G, slot_budget=[0, 8, 8, 8])
+    ctx = SolveContext(w=w, n_ranks=G, slot_budget=5)            # scalar → (G,)
+    np.testing.assert_array_equal(ctx.slot_budget, np.full(G, 5))
+
+
+# ---------------------------------------------------------------------------
+# capability flags gate the controller's recalibration path
+# ---------------------------------------------------------------------------
+
+def _drive_to_drift(policy, **cfg_kw):
+    cluster = make_cluster(4, "mi325x", d_model=256, d_ff=128,
+                           experts_per_rank=4)
+    rng = np.random.default_rng(5)
+    w0 = rng.dirichlet(np.full(16, 0.3), size=3) * 20_000
+    ctl = ViBEController(
+        3, 16, 4, cluster.fit_models(),
+        ViBEConfig(policy=policy, adaptive=True, expert_bytes=10,
+                   drift=DriftConfig(window=10, interval=5, cooldown=5),
+                   **cfg_kw))
+    for _ in range(30):
+        assert ctl.observe(w0 * rng.uniform(0.97, 1.03)) is None
+    w1 = np.roll(w0, 6, axis=1)
+    for _ in range(40):
+        upd = ctl.observe(w1)
+        if upd is not None:
+            return ctl, upd
+    raise AssertionError(f"no drift update fired for {policy}")
+
+
+def test_supports_incremental_selects_refine_path():
+    for policy in ("vibe", "vibe_r"):
+        ctl, upd = _drive_to_drift(policy)
+        assert get_policy(policy).capabilities.supports_incremental
+        assert not upd.full_resolve
+        assert upd.swaps_per_layer is not None
+        assert upd.moved_experts == upd.migration_bytes // 10
+        assert isinstance(upd.placement, ReplicatedPlacement)
+
+
+def test_no_incremental_capability_means_full_resolve():
+    for policy in ("eplb", "harmoeny", "gem"):
+        ctl, upd = _drive_to_drift(policy)
+        assert not get_policy(policy).capabilities.supports_incremental
+        assert upd.full_resolve
+        assert upd.swaps_per_layer is None
+
+
+def test_static_policy_never_recalibrates():
+    cluster = make_cluster(4, "mi325x", d_model=256, d_ff=128,
+                           experts_per_rank=4)
+    ctl = ViBEController(2, 8, 4, cluster.fit_models(),
+                         ViBEConfig(policy="contiguous", adaptive=True))
+    assert not get_policy("contiguous").capabilities.workload_aware
+    rng = np.random.default_rng(7)
+    for i in range(60):
+        w = rng.dirichlet(np.full(8, 0.3), size=2) * 1000 * (1 + i)
+        assert ctl.observe(w) is None
+
+
+# ---------------------------------------------------------------------------
+# the two related-work baselines
+# ---------------------------------------------------------------------------
+
+def test_gem_routes_around_slow_rank(fixture):
+    G, E, L, w, perf = fixture                   # rank 3 is 40% slower
+    pl = gem_placement(w, perf)
+    loads = pl.rank_loads(w)
+    assert loads[:, 3].mean() < 0.85 * loads[:, :3].mean()
+    # uniform slot constraint + bijectivity hold
+    counts = np.apply_along_axis(np.bincount, 1, pl.assign, minlength=G)
+    assert (counts == E // G).all()
+    # variability-aware greedy beats the oblivious layouts it baselines
+    lat_gem = predicted_rank_latencies(pl, w, perf).max(1).mean()
+    lat_cont = predicted_rank_latencies(
+        contiguous_placement(L, E, G), w, perf).max(1).mean()
+    assert lat_gem < lat_cont
+
+
+def test_harmoeny_replicates_hot_expert_load_balance_only():
+    G, E, L = 4, 16, 2
+    w = np.full((L, E), 100.0)
+    w[:, 0] = 20_000.0                           # one mega-hot expert
+    rp = harmoeny_placement(w, G, slots_per_rank=E // G + 2)
+    assert rp.n_copies()[:, 0].min() >= 2        # hot expert got copies
+    # shares are uniform over copies (hardware-oblivious by construction)
+    cs = rp.copy_shares()
+    nc = rp.n_copies()
+    expect = np.where(np.arange(cs.shape[-1])[None, None, :] < nc[..., None],
+                      1.0 / nc[..., None], 0.0)
+    np.testing.assert_allclose(cs, expect, atol=1e-12)
+    # replication splits the hot expert below the singleton bound
+    singleton_max = eplb_placement(w, G).rank_loads(w).max()
+    assert rp.rank_loads(w).max() < 0.7 * singleton_max
+
+
+def test_harmoeny_ignores_hardware(fixture):
+    """Same solve whatever the perf models say — it never reads them."""
+    G, E, L, w, perf = fixture
+    a = harmoeny_placement(w, G)
+    ctx = SolveContext(w=w, n_ranks=G, perf_models=perf)  # carried, unread
+    b = get_policy("harmoeny").solve(ctx)
+    np.testing.assert_array_equal(a.slot_expert, b.slot_expert)
+    np.testing.assert_array_equal(a.share, b.share)
+
+
+# ---------------------------------------------------------------------------
+# per-rank (non-uniform) slot budgets
+# ---------------------------------------------------------------------------
+
+def test_non_uniform_slot_budget_solve(fixture):
+    G, E, L, w, perf = fixture
+    budget = np.array([6, 4, 5, 4])              # memory-headroom driven
+    ctx = SolveContext(w=w, n_ranks=G, perf_models=perf, slot_budget=budget)
+    rp = get_policy("vibe_r").solve(ctx)
+    # physical layout: uniform s_max slots per rank, phantoms pad the tail
+    assert rp.slots_per_rank == 6
+    assert rp.n_slots == 24
+    np.testing.assert_array_equal(rp.rank_slot_budget(),
+                                  np.tile(budget, (L, 1)))
+    nc = rp.n_copies()
+    assert (nc >= 1).all()
+    assert int(nc.sum()) == int(budget.sum()) * L
+    # phantom slots carry no expert and no share
+    phantom = rp.slot_expert == E
+    assert int(phantom.sum()) == (6 * G - int(budget.sum())) * L
+    assert np.all(rp.share[phantom] == 0.0)
+    # traffic conservation through fractional and realized splits
+    from repro.serving.simulator import realized_rank_loads
+    np.testing.assert_allclose(rp.rank_loads(w).sum(1), w.sum(1))
+    realized = realized_rank_loads(rp, np.round(w))
+    np.testing.assert_allclose(realized.sum(1), np.round(w).sum(1))
+    assert np.isfinite(predicted_rank_latencies(rp, w, perf)).all()
+
+
+def test_non_uniform_budget_harmoeny(fixture):
+    G, E, L, w, perf = fixture
+    rp = harmoeny_placement(w, G, slots_per_rank=[5, 4, 4, 5])
+    np.testing.assert_array_equal(rp.rank_slot_budget(),
+                                  np.tile([5, 4, 4, 5], (L, 1)))
+    np.testing.assert_allclose(rp.rank_loads(w).sum(1), w.sum(1))
+
+
+def test_non_uniform_budget_incremental_and_reweight(fixture):
+    """Swap-based refinement + share reweighting preserve per-rank budgets
+    (phantom slots never move — they are missing memory, not capacity)."""
+    G, E, L, w, perf = fixture
+    budget = np.array([6, 4, 5, 4])
+    rp = vibe_r_placement(w, perf, slots_per_rank=budget)
+    w2 = np.roll(w, 5, axis=1)
+    res = incremental_update_replicated(rp, w2, perf)
+    np.testing.assert_array_equal(res.placement.rank_slot_budget(),
+                                  rp.rank_slot_budget())
+    np.testing.assert_array_equal(res.placement.n_copies().sum(1),
+                                  rp.n_copies().sum(1))
+    rw = reweight_shares_by_speed(res.placement, w2, perf)
+    assert np.all(rw.share[rw.slot_expert == E] == 0.0)
+    np.testing.assert_allclose(rw.rank_loads(w2).sum(1), w2.sum(1))
+
+
+def test_budget_validation_errors(fixture):
+    G, E, L, w, perf = fixture
+    with pytest.raises(ValueError, match="cannot hold"):
+        vibe_r_placement(w, perf, slots_per_rank=[1, 1, 1, 1])   # sum < E
+    with pytest.raises(ValueError, match="at least 1"):
+        vibe_r_placement(w, perf, slots_per_rank=[0, 8, 8, 8])
+    with pytest.raises(ValueError, match="full .*expert set"):
+        vibe_r_placement(w, perf, slots_per_rank=[E + 1, 5, 5, 5])
+    with pytest.raises(ValueError, match="shape"):
+        SolveContext(w=w, n_ranks=G, perf_models=perf,
+                     slot_budget=[3, 3, 3])                      # wrong G
+    # budget offered to a policy that can't honour it → loud error
+    with pytest.raises(ValueError, match="accepts_slot_budget"):
+        get_policy("vibe").solve(
+            SolveContext(w=w, n_ranks=G, perf_models=perf, slot_budget=5))
+
+
+def test_uniform_array_budget_matches_scalar(fixture):
+    """A constant (G,) budget array is exactly the scalar path — no phantom
+    padding, bit-identical layout."""
+    G, E, L, w, perf = fixture
+    a = vibe_r_placement(w, perf, slots_per_rank=5)
+    b = vibe_r_placement(w, perf, slots_per_rank=np.full(G, 5))
+    np.testing.assert_array_equal(a.slot_expert, b.slot_expert)
+    np.testing.assert_array_equal(a.share, b.share)
+    assert not np.any(a.slot_expert == E)

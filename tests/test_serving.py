@@ -57,6 +57,26 @@ class TestMetrics:
         f = slo_frontier({1.0: 1.0, 2.0: 0.95, 3.0: 0.5}, target=0.9)
         assert 2.0 < f < 3.0
 
+    def test_frontier_non_monotone_dip(self):
+        """Goodput dips below target between non-adjacent above-target
+        samples: the frontier is the interpolated crossing *into* the dip,
+        not the (noisy) recovery point further out."""
+        curve = {1.0: 1.0, 2.0: 0.95, 3.0: 0.5, 4.0: 0.95, 5.0: 0.2}
+        f = slo_frontier(curve, target=0.9)
+        assert f == pytest.approx(2.0 + (0.95 - 0.9) / (0.95 - 0.5))
+        assert f < 3.0                       # never sails past the dip
+
+    def test_frontier_edge_cases(self):
+        assert slo_frontier({}, target=0.9) == 0.0
+        # already failing at the lowest sampled rate → nothing sustainable
+        assert slo_frontier({1.0: 0.5, 2.0: 0.95}, target=0.9) == 0.0
+        # never dips → the largest sampled rate (no extrapolation)
+        assert slo_frontier({1.0: 0.99, 2.0: 0.92}, target=0.9) == 2.0
+        # a sample sitting exactly at target still counts as sustained;
+        # the crossing then starts from it
+        assert slo_frontier({1.0: 0.95, 2.0: 0.9, 3.0: 0.1},
+                            target=0.9) == pytest.approx(2.0)
+
 
 class TestSimulator:
     def setup_method(self):
