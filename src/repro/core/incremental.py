@@ -24,8 +24,8 @@ from typing import List, Sequence, Tuple
 import numpy as np
 
 from .perf_model import PerfModel
-from .placement import (Placement, ReplicatedPlacement, pad_phantom_column,
-                        reweight_shares_by_speed)
+from .placement import (Placement, ReplicatedPlacement, _speed_targets,
+                        pad_phantom_column, reweight_shares_by_speed)
 
 __all__ = ["Swap", "IncrementalResult", "incremental_update",
            "SlotSwap", "incremental_update_replicated"]
@@ -151,40 +151,35 @@ def incremental_update(
     )
 
 
-def incremental_update_replicated(
+def _replicated_objective(placement: ReplicatedPlacement, w: np.ndarray,
+                          perf_models: Sequence[PerfModel]) -> float:
+    """Σ_l max_g f_g(n_{l,g}) under the placement's own traffic shares."""
+    loads = placement.rank_loads(np.atleast_2d(w))               # (L, G)
+    lat = np.stack([np.asarray(perf_models[g](loads[:, g]), dtype=np.float64)
+                    for g in range(placement.n_ranks)], axis=1)
+    return float(lat.max(axis=1).sum())
+
+
+def _replicated_swap_run(
     placement: ReplicatedPlacement,
-    w: np.ndarray,                       # (L, E) fresh activation matrix
+    w: np.ndarray,
     perf_models: Sequence[PerfModel],
-    epsilon: float = 0.03,
-    max_swaps_per_layer: int = 64,
-    reweight_shares: bool = False,
+    epsilon: float,
+    max_swaps_per_layer: int,
+    speeds: "np.ndarray | None" = None,
 ) -> IncrementalResult:
-    """Algorithm 2 at (expert, copy)-slot granularity (ViBE-R placements).
-
-    The swap unit is a physical *slot*: exchanging the residents of one slot
-    on the slowest rank with one on the fastest moves exactly two expert
-    copies (and their traffic shares) — the share tables are updated in
-    place alongside the slot table, so per-expert share sums and replica
-    counts are invariant, which keeps every logical expert resident
-    somewhere. Swaps that would colocate two copies of the same expert on
-    one rank are skipped (a colocated replica absorbs no skew). The swap
-    log doubles as the weight-migration plan, exactly as in the singleton
-    solver.
-
-    ``reweight_shares=True`` additionally re-proportions each expert's copy
-    shares to the speeds of the ranks its copies now sit on (solver phase 3
-    re-applied; see :func:`reweight_shares_by_speed`). Off by default: the
-    swap loop scores swaps under the *carried* shares, so reweighting
-    afterwards trades the loop's monotone-latency guarantee for shares that
-    match the new copy→rank map.
-    """
+    """One slot-swap greedy pass. ``speeds=None`` scores swaps under the
+    *carried* shares (legacy); ``speeds`` (L, G) scores them under the
+    *post-reweight* shares each candidate map would get (folded mode): the
+    two candidate experts' copy shares are re-proportioned to their
+    hypothetical rank speeds before pricing the pair, and after a swap the
+    affected experts' shares/loads are rebuilt so the loop's view always
+    matches what :func:`reweight_shares_by_speed` will produce."""
     w = np.atleast_2d(np.asarray(w, dtype=np.float64))
     G = placement.n_ranks
     L, S = placement.slot_expert.shape
     E = placement.n_experts
     s_loc = placement.slots_per_rank
-    if w.shape != (L, E):
-        raise ValueError(f"w shape {w.shape} != {(L, E)}")
 
     se = placement.slot_expert.copy()
     sh = placement.share.copy()
@@ -199,6 +194,25 @@ def incremental_update_replicated(
     for l in range(L):
         load = slot_load[l].reshape(G, s_loc).sum(axis=1)
         rank_of = np.arange(S) // s_loc
+        spl = None if speeds is None else speeds[l]
+
+        def folded_pair_loads(si, sj, ei, ej, g_plus, g_minus, lp, lm):
+            """(new_lp, new_lm) with ei→g-, ej→g+ and both experts' copy
+            shares re-proportioned to the speeds of their new ranks."""
+            new_lp, new_lm = lp, lm
+            for e, src, dst in ((ei, si, g_minus), (ej, sj, g_plus)):
+                cs = np.flatnonzero(se[l] == e)
+                r_new = rank_of[cs].copy()
+                r_new[cs == src] = dst
+                sp = spl[r_new]
+                sh_new = sp / sp.sum()
+                we = w[l, e]
+                cur = slot_load[l, cs]
+                new_lp += (we * sh_new[r_new == g_plus].sum()
+                           - cur[rank_of[cs] == g_plus].sum())
+                new_lm += (we * sh_new[r_new == g_minus].sum()
+                           - cur[rank_of[cs] == g_minus].sum())
+            return new_lp, new_lm
 
         for _ in range(max_swaps_per_layer):
             lat = _rank_latencies(load, perf_models)
@@ -229,10 +243,16 @@ def incremental_update_replicated(
                     # dedup: arriving copy must not meet a sibling copy
                     if ei in experts_m or ej in experts_p:
                         continue
-                    dn = slot_load[l, si] - slot_load[l, sj]
-                    if dn <= 0:
-                        continue  # only moving load off the slow rank helps
-                    new_max = max(float(fp(lp - dn)), float(fm(lm + dn)))
+                    if spl is None:
+                        dn = slot_load[l, si] - slot_load[l, sj]
+                        if dn <= 0:
+                            continue  # only off-loading the slow rank helps
+                        new_lp, new_lm = lp - dn, lm + dn
+                    else:
+                        new_lp, new_lm = folded_pair_loads(
+                            si, sj, ei, ej, g_plus, g_minus, lp, lm)
+                        dn = lp - new_lp
+                    new_max = max(float(fp(new_lp)), float(fm(new_lm)))
                     gain = cur_pair_max - new_max
                     if gain > best_gain + 1e-15:
                         best_gain, best = gain, (int(si), int(sj), dn)
@@ -240,10 +260,21 @@ def incremental_update_replicated(
                 break  # no latency reduction available
 
             si, sj, dn = best
-            for arr in (se, sh, slot_load):
-                arr[l, si], arr[l, sj] = arr[l, sj], arr[l, si]
-            load[g_plus] -= dn
-            load[g_minus] += dn
+            if spl is None:
+                for arr in (se, sh, slot_load):
+                    arr[l, si], arr[l, sj] = arr[l, sj], arr[l, si]
+                load[g_plus] -= dn
+                load[g_minus] += dn
+            else:
+                ei, ej = int(se[l, si]), int(se[l, sj])
+                se[l, si], se[l, sj] = se[l, sj], se[l, si]
+                # rebuild the two swapped experts' reweighted shares/loads
+                for e in (ei, ej):
+                    cs = np.flatnonzero(se[l] == e)
+                    sp = spl[rank_of[cs]]
+                    sh[l, cs] = sp / sp.sum()
+                    slot_load[l, cs] = w[l, e] * sh[l, cs]
+                load = slot_load[l].reshape(G, s_loc).sum(axis=1)
             swaps.append(SlotSwap(l, si, sj, g_plus, g_minus))
             per_layer[l] += 1
 
@@ -251,12 +282,70 @@ def incremental_update_replicated(
         if lat.max() <= (1.0 + epsilon) * lat.mean():
             converged += 1
 
-    new = ReplicatedPlacement(se, sh, G, placement.n_experts)
-    if reweight_shares:
-        new = reweight_shares_by_speed(new, w, perf_models)
     return IncrementalResult(
-        placement=new,
+        placement=ReplicatedPlacement(se, sh, G, E),
         swaps=swaps,
         converged_layers=converged,
         per_layer_swaps=per_layer,
     )
+
+
+def incremental_update_replicated(
+    placement: ReplicatedPlacement,
+    w: np.ndarray,                       # (L, E) fresh activation matrix
+    perf_models: Sequence[PerfModel],
+    epsilon: float = 0.03,
+    max_swaps_per_layer: int = 64,
+    reweight_shares: bool = False,
+) -> IncrementalResult:
+    """Algorithm 2 at (expert, copy)-slot granularity (ViBE-R placements).
+
+    The swap unit is a physical *slot*: exchanging the residents of one slot
+    on the slowest rank with one on the fastest moves exactly two expert
+    copies (and their traffic shares) — the share tables are updated in
+    place alongside the slot table, so per-expert share sums and replica
+    counts are invariant, which keeps every logical expert resident
+    somewhere. Swaps that would colocate two copies of the same expert on
+    one rank are skipped (a colocated replica absorbs no skew). The swap
+    log doubles as the weight-migration plan, exactly as in the singleton
+    solver.
+
+    ``reweight_shares=True`` folds the share reweighting *into* the swap
+    search: the loop starts from the reweighted shares, scores every
+    candidate swap under the post-reweight shares its new copy→rank map
+    would get (solver phase 3 inside the objective, not applied after the
+    fact), and rebuilds the swapped experts' shares after each apply. A
+    carried-share pass with post-hoc :func:`reweight_shares_by_speed` is
+    still run as a safety net and the better-scoring result (by
+    Σ_l max_g f_g) is returned — so folding can only match or improve on
+    the historical post-hoc path. Off by default: the swap loop scores
+    under the carried shares and no reweighting happens at all.
+    """
+    w = np.atleast_2d(np.asarray(w, dtype=np.float64))
+    L, S = placement.slot_expert.shape
+    E = placement.n_experts
+    if w.shape != (L, E):
+        raise ValueError(f"w shape {w.shape} != {(L, E)}")
+
+    if not reweight_shares:
+        return _replicated_swap_run(placement, w, perf_models, epsilon,
+                                    max_swaps_per_layer)
+
+    # folded: search under post-reweight shares (same speed estimate
+    # reweight_shares_by_speed uses), starting from a reweighted table
+    speeds, _ = _speed_targets(w, perf_models, "rank")
+    folded = _replicated_swap_run(
+        reweight_shares_by_speed(placement, w, perf_models), w, perf_models,
+        epsilon, max_swaps_per_layer, speeds=speeds)
+    folded = dataclasses.replace(
+        folded, placement=reweight_shares_by_speed(folded.placement, w,
+                                                   perf_models))
+    legacy = _replicated_swap_run(placement, w, perf_models, epsilon,
+                                  max_swaps_per_layer)
+    posthoc = dataclasses.replace(
+        legacy, placement=reweight_shares_by_speed(legacy.placement, w,
+                                                   perf_models))
+    if (_replicated_objective(folded.placement, w, perf_models)
+            <= _replicated_objective(posthoc.placement, w, perf_models)):
+        return folded
+    return posthoc

@@ -18,9 +18,10 @@ import jax
 import jax.numpy as jnp
 
 from .moe_ffn import fused_moe_ffn_pallas
+from .ragged_moe_ffn import ragged_moe_ffn_pallas
 from .router import router_topk_pallas
 
-__all__ = ["fused_moe_ffn", "router_topk", "pick_blocks"]
+__all__ = ["fused_moe_ffn", "ragged_moe_ffn", "router_topk", "pick_blocks"]
 
 _VMEM_BUDGET = 14 * 1024 * 1024     # leave headroom under 16 MiB
 
@@ -49,6 +50,17 @@ def fused_moe_ffn(w1, w3, w2, toks):
     bm, bf = pick_blocks(D, F)
     return fused_moe_ffn_pallas(w1, w3, w2, toks, bm=bm, bf=bf,
                                 interpret=not _on_tpu())
+
+
+def ragged_moe_ffn(w1, w3, w2, toks, tile_group):
+    """Ragged grouped FFN: flat group-sorted (T, D) buffer + per-tile expert
+    ids (see kernels.ragged_moe_ffn). Drop-in for the dispatch's ragged
+    ffn slot; the row tile bm is implied by T // len(tile_group)."""
+    D = toks.shape[-1]
+    F = w1.shape[-1]
+    _, bf = pick_blocks(D, F)
+    return ragged_moe_ffn_pallas(w1, w3, w2, toks, tile_group, bf=bf,
+                                 interpret=not _on_tpu())
 
 
 def router_topk(logits, top_k: int):

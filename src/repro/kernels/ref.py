@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["moe_ffn_ref", "router_topk_ref"]
+__all__ = ["moe_ffn_ref", "ragged_moe_ffn_ref", "router_topk_ref"]
 
 
 def moe_ffn_ref(w1: jnp.ndarray, w3: jnp.ndarray, w2: jnp.ndarray,
@@ -17,6 +17,30 @@ def moe_ffn_ref(w1: jnp.ndarray, w3: jnp.ndarray, w2: jnp.ndarray,
     h = jnp.einsum("ecd,edf->ecf", toks, w1)
     h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", toks, w3)
     return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+def ragged_moe_ffn_ref(w1: jnp.ndarray, w3: jnp.ndarray, w2: jnp.ndarray,
+                       toks: jnp.ndarray,
+                       tile_group: jnp.ndarray) -> jnp.ndarray:
+    """Ragged grouped SwiGLU FFN oracle. toks (T, D) → (T, D).
+
+    ``toks`` is the group-sorted flat buffer (each expert's segment padded
+    to a multiple of the row tile ``bm = T // len(tile_group)``);
+    ``tile_group`` holds the owning expert per (bm, D) tile, sentinel ``E``
+    for unoccupied tiles. Pure jnp: per-tile weight gather + batched GEMMs,
+    so jitted XLA cost scales with the buffer's tile count — the shape the
+    Pallas kernel (and the dispatch paths) must reproduce exactly.
+    """
+    T, D = toks.shape
+    n_tiles = tile_group.shape[0]
+    E = w1.shape[0]
+    g = jnp.minimum(tile_group, E - 1)
+    x = toks.reshape(n_tiles, T // n_tiles, D)
+    h = jnp.einsum("nbd,ndf->nbf", x, w1[g])
+    h = jax.nn.silu(h) * jnp.einsum("nbd,ndf->nbf", x, w3[g])
+    y = jnp.einsum("nbf,nfd->nbd", h, w2[g])
+    y = y * (tile_group < E).astype(y.dtype)[:, None, None]
+    return y.reshape(T, D).astype(toks.dtype)
 
 
 def router_topk_ref(logits: jnp.ndarray, top_k: int):

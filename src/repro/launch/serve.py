@@ -28,7 +28,7 @@ def serve(arch: str, *, policy: str = "vibe", n_requests: int = 12,
           qps: float = 50.0, workload: str = "sharegpt",
           regime: str = "mi325x", max_batch: int = 4, max_seq: int = 96,
           adaptive: bool = True, weighted_routing: bool = True,
-          seed: int = 0):
+          moe_impl: str = "ragged", seed: int = 0):
     cfg = get_smoke(arch)
     if not cfg.is_moe:
         raise SystemExit(f"{arch} has no MoE layers — ViBE serving n/a")
@@ -53,7 +53,8 @@ def serve(arch: str, *, policy: str = "vibe", n_requests: int = 12,
     # it keeps the legacy uniform split for A/B comparison.
     engine = Engine(cfg, controller=controller, cluster=cluster,
                     max_batch=max_batch, max_seq=max_seq,
-                    weighted_routing=weighted_routing, seed=seed)
+                    weighted_routing=weighted_routing, moe_impl=moe_impl,
+                    seed=seed)
     wl = WORKLOADS[workload]
     reqs = sample_requests(wl, n_requests, qps=qps, seed=seed)
     reqs = [type(r)(r.req_id, r.arrival, min(r.prompt_len, max_seq // 2),
@@ -77,6 +78,14 @@ def main() -> int:
                     help="ignore the solver's per-copy traffic shares and "
                          "split assignments uniformly across replicas "
                          "(share-oblivious A/B baseline; vibe_r only)")
+    ap.add_argument("--moe-impl", choices=("ragged", "capacity"),
+                    default="ragged",
+                    help="grouped-FFN implementation the virtual clock "
+                         "prices: 'ragged' (default) = sort-based dropless "
+                         "dispatch, MoE cost tracks realized routed tokens; "
+                         "'capacity' = fixed per-slot buckets, every rank "
+                         "pays slots×capacity rows and overflow drops "
+                         "(legacy baseline)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     engine, records = serve(args.arch, policy=args.policy,
@@ -84,11 +93,12 @@ def main() -> int:
                             workload=args.workload, regime=args.regime,
                             adaptive=args.adaptive,
                             weighted_routing=args.weighted_routing,
+                            moe_impl=args.moe_impl,
                             seed=args.seed)
     s = summarize(records)
     st = engine.stats
     routing = ("share-weighted" if args.weighted_routing
-               else "uniform") + " replica routing"
+               else "uniform") + f" replica routing, {args.moe_impl} FFN"
     print(f"[serve] {args.policy} on {args.arch} ({routing}): "
           f"{st.steps} steps "
           f"({st.prefill_steps} prefill / {st.decode_steps} decode), "

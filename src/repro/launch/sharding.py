@@ -40,9 +40,11 @@ FSDP_THRESHOLD = 1e9
 
 
 def make_rules(cfg: ArchConfig, mesh: Optional[Mesh],
-               phase: str = "train") -> ShardingRules:
+               phase: str = "train",
+               moe_impl: str = "auto") -> ShardingRules:
     if mesh is None:
-        return ShardingRules(mesh=None, moe_dispatch="dense")
+        return ShardingRules(mesh=None, moe_dispatch="dense",
+                             moe_impl=moe_impl)
     tp_size = mesh.shape.get("model", 1)
     heads_ok = (cfg.n_heads % tp_size == 0 and cfg.n_kv_heads % tp_size == 0
                 and tp_size <= cfg.n_kv_heads * (cfg.n_heads // cfg.n_kv_heads))
@@ -60,6 +62,7 @@ def make_rules(cfg: ArchConfig, mesh: Optional[Mesh],
         fsdp=fsdp,
         attn_mode="heads" if heads_ok else "context",
         moe_dispatch="auto",
+        moe_impl=moe_impl,
         capacity_factor=1.25 if phase == "train" else 1.5,
         remat=(phase == "train"),
         decode_expert_tp=expert_tp,

@@ -19,6 +19,18 @@ Three dispatch paths, all semantically identical (modulo capacity drops):
                    duplication" future work, realized here as uniform
                    round-robin duplication).
 
+Each path additionally comes in two **implementations**
+(``ShardingRules.moe_impl``): ``capacity`` — the legacy fixed per-slot
+buckets (cf-bounded buffers, overflow assignments dropped and surfaced in
+``tally[E]``, grouped-FFN cost ``E_loc × capacity`` regardless of skew) —
+and ``ragged`` (the ``auto`` default) — sort-based dropless dispatch:
+assignments are stable-argsorted by physical slot (``_sort_by_slot``,
+O(A log A) vs the old one-hot/cumsum O(A × n_slots)), packed into a flat
+expert-sorted buffer whose per-slot segments are tile-aligned
+(``_ragged_plan``), and the grouped FFN (``kernels.ragged_moe_ffn``)
+executes only occupied (bm, D) tiles — compute tracks *realized* routed
+tokens, hot experts never drop, cold experts burn nothing.
+
 **Placement is positional** (DESIGN.md §3): the stacked expert weights live
 in *physical slot* order; the router produces *logical* expert ids; the
 ``slots_of`` lookup (built from a ViBE/EPLB/contiguous ``Placement``) maps
@@ -129,18 +141,95 @@ def _get_ffn(rules: Optional[ShardingRules]) -> Callable:
     return expert_ffn_ref
 
 
+def _get_ragged_ffn(rules: Optional[ShardingRules]) -> Callable:
+    """Grouped FFN over a flat expert-sorted buffer + per-tile expert ids."""
+    if rules is not None and rules.use_kernel:
+        from repro.kernels import ops
+        return ops.ragged_moe_ffn
+    from repro.kernels.ref import ragged_moe_ffn_ref
+    return ragged_moe_ffn_ref
+
+
+def _sort_by_slot(slot_flat: jnp.ndarray, n_slots: int,
+                  active: Optional[jnp.ndarray] = None):
+    """Sort-based bucketing core shared by every dispatch path.
+
+    Stable-argsorts the (A,) assignment→slot map (inactive assignments get
+    the sentinel key ``n_slots`` so they sort past every real slot) and
+    finds each slot's segment boundaries with ``searchsorted`` — O(A log A)
+    instead of the old one-hot/cumsum O(A × n_slots).
+
+    Returns ``(order, sorted_key, starts, pos_sorted)``:
+
+    * ``order`` (A,) — assignment index in slot-sorted order (stable, so
+      within a slot the original arrival order is preserved);
+    * ``sorted_key`` (A,) — slot id per sorted assignment (``n_slots`` =
+      inactive);
+    * ``starts`` (n_slots + 1,) — segment start per slot;
+      ``starts[n_slots]`` is where the inactive tail begins;
+    * ``pos_sorted`` (A,) — arrival position within the slot's segment.
+    """
+    key = slot_flat.astype(jnp.int32)
+    if active is not None:
+        key = jnp.where(active, key, n_slots)
+    order = jnp.argsort(key)
+    sorted_key = key[order]
+    starts = jnp.searchsorted(
+        sorted_key, jnp.arange(n_slots + 1, dtype=jnp.int32),
+        side="left").astype(jnp.int32)
+    pos_sorted = (jnp.arange(slot_flat.shape[0], dtype=jnp.int32)
+                  - starts[sorted_key])
+    return order, sorted_key, starts, pos_sorted
+
+
 def _bucket_positions(slot_flat: jnp.ndarray, n_slots: int,
                       active: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Arrival position of each assignment within its slot's bucket.
 
     ``slot_flat``: (A,) slot id per assignment; ``active``: (A,) bool mask —
-    inactive assignments consume no capacity. O(A × n_slots) int ops.
+    inactive assignments consume no capacity. Sort-based (``_sort_by_slot``);
+    the stable sort preserves arrival order, so positions are bit-identical
+    to the old one-hot/cumsum build at O(A log A) instead of O(A × n_slots).
+    Positions of inactive assignments are meaningless (callers mask them).
     """
-    oh = jax.nn.one_hot(slot_flat, n_slots, dtype=jnp.int32)
-    if active is not None:
-        oh = oh * active.astype(jnp.int32)[:, None]
-    pos = jnp.cumsum(oh, axis=0) - 1
-    return jnp.take_along_axis(pos, slot_flat[:, None], axis=1)[:, 0]
+    order, _, _, pos_sorted = _sort_by_slot(slot_flat, n_slots, active)
+    return jnp.zeros_like(pos_sorted).at[order].set(pos_sorted)
+
+
+def _ragged_plan(slot_flat: jnp.ndarray, n_slots: int, bm: int,
+                 active: Optional[jnp.ndarray] = None):
+    """Sort-based dropless dispatch plan (the ragged hot path's metadata).
+
+    Lays every assignment into a flat expert-sorted buffer whose per-slot
+    segments are padded to multiples of the row tile ``bm`` (group-aligned:
+    each (bm, D) tile belongs to exactly one slot; empty slots own zero
+    tiles). All shapes are static worst-case bounds; the data-dependent part
+    is *values only*, so the plan jits.
+
+    Returns ``(order, rows, tile_group, n_rows)``:
+
+    * ``order`` (A,) — assignment index in slot-sorted order;
+    * ``rows`` (A,) — buffer row per *sorted* assignment; inactive
+      assignments get ``n_rows`` (out of bounds → scatters drop them,
+      gathers clamp and callers mask them);
+    * ``tile_group`` (n_tiles,) — owning slot per tile, sentinel
+      ``n_slots`` for unoccupied tiles (the grouped FFN skips those);
+    * ``n_rows`` — static buffer row count (``ragged_n_tiles(A) × bm``).
+    """
+    from repro.kernels.ragged_moe_ffn import (ragged_n_tiles,
+                                              ragged_tile_metadata)
+    A = slot_flat.shape[0]
+    order, sorted_key, starts, pos_sorted = _sort_by_slot(
+        slot_flat, n_slots, active)
+    sizes = jnp.diff(starts)                         # (n_slots,)
+    n_tiles = ragged_n_tiles(A, n_slots, bm)
+    n_rows = n_tiles * bm
+    row_off, tile_group = ragged_tile_metadata(sizes, bm, n_tiles)
+    rows = jnp.where(
+        sorted_key < n_slots,
+        row_off[jnp.minimum(sorted_key, n_slots - 1)] + pos_sorted,
+        n_rows)
+    return order, rows, tile_group, n_rows
 
 
 #: Knuth multiplicative-hash constant: odd, so ``i * KNUTH mod 2^32`` is an
@@ -230,6 +319,173 @@ def _dense_dispatch(p, xf, route_seed, *, top_k, n_experts, slots_of,
 def _aux_loss(tally, mean_prob, n_experts):
     frac = tally / jnp.maximum(tally.sum(), 1.0)
     return n_experts * jnp.dot(frac, mean_prob)
+
+
+# ---------------------------------------------------------------------------
+# ragged (dropless) dispatch
+# ---------------------------------------------------------------------------
+
+def _ragged_local_ffn(xf, tok_flat, wgt_flat, slot_flat, active, n_groups,
+                      bm, ffn, w1, w3, w2):
+    """Sorted-buffer grouped FFN + weighted combine for local assignments.
+
+    Builds the ragged plan over ``slot_flat``, scatters each (active)
+    assignment's token row into the flat expert-sorted buffer, runs the
+    grouped FFN over occupied tiles, and scatter-adds the gate-weighted
+    results back per token. Inactive assignments land out of bounds (their
+    scatters drop, their gathers clamp and are zero-weighted). Returns the
+    (t, D) f32 partial output — dropless by construction.
+    """
+    t, D = xf.shape
+    order, rows, tile_group, n_rows = _ragged_plan(slot_flat, n_groups, bm,
+                                                   active)
+    tok_s = tok_flat[order]
+    buf = jnp.zeros((n_rows, D), xf.dtype).at[rows].set(
+        xf[tok_s], mode="drop")
+    y_buf = ffn(w1, w3, w2, buf, tile_group)
+    wgt_s = wgt_flat[order]
+    if active is not None:
+        wgt_s = wgt_s * active[order].astype(wgt_s.dtype)
+    contrib = (y_buf[jnp.minimum(rows, n_rows - 1)].astype(jnp.float32)
+               * wgt_s[:, None])
+    return jnp.zeros((t, D), jnp.float32).at[tok_s].add(contrib)
+
+
+def _dense_dispatch_ragged(p, xf, route_seed, *, top_k, n_experts, slots_of,
+                           n_copies, copy_cdf, bm, ffn):
+    """Single-device ragged dispatch: compute each assignment exactly once
+    (A = t·top_k rows) instead of the dense oracle's every-expert-on-every-
+    token broadcast. Same return contract as ``_dense_dispatch``."""
+    weights, idx, mean_prob = route(p["router"], xf, top_k)
+    slots = _select_slots(idx, slots_of, n_copies, copy_cdf, route_seed)
+    n_slots = p["w1"].shape[0]
+    t = xf.shape[0]
+    tok_flat = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)
+    out = _ragged_local_ffn(xf, tok_flat, weights.reshape(-1),
+                            slots.reshape(-1), None, n_slots, bm, ffn,
+                            p["w1"], p["w3"], p["w2"])
+    tally = jax.nn.one_hot(idx, n_experts, dtype=jnp.float32).sum((0, 1))
+    aux = _aux_loss(tally, mean_prob, n_experts)
+    tally = jnp.concatenate([tally, jnp.zeros((1,), jnp.float32)])
+    return out.astype(xf.dtype), tally, aux
+
+
+def _a2a_body_ragged(xb, router_w, w1, w3, w2, slots_of, n_copies, copy_cdf,
+                     route_seed, *, top_k, n_experts, n_slots, bm, ep,
+                     ep_axes, dp_axes, fsdp_axes, ffn):
+    """Dropless a2a dispatch: sorted per-destination frames + ragged FFN.
+
+    The exchange cannot be ragged itself (``lax.all_to_all`` needs equal
+    splits), so instead of per-*slot* capacity buckets the send buffer holds
+    one fixed frame of A = t_loc·top_k rows per destination rank — the
+    worst case (every local assignment routed to one rank), so nothing can
+    ever overflow. Assignments are slot-sorted (slots are rank-major, so
+    one sort orders by destination rank *and* groups by slot), packed into
+    their destination frame, and their local-slot ids ride along in a
+    parallel int frame. The receiver re-sorts the ep·A incoming rows by
+    local slot and runs the grouped FFN over occupied tiles only; results
+    return through the mirror-image exchange. Memory trades against the
+    capacity path: frames total ep·A rows vs ``n_slots·capacity ≈ A·cf``
+    on the send side, but the FFN computes only realized tokens and the
+    tally's drop column is structurally zero.
+    """
+    Bl, Sl, D = xb.shape
+    e_loc = n_slots // ep
+    if fsdp_axes:
+        w1 = jax.lax.all_gather(w1, fsdp_axes, axis=1, tiled=True)
+        w3 = jax.lax.all_gather(w3, fsdp_axes, axis=1, tiled=True)
+        w2 = jax.lax.all_gather(w2, fsdp_axes, axis=1, tiled=True)
+
+    xf = xb.reshape(Bl * Sl, D)
+    t = xf.shape[0]
+    weights, idx, mean_prob = route(router_w, xf, top_k)
+    slots = _select_slots(idx, slots_of, n_copies, copy_cdf, route_seed)
+    slot_flat = slots.reshape(-1)
+    wgt_flat = weights.reshape(-1)
+    tok_flat = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)
+    A = t * top_k
+
+    # sorted send: slot-major order == (dest rank, local slot) order, so
+    # one shared sort plan yields the rank segments too (slots are
+    # rank-major: rank r's segment starts where slot r·e_loc does)
+    order, ss, starts, _ = _sort_by_slot(slot_flat, n_slots)
+    rank_sorted = ss // e_loc
+    rank_starts = starts[jnp.arange(ep + 1, dtype=jnp.int32) * e_loc]
+    pos_in_rank = jnp.arange(A, dtype=jnp.int32) - rank_starts[rank_sorted]
+    send_row = rank_sorted * A + pos_in_rank
+    send = jnp.zeros((ep * A, D), xf.dtype).at[send_row].set(
+        xf[tok_flat[order]])
+    # local-slot ids per frame row; e_loc = padding sentinel
+    loc_ids = jnp.full((ep * A,), e_loc, jnp.int32).at[send_row].set(
+        ss % e_loc)
+
+    a2a_axes = ep_axes[0] if len(ep_axes) == 1 else ep_axes
+    recv = jax.lax.all_to_all(send.reshape(ep, A, D), a2a_axes,
+                              split_axis=0, concat_axis=0)
+    rloc = jax.lax.all_to_all(loc_ids.reshape(ep, A), a2a_axes,
+                              split_axis=0, concat_axis=0).reshape(-1)
+
+    # receiver: compact ep·A frame rows into the slot-sorted ragged buffer
+    R = ep * A
+    order2, rows2, tile_group, n_rows = _ragged_plan(
+        rloc, e_loc, bm, active=rloc < e_loc)
+    buf = jnp.zeros((n_rows, D), xf.dtype).at[rows2].set(
+        recv.reshape(R, D)[order2], mode="drop")
+    y_buf = ffn(w1, w3, w2, buf, tile_group)
+    # un-sort back into frame layout (padding rows stay zero) and return
+    row_of_recv = jnp.full((R,), n_rows, jnp.int32).at[order2].set(rows2)
+    y_recv = (y_buf[jnp.minimum(row_of_recv, n_rows - 1)]
+              * (rloc < e_loc)[:, None].astype(y_buf.dtype))
+    back = jax.lax.all_to_all(y_recv.reshape(ep, A, D), a2a_axes,
+                              split_axis=0, concat_axis=0).reshape(R, D)
+
+    contrib = (back[send_row].astype(jnp.float32)
+               * wgt_flat[order][:, None])
+    out = jnp.zeros((t, D), jnp.float32).at[tok_flat[order]].add(contrib)
+
+    tally = jax.nn.one_hot(idx, n_experts, dtype=jnp.float32).sum((0, 1))
+    tally = jnp.concatenate([tally, jnp.zeros((1,))])   # dropless: tally[E]=0
+    tally = jax.lax.psum(tally, ep_axes + dp_axes)
+    mean_prob = jax.lax.pmean(mean_prob, ep_axes + dp_axes)
+    aux = _aux_loss(tally[:n_experts], mean_prob, n_experts)
+    return out.astype(xb.dtype).reshape(Bl, Sl, D), tally, aux
+
+
+def _replicated_body_ragged(xb, router_w, w1, w3, w2, slots_of, n_copies,
+                            copy_cdf, route_seed, *, top_k, n_experts,
+                            n_slots, bm, ep_axes, ep_sizes, ffn,
+                            psum_axes=None):
+    """Dropless decode path: each device ragged-computes its own slots.
+
+    Same replication scheme as ``_replicated_body`` (tokens fleet-wide,
+    psum combine), but local assignments go through the sorted ragged
+    buffer instead of fixed capacity buckets — the buffer's static bound
+    covers *all* A assignments landing on one device, so nothing drops.
+    """
+    B, S, D = xb.shape
+    e_loc = w1.shape[0]
+    psum_axes = psum_axes or ep_axes
+    my_rank = jnp.int32(0)
+    for a, sz in zip(ep_axes, ep_sizes):
+        my_rank = my_rank * sz + jax.lax.axis_index(a)
+
+    xf = xb.reshape(B * S, D)
+    t = xf.shape[0]
+    weights, idx, mean_prob = route(router_w, xf, top_k)
+    slots = _select_slots(idx, slots_of, n_copies, copy_cdf, route_seed)
+    slot_flat = slots.reshape(-1)
+    tok_flat = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)
+
+    mine = (slot_flat // e_loc) == my_rank
+    out = _ragged_local_ffn(xf, tok_flat, weights.reshape(-1),
+                            slot_flat % e_loc, mine, e_loc, bm, ffn,
+                            w1, w3, w2)
+    out = jax.lax.psum(out, psum_axes)
+
+    tally = jax.nn.one_hot(idx, n_experts, dtype=jnp.float32).sum((0, 1))
+    aux = _aux_loss(tally, mean_prob, n_experts)
+    tally = jnp.concatenate([tally, jnp.zeros((1,))])   # dropless: tally[E]=0
+    return out.astype(xb.dtype).reshape(B, S, D), tally, aux
 
 
 # ---------------------------------------------------------------------------
@@ -398,6 +654,7 @@ def moe_layer(
     route_seed = jnp.asarray(route_seed).astype(jnp.int32)
 
     mode = "dense"
+    impl = "capacity" if rules is None else rules.moe_impl_resolved
     if rules is not None and rules.mesh is not None:
         if rules.moe_dispatch in ("a2a", "replicated", "dense"):
             mode = rules.moe_dispatch
@@ -409,14 +666,22 @@ def moe_layer(
             mode = "replicated"
 
     if mode == "dense":
-        out, tally, aux = _dense_dispatch(
-            p, x.reshape(B * S, D), route_seed, top_k=top_k,
-            n_experts=n_experts, slots_of=slots_of, n_copies=n_copies,
-            copy_cdf=copy_cdf)
+        if rules is not None and impl == "ragged":
+            out, tally, aux = _dense_dispatch_ragged(
+                p, x.reshape(B * S, D), route_seed, top_k=top_k,
+                n_experts=n_experts, slots_of=slots_of, n_copies=n_copies,
+                copy_cdf=copy_cdf, bm=rules.moe_block_m,
+                ffn=_get_ragged_ffn(rules))
+        else:
+            out, tally, aux = _dense_dispatch(
+                p, x.reshape(B * S, D), route_seed, top_k=top_k,
+                n_experts=n_experts, slots_of=slots_of, n_copies=n_copies,
+                copy_cdf=copy_cdf)
         return out.reshape(B, S, D), tally, aux
 
     cf = rules.capacity_factor
-    ffn = _get_ffn(rules)
+    bm = rules.moe_block_m
+    ffn = _get_ragged_ffn(rules) if impl == "ragged" else _get_ffn(rules)
     mesh = rules.mesh
     if mode == "a2a":
         ep_axes, dp_axes = rules.ep_axes, rules.dp_axes
@@ -427,10 +692,16 @@ def moe_layer(
         t_loc = (B // max(rules.axis_size(dp_axes), 1)) * (S // ep)
         capacity = _round_up(max(int(np.ceil(t_loc * top_k / n_slots * cf)), 1), 4)
         x = rules.constrain(x, rules.dp, rules.ep[0] if len(rules.ep) == 1 else rules.ep, None)
-        body = functools.partial(
-            _a2a_body, top_k=top_k, n_experts=n_experts, n_slots=n_slots,
-            capacity=capacity, ep=ep, ep_axes=ep_axes, dp_axes=dp_axes,
-            fsdp_axes=fsdp_axes, ffn=ffn)
+        if impl == "ragged":
+            body = functools.partial(
+                _a2a_body_ragged, top_k=top_k, n_experts=n_experts,
+                n_slots=n_slots, bm=bm, ep=ep, ep_axes=ep_axes,
+                dp_axes=dp_axes, fsdp_axes=fsdp_axes, ffn=ffn)
+        else:
+            body = functools.partial(
+                _a2a_body, top_k=top_k, n_experts=n_experts, n_slots=n_slots,
+                capacity=capacity, ep=ep, ep_axes=ep_axes, dp_axes=dp_axes,
+                fsdp_axes=fsdp_axes, ffn=ffn)
         ep_spec = ep_axes[0] if len(ep_axes) == 1 else ep_axes
         w_spec = P(ep_spec, fsdp_axes if fsdp_axes else None, None)
         out, tally, aux = compat.shard_map(
@@ -461,11 +732,18 @@ def moe_layer(
     ep_spec = ep_axes if len(ep_axes) > 1 else (ep_axes[0] if ep_axes else None)
     ftp_spec = (ftp_axes if len(ftp_axes) > 1 else
                 (ftp_axes[0] if ftp_axes else None))
-    body = functools.partial(
-        _replicated_body, top_k=top_k, n_experts=n_experts, n_slots=n_slots,
-        capacity=capacity, ep_axes=ep_axes,
-        ep_sizes=tuple(rules.axis_size(a) for a in ep_axes), ffn=ffn,
-        psum_axes=ep_axes + ftp_axes)
+    if impl == "ragged":
+        body = functools.partial(
+            _replicated_body_ragged, top_k=top_k, n_experts=n_experts,
+            n_slots=n_slots, bm=bm, ep_axes=ep_axes,
+            ep_sizes=tuple(rules.axis_size(a) for a in ep_axes), ffn=ffn,
+            psum_axes=ep_axes + ftp_axes)
+    else:
+        body = functools.partial(
+            _replicated_body, top_k=top_k, n_experts=n_experts,
+            n_slots=n_slots, capacity=capacity, ep_axes=ep_axes,
+            ep_sizes=tuple(rules.axis_size(a) for a in ep_axes), ffn=ffn,
+            psum_axes=ep_axes + ftp_axes)
     out, tally, aux = compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(None, None, None), P(None, None),
@@ -482,22 +760,34 @@ def moe_layer(
 # placement application (weight migration)
 # ---------------------------------------------------------------------------
 
+def _first_slot_of(perm: np.ndarray, n_ids: int) -> np.ndarray:
+    """inv[l, e] = first (lowest) slot in ``perm[l]`` holding id e, -1 if
+    absent. Vectorized first-occurrence build: numpy fancy assignment lets
+    the *last* write win, so feeding slots in descending order makes slot 0
+    the survivor — identical to the old per-slot Python scan."""
+    L, NS = perm.shape
+    inv = np.full((L, n_ids), -1, dtype=np.int32)
+    desc = np.arange(NS - 1, -1, -1, dtype=np.int32)
+    inv[np.arange(L)[:, None], perm[:, ::-1]] = desc[None, :]
+    return inv
+
+
 def placement_gather_indices(old_perm: np.ndarray,
                              new_perm: np.ndarray) -> np.ndarray:
-    """gather_idx[l, p] = old slot whose weights must land in new slot p."""
+    """gather_idx[l, p] = old slot whose weights must land in new slot p.
+
+    Fully vectorized (scatter-build of the expert→first-slot inverse plus
+    one gather); runs on every engine recalibration, so no Python O(L·NS)
+    loops. Bit-identical to the historical loop build (tests pin this).
+    """
     old_perm = np.atleast_2d(old_perm)
     new_perm = np.atleast_2d(new_perm)
     L, NS = old_perm.shape
-    idx = np.empty((L, NS), dtype=np.int32)
-    for l in range(L):
-        inv = np.full(NS, -1, dtype=np.int32)
-        for q in range(NS):
-            if inv[old_perm[l, q]] < 0:
-                inv[old_perm[l, q]] = q
-        for pslot in range(NS):
-            src = inv[new_perm[l, pslot]]
-            idx[l, pslot] = src if src >= 0 else pslot
-    return idx
+    n_ids = int(max(old_perm.max(), new_perm.max())) + 1
+    inv = _first_slot_of(old_perm, n_ids)
+    src = inv[np.arange(L)[:, None], new_perm]                  # (L, NS)
+    return np.where(src >= 0, src,
+                    np.arange(NS, dtype=np.int32)[None, :]).astype(np.int32)
 
 
 @functools.partial(jax.jit, donate_argnums=0)
@@ -529,14 +819,20 @@ def expand_experts(expert_params: dict, perm_a2a: np.ndarray,
                    perm_dec: np.ndarray) -> dict:
     """Build decode-fleet expert tensors (replicated slots) from the a2a
     layout: decode slot p holds logical expert perm_dec[l, p], fetched from
-    the a2a slot holding that expert."""
-    L, ns_dec = np.atleast_2d(perm_dec).shape
+    the a2a slot holding that expert. Vectorized like
+    :func:`placement_gather_indices` (the old dict build also kept the
+    first a2a slot per expert); a decode expert absent from the a2a layout
+    is an error, as before."""
+    perm_dec = np.atleast_2d(perm_dec)
     perm_a2a = np.atleast_2d(perm_a2a)
-    gi = np.empty((L, ns_dec), dtype=np.int32)
-    for l in range(L):
-        inv = {int(e): q for q, e in reversed(list(enumerate(perm_a2a[l])))}
-        for pslot in range(ns_dec):
-            gi[l, pslot] = inv[int(perm_dec[l, pslot])]
+    L, ns_dec = perm_dec.shape
+    n_ids = int(max(perm_a2a.max(), perm_dec.max())) + 1
+    inv = _first_slot_of(perm_a2a, n_ids)
+    gi = inv[np.arange(L)[:, None], perm_dec]
+    if (gi < 0).any():
+        missing = sorted(set(perm_dec[gi < 0].tolist()))
+        raise KeyError(f"decode experts absent from a2a layout: {missing}")
+    gi = gi.astype(np.int32)
     out = dict(expert_params)
     for k in ("w1", "w2", "w3"):
         if k in out:

@@ -45,6 +45,20 @@ class ShardingRules:
     fsdp: Optional[str] = "data"
     attn_mode: str = "heads"            # "heads" | "context"
     moe_dispatch: str = "auto"          # "auto" | "a2a" | "replicated" | "dense"
+    moe_impl: str = "auto"              # "auto" | "capacity" | "ragged"
+    # "capacity" — fixed per-slot buckets (cf-bounded buffers, overflow
+    # drops, FFN cost = E_loc × capacity regardless of skew); "ragged" —
+    # sort-based dropless dispatch (flat expert-sorted buffer, grouped FFN
+    # over occupied tiles only, FFN cost tracks realized tokens, tally's
+    # drop column is structurally zero). "auto" resolves to ragged: it is
+    # never worse than a dropless capacity and never drops; capacity stays
+    # as the regression baseline. Caveats of ragged (see README "Kernels"):
+    # the a2a exchange frames are sized to the dropless worst case
+    # (ep × t_loc·top_k rows, ep/cf× capacity's receive memory), and only
+    # the Pallas kernel path (use_kernel=True) skips unoccupied tiles —
+    # the jnp fallback computes the padded buffer, so at large scale off-
+    # TPU prefer moe_impl="capacity" if FLOPs matter more than drops.
+    moe_block_m: int = 128              # ragged row tile (MXU-aligned on TPU)
     capacity_factor: float = 1.25
     remat: bool = True                  # checkpoint each scanned layer block
     use_kernel: bool = False            # Pallas fused MoE FFN (TPU target)
@@ -79,6 +93,11 @@ class ShardingRules:
     @property
     def ep_all_axes(self) -> Tuple[str, ...]:
         return tuple(a for a in self.ep_all if a in self._names())
+
+    @property
+    def moe_impl_resolved(self) -> str:
+        """The dispatch implementation ``"auto"`` resolves to (ragged)."""
+        return "ragged" if self.moe_impl == "auto" else self.moe_impl
 
     @property
     def ep_size(self) -> int:

@@ -32,7 +32,8 @@ from repro.models import (ShardingRules, decode_fn, init_cache, init_params,
 from repro.models.model import block_layout
 from repro.models.moe import apply_placement
 from .metrics import RequestRecord
-from .simulator import rank_latency_matrix, realized_rank_loads
+from .simulator import (capacity_bucket_rows, rank_latency_matrix,
+                        realized_rank_loads)
 from .workload import Request
 
 __all__ = ["Engine", "EngineStats"]
@@ -59,6 +60,7 @@ class Engine:
                  cluster: Optional[ClusterVariability] = None,
                  max_batch: int = 4, max_seq: int = 64,
                  weighted_routing: bool = True,
+                 moe_impl: Optional[str] = None,
                  seed: int = 0):
         self.cfg = cfg
         self.rules = rules
@@ -66,6 +68,18 @@ class Engine:
         self.cluster = cluster
         self.max_batch = max_batch
         self.max_seq = max_seq
+        # which grouped-FFN implementation the virtual clock prices:
+        # "ragged" (dropless — cost is the realized dispatched load, the
+        # model layer's default) or "capacity" (fixed buckets — every rank
+        # pays slots_per_rank × capacity rows regardless of skew). Defaults
+        # to the sharding rules' resolved impl so clock and dispatch agree.
+        if moe_impl is None:
+            moe_impl = (rules.moe_impl_resolved if rules is not None
+                        else "ragged")
+        if moe_impl not in ("ragged", "capacity"):
+            raise ValueError(f"moe_impl must be 'ragged' or 'capacity', "
+                             f"got {moe_impl!r}")
+        self.moe_impl = moe_impl
         # share-weighted replica routing: fold the controller placement's
         # per-copy traffic shares into the dispatch tables so the model
         # steers tokens the way the solver's latency objective assumes.
@@ -256,17 +270,30 @@ class Engine:
     def _charge(self, tallies: np.ndarray, tokens: int) -> float:
         """Advance virtual time using ground-truth cluster latencies.
 
-        Loads are the *realized* token-granular split of the routing-mode
-        placement (``realized_rank_loads``), so the clock prices what the
-        dispatch tables actually did this step — weighted vs uniform
-        replica routing shows up in TTFT/TPOT, not just in the tables.
+        With ``moe_impl="ragged"`` (default) loads are the *realized*
+        token-granular split of the routing-mode placement
+        (``realized_rank_loads``) — the dropless kernel's cost tracks
+        exactly what the dispatch tables did this step, so weighted vs
+        uniform replica routing shows up in TTFT/TPOT, not just in the
+        tables. With ``moe_impl="capacity"`` every rank is charged its full
+        bucket allocation (slots_per_rank × capacity rows, zero padding
+        included) — the fixed-bucket kernel's honest, skew-oblivious cost.
         """
         if self.cluster is None or self.controller is None \
                 or not self.cfg.is_moe:
             dt = 1e-3 * max(tokens, 1)                  # trivial fallback
         else:
             t = self._controller_tallies(tallies)
-            rank_load = realized_rank_loads(self._clock_placement(), t)
+            if self.moe_impl == "capacity":
+                cf = (self.rules.capacity_factor if self.rules is not None
+                      else 1.25)
+                s_loc = max(self.n_slots // self.controller.G, 1)
+                cap = capacity_bucket_rows(tokens, self.cfg.top_k,
+                                           self.n_slots, cf)
+                rank_load = np.full((t.shape[0], self.controller.G),
+                                    float(s_loc * cap))
+            else:
+                rank_load = realized_rank_loads(self._clock_placement(), t)
             dt = float(rank_latency_matrix(self.cluster, rank_load).max(1).sum())
         self.stats.virtual_time += dt
         return dt

@@ -35,7 +35,20 @@ from .workload import (Request, WorkloadSpec, routing_profile, step_loads,
                        topic_loadings)
 
 __all__ = ["SimConfig", "EPSimulator", "rank_latency_matrix", "LayerStats",
-           "realized_rank_loads"]
+           "realized_rank_loads", "capacity_bucket_rows"]
+
+
+def capacity_bucket_rows(tokens: float, top_k: int, n_slots: int,
+                         capacity_factor: float) -> int:
+    """Token rows the fixed-bucket (capacity) kernel allocates per slot.
+
+    Single source for every capacity *pricing* consumer (simulator, engine
+    virtual clock, benches) so they cannot drift apart. The model layer's
+    per-device capacity additionally rounds up to a multiple of 4 from its
+    *local* token count (MXU alignment, ``moe_layer``); pricing stays at
+    this abstract global level on purpose.
+    """
+    return max(int(np.ceil(tokens * top_k / n_slots * capacity_factor)), 1)
 
 
 # ---------------------------------------------------------------------------
@@ -162,6 +175,14 @@ class SimConfig:
     realized_loads: bool = False     # score token-granular dispatched loads
     # (realized_rank_loads) instead of the solver's fractional copy shares —
     # makes the simulator's per-rank traffic match model-layer dispatch
+    moe_impl: str = "ragged"         # "ragged" | "capacity": what the MoE
+    # kernel *computes* per rank. "ragged" (default, matches the model
+    # layer's dropless default and the historical simulator behaviour)
+    # prices the realized routed tokens. "capacity" prices the fixed-bucket
+    # kernel honestly: every rank runs slots_per_rank × capacity rows
+    # (zero-padding included) regardless of skew, and per-slot overflow is
+    # tallied into ``dropped_assignments`` instead of adding compute.
+    capacity_factor: float = 1.25    # bucket sizing for moe_impl="capacity"
     record_layer_stats: bool = False
     migration_overhead: float = 2e-3 # fixed coordination cost per rearrange
     step_overhead: float = 8e-3      # engine scheduling/launch cost per step
@@ -178,6 +199,9 @@ class EPSimulator:
                  profile: Optional[np.ndarray] = None):
         if not model.is_moe:
             raise ValueError("EPSimulator requires an MoE model config")
+        if sim.moe_impl not in ("ragged", "capacity"):
+            raise ValueError(f"moe_impl must be 'ragged' or 'capacity', "
+                             f"got {sim.moe_impl!r}")
         self.model = model
         self.cluster = cluster
         self.workload = workload
@@ -197,6 +221,7 @@ class EPSimulator:
         self.rank_busy = np.zeros(self.G)
         self.total_layer_time = 0.0
         self.total_barrier_idle = 0.0
+        self.dropped_assignments = 0.0   # capacity-bucket overflow (moe_impl)
         self.steps = 0
         self.migration_stalls: List[Tuple[float, float, int]] = []
         self.expert_bytes = (3 * model.d_model * model.moe_d_ff * 2
@@ -251,6 +276,29 @@ class EPSimulator:
                           * (self.G - 1) / (self.G * self.G))
         return 2.0 * bytes_per_rank / bw + self.cluster.t_base
 
+    def _capacity_rank_loads(self, pl, loads: np.ndarray,
+                             tokens: int) -> np.ndarray:
+        """Fixed-bucket (moe_impl="capacity") compute pricing.
+
+        The capacity kernel runs ``slots_per_rank × capacity`` rows on every
+        rank — zero padding included — so per-rank compute is flat in the
+        realized skew; what skew *does* change is the overflow, tallied into
+        ``dropped_assignments`` (the artifact the ragged path removes)."""
+        loads = np.atleast_2d(loads)
+        n_slots = int(getattr(pl, "n_slots", self.E))
+        s_loc = max(n_slots // self.G, 1)
+        cap = capacity_bucket_rows(tokens, self.model.top_k, n_slots,
+                                   self.cfg.capacity_factor)
+        share = getattr(pl, "share", None)
+        if share is None:
+            slot_load = loads                  # singleton: slot == expert
+        else:
+            slot_load = np.take_along_axis(
+                pad_phantom_column(loads), pl.slot_expert, axis=1) * share
+        self.dropped_assignments += float(
+            np.maximum(slot_load - cap, 0.0).sum())
+        return np.full((loads.shape[0], self.G), float(s_loc * cap))
+
     def step_time(self, tokens: int, ctx: float,
                   loads: Optional[np.ndarray] = None) -> float:
         """One synchronized forward pass over all layers."""
@@ -262,9 +310,14 @@ class EPSimulator:
         # placements map expert→rank one-to-one. Same call either way.
         # ``realized_loads`` swaps the fractional split for the
         # token-granular one the model-layer dispatch actually produces.
-        rank_load = (realized_rank_loads(pl, loads)
-                     if self.cfg.realized_loads
-                     else pl.rank_loads(loads))                  # (L, G)
+        # ``moe_impl="capacity"`` instead prices the fixed-bucket kernel's
+        # padded compute (+ overflow drop accounting).
+        if self.cfg.moe_impl == "capacity":
+            rank_load = self._capacity_rank_loads(pl, loads, tokens)
+        else:
+            rank_load = (realized_rank_loads(pl, loads)
+                         if self.cfg.realized_loads
+                         else pl.rank_loads(loads))              # (L, G)
         rank_time = rank_latency_matrix(self.cluster, rank_load, self.rng)
         layer_t = rank_time.max(axis=1)
         moe_t = float(layer_t.sum())

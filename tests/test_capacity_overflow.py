@@ -14,6 +14,12 @@ contracts of that drop path:
 
 Runs in-process on a 1-device mesh, so the fast CI lane covers the real
 ``shard_map`` dispatch bodies without the multi-process battery.
+
+Since the ragged dropless pipeline became the default (``moe_impl="auto"``
+→ ragged, which structurally cannot drop), these tests pin
+``moe_impl="capacity"`` explicitly — they are the capacity baseline's
+regression suite. The ragged path's no-drop contract is covered in
+``test_ragged_dispatch.py``.
 """
 
 import jax
@@ -68,7 +74,8 @@ def setup():
 
 def _run_a2a(p, x, mesh, cf):
     rules = ShardingRules(mesh=mesh, dp=(), ep=("model",), fsdp=None,
-                          moe_dispatch="a2a", capacity_factor=cf)
+                          moe_dispatch="a2a", capacity_factor=cf,
+                          moe_impl="capacity")
     with compat.use_mesh(mesh):
         y, tally, _ = jax.jit(lambda p, x: MOE.moe_layer(
             p, x, top_k=K, n_experts=E, rules=rules, phase="train"))(p, x)
@@ -123,7 +130,8 @@ def test_replicated_path_surfaces_drops(setup):
     x_pos = jnp.abs(x)                     # positive inputs → bias dominates
     rules = ShardingRules(mesh=mesh, dp=(), ep=("model",),
                           ep_all=("model",), fsdp=None,
-                          moe_dispatch="replicated", capacity_factor=2.0)
+                          moe_dispatch="replicated", capacity_factor=2.0,
+                          moe_impl="capacity")
     with compat.use_mesh(mesh):
         y, tally, _ = jax.jit(lambda p, x: MOE.moe_layer(
             p, x, top_k=1, n_experts=E, rules=rules, phase="decode"))(

@@ -150,16 +150,54 @@ with set_mesh(mesh):
 check('replicated+weighted', y8r, t8r)
 
 # 9. capacity drops surface in the tally's final column (a2a, starved cf;
-# long sequence so per-device buckets can exceed the rounded-up capacity)
+# long sequence so per-device buckets can exceed the rounded-up capacity).
+# moe_impl pinned: the ragged default is dropless by construction.
 x9 = jax.random.normal(jax.random.PRNGKey(3), (4, 32, D)).astype(jnp.bfloat16)
 rules9 = ShardingRules(mesh=mesh, dp=('data',), ep=('model',), fsdp=None,
-                       capacity_factor=0.25)
+                       capacity_factor=0.25, moe_impl='capacity')
 with set_mesh(mesh):
     _, t9, _ = jax.jit(lambda p, x: MOE.moe_layer(
         p, x, top_k=K, n_experts=E, rules=rules9, phase='train'))(p, x9)
 assert float(t9[-1]) > 0, 'starved capacity produced no drops'
 assert float(jnp.sum(t9[:E])) == x9.shape[0] * x9.shape[1] * K
 print(f'capacity drop column: OK ({float(t9[-1]):.0f} dropped)')
+
+# 10. capacity baseline still == dense oracle at generous cf (checks 1-8 run
+# the ragged default; this keeps the legacy bucketed path covered too)
+rules10 = ShardingRules(mesh=mesh, dp=('data',), ep=('model',), fsdp=None,
+                        capacity_factor=8.0, moe_impl='capacity')
+with set_mesh(mesh):
+    y10, t10, _ = jax.jit(lambda p, x: MOE.moe_layer(
+        p, x, top_k=K, n_experts=E, rules=rules10, phase='train'))(p, x)
+check('a2a capacity baseline', y10, t10)
+
+# 11. ragged dispatch is dropless where the same cf starves the buckets:
+# full dense-oracle agreement AND a zero drop column on both paths
+y9_ref, t9_ref, _ = MOE.moe_layer(p, x9, top_k=K, n_experts=E, rules=None)
+rules11 = ShardingRules(mesh=mesh, dp=('data',), ep=('model',), fsdp=None,
+                        capacity_factor=0.25, moe_impl='ragged')
+with set_mesh(mesh):
+    y11, t11, _ = jax.jit(lambda p, x: MOE.moe_layer(
+        p, x, top_k=K, n_experts=E, rules=rules11, phase='train'))(p, x9)
+err11 = float(jnp.abs(y9_ref.astype(jnp.float32)
+                      - y11.astype(jnp.float32)).max())
+# bf16 output: summation order differs from the dense combine by
+# up to one bf16 ULP on long sequences
+assert err11 <= 1e-3, f'ragged@starved-cf: max err {err11}'
+assert float(t11[-1]) == 0, 'ragged path reported drops'
+assert np.allclose(np.asarray(t11), np.asarray(t9_ref))
+rules11r = ShardingRules(mesh=mesh, dp=('data',), ep=('model',),
+                         ep_all=('data', 'model'), fsdp=None,
+                         moe_dispatch='replicated', capacity_factor=0.25,
+                         moe_impl='ragged')
+with set_mesh(mesh):
+    y11r, t11r, _ = jax.jit(lambda p, x: MOE.moe_layer(
+        p, x, top_k=K, n_experts=E, rules=rules11r, phase='decode'))(p, x9)
+err11r = float(jnp.abs(y9_ref.astype(jnp.float32)
+                       - y11r.astype(jnp.float32)).max())
+assert err11r <= 1e-3, f'ragged-replicated@starved-cf: max err {err11r}'
+assert float(t11r[-1]) == 0, 'ragged replicated path reported drops'
+print('ragged dropless @ starved cf: OK')
 
 print('ALL_EP_CHECKS_PASSED')
 """

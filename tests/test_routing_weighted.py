@@ -215,7 +215,15 @@ def test_reweight_shares_by_speed_invariants(seed):
             assert (np.diff(sh[order]) <= 1e-12).all(), (l, e, sh)
 
 
+def _replicated_objective(pl, w, perf):
+    from repro.core.incremental import _replicated_objective
+    return _replicated_objective(pl, w, perf)
+
+
 def test_incremental_update_reweight_opt_in():
+    """reweight_shares=True returns a placement whose shares ARE the
+    speed-reweighted shares of its own slot table (the folded search keeps
+    the reweight invariant at every step), with replica counts preserved."""
     from repro.core import incremental_update_replicated
 
     rng = np.random.default_rng(4)
@@ -226,6 +234,28 @@ def test_incremental_update_reweight_opt_in():
     res = incremental_update_replicated(rp, w1, perf, reweight_shares=True)
     new = res.placement
     np.testing.assert_array_equal(new.n_copies(), rp.n_copies())
-    want = reweight_shares_by_speed(
-        incremental_update_replicated(rp, w1, perf).placement, w1, perf)
+    want = reweight_shares_by_speed(new, w1, perf)
     np.testing.assert_allclose(new.share, want.share, atol=1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_incremental_folded_reweight_never_worse_than_posthoc(seed):
+    """ISSUE 4 satellite: scoring swaps under post-reweight shares must
+    never end up worse (Σ_l max_g f_g under reweighted shares) than the
+    historical carried-share search + post-hoc reweight."""
+    from repro.core import incremental_update_replicated
+    from repro.core.incremental import _replicated_swap_run
+
+    rng = np.random.default_rng(seed)
+    perf = affine_perf([1e-8, 2e-8, 4e-8, 8e-8])
+    w0 = rng.random((2, 16)) * 50_000 + 1
+    rp = vibe_r_placement(w0, perf, slots_per_rank=6)
+    w1 = np.stack([rng.permutation(w0[l]) for l in range(w0.shape[0])])
+    folded = incremental_update_replicated(rp, w1, perf,
+                                           reweight_shares=True)
+    posthoc = reweight_shares_by_speed(
+        _replicated_swap_run(rp, w1, perf, 0.03, 64).placement, w1, perf)
+    obj_folded = _replicated_objective(folded.placement, w1, perf)
+    obj_posthoc = _replicated_objective(posthoc, w1, perf)
+    assert obj_folded <= obj_posthoc + 1e-12, (obj_folded, obj_posthoc)
