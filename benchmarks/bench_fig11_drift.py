@@ -1,23 +1,52 @@
-"""Figs 11+12: cross-workload drift — static vs adaptive recalibration.
+"""Figs 11+12: drift — static vs adaptive recalibration, both drift kinds.
 
-Placement is profiled on one dataset and served on another (SG→SN, SN→SG);
-adaptive ViBE/EPLB recover most of the lost goodput at the cost of brief
-migration stalls (Fig 12's TTFT spikes), with per-event moved-expert counts
-and transfer bytes accounted.
+**Workload drift**: placement is profiled on one dataset and served on
+another (SG→SN, SN→SG); adaptive ViBE/EPLB recover most of the lost goodput
+at the cost of brief migration stalls (Fig 12's TTFT spikes), with per-event
+moved-expert counts and transfer bytes accounted.
+
+**Hardware drift** (the paper's "performance estimates" refresh, §4.2.4):
+the ground-truth cluster itself changes over the virtual clock via a
+:data:`repro.core.SCENARIOS` event schedule (thermal ramp, fleet power cap,
+transient interference, device replacement). Three arms per scenario:
+
+* ``stale``    — placement solved from the t=0 profile, never refreshed;
+* ``adaptive`` — ViBE with online perf-drift recalibration (telemetry
+  residual watch → refit f_g from the window → re-solve);
+* ``oracle``   — placement solved from a post-drift re-profile (the
+  upper bound an offline re-sweep would reach).
+
+``recovered`` reports (adaptive − stale) / (oracle − stale) goodput.
+
+Each A/B case profiles the cluster ONCE and shares the fitted models across
+its arms — ``fit_models()`` draws from the cluster's jitter RNG, so
+profiling per arm would hand each arm a different hardware snapshot.
 """
 
-import numpy as np
-
 from repro.configs import get
-from repro.core import (DriftConfig, ViBEConfig, ViBEController)
+from repro.core import (DriftConfig, PerfDriftConfig, SCENARIOS, SolveContext,
+                        ViBEConfig, ViBEController, get_policy, make_cluster,
+                        make_scenario)
 from repro.serving import (EPSimulator, PAPER_SLOS, SimConfig, WORKLOADS,
-                           goodput, routing_profile, sample_requests)
-from .common import emit, paper_cluster, placement_for, profile_W
+                           goodput, sample_requests)
+from .common import emit, paper_cluster, profile_W
+
+EXPERT_BYTES = lambda m: 3 * m.d_model * m.moe_d_ff * 2
 
 
-def _sim(model, profile_wl, serve_wl, policy, adaptive, cluster, seed=3):
+def _placement(policy, W, cluster, perf, ep=8):
+    """Registry solve reusing an already-fitted perf-model set (so A/B arms
+    of one case share one hardware snapshot)."""
+    pol = get_policy(policy)
+    ctx = SolveContext(
+        w=W, n_ranks=ep,
+        perf_models=perf if pol.capabilities.needs_perf_models else None)
+    return pol.solve(ctx)
+
+
+def _sim(model, profile_wl, serve_wl, policy, adaptive, cluster, perf,
+         seed=3):
     m = get(model)
-    perf = cluster.fit_models()
     W0 = profile_W(model, profile_wl)
     cfg = SimConfig(ep_degree=8, seed=seed, max_prefill_tokens=16_384)
     if adaptive:
@@ -26,16 +55,15 @@ def _sim(model, profile_wl, serve_wl, policy, adaptive, cluster, seed=3):
             ViBEConfig(policy=policy, adaptive=True,
                        drift=DriftConfig(window=50, interval=10,
                                          cooldown=20),
-                       expert_bytes=3 * m.d_model * m.moe_d_ff * 2),
+                       expert_bytes=EXPERT_BYTES(m)),
             initial_w=W0)
         return EPSimulator(m, cluster, WORKLOADS[serve_wl], cfg,
                            controller=ctl)
-    pl = placement_for(policy, model, profile_wl, cluster)
+    pl = _placement(policy, W0, cluster, perf)
     return EPSimulator(m, cluster, WORKLOADS[serve_wl], cfg, placement=pl)
 
 
 def run(model="deepseek-v3-671b", quick=True):
-    cluster = paper_cluster(model, "mi325x")
     m = get(model)
     rows = []
     n_req = 200 if quick else 500
@@ -44,11 +72,15 @@ def run(model="deepseek-v3-671b", quick=True):
              ("sharegpt", "sharegpt", 120.0)]
     for prof_wl, serve_wl, qps in cases:
         slo = PAPER_SLOS[(serve_wl, model)]
+        # ONE hardware snapshot per case: every arm below scores against
+        # the same fitted models (fit_models() advances the jitter RNG)
+        cluster = paper_cluster(model, "mi325x")
+        perf = cluster.fit_models()
         for policy in ("eplb", "vibe"):
             for adaptive in ((False, True) if prof_wl != serve_wl
                              else (False,)):
                 sim = _sim(model, prof_wl, serve_wl, policy, adaptive,
-                           cluster)
+                           cluster, perf)
                 # serving profile differs from the profiled one → the sim's
                 # own routing profile is the *serving* workload's
                 reqs = sample_requests(WORKLOADS[serve_wl], n_req, qps=qps,
@@ -73,7 +105,89 @@ def run(model="deepseek-v3-671b", quick=True):
                             s for s, _, _ in sim.migration_stalls),
                     )
                 rows.append(row)
+    rows += run_hardware(model, quick=quick)
     emit(rows, "fig11_drift")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# hardware drift: stale vs adaptive vs oracle under SCENARIOS schedules
+# ---------------------------------------------------------------------------
+
+def _hw_cluster(model, scenario, t0, duration, ep=8):
+    m = get(model)
+    events = make_scenario(scenario, ep, t0=t0, duration=duration)
+    return make_cluster(ep, "mi325x", d_model=m.d_model, d_ff=m.moe_d_ff,
+                        experts_per_rank=max(m.n_experts // ep, 1),
+                        events=events)
+
+
+def run_hardware(model="deepseek-v3-671b", quick=True, workload="sonnet",
+                 qps=40.0, t0=1.0, duration=2.0):
+    # qps sits between the stale arm's post-drift capacity and the
+    # re-solved arms' — the regime where a stale f_g actually costs goodput
+    m = get(model)
+    slo = PAPER_SLOS[(workload, model)]
+    n_req = 300 if quick else 500
+    W0 = profile_W(model, workload)
+    rows = []
+    for scenario in sorted(SCENARIOS):
+        reqs = sample_requests(WORKLOADS[workload], n_req, qps=qps, seed=4)
+        t_end = t0 + duration + 1.0
+        gps = {}
+        stats = {}
+        for arm in ("stale", "adaptive", "oracle"):
+            # fresh cluster per arm: identical speeds/schedule (same seed),
+            # independent jitter stream — arms see the same hardware, not
+            # each other's RNG position
+            cluster = _hw_cluster(model, scenario, t0, duration)
+            perf = cluster.fit_models(t=t_end if arm == "oracle" else 0.0)
+            cfg = SimConfig(ep_degree=8, seed=3, max_prefill_tokens=16_384)
+            if arm == "adaptive":
+                ctl = ViBEController(
+                    m._n_moe_layers(), m.n_experts, 8, perf,
+                    ViBEConfig(policy="vibe", adaptive=True,
+                               drift=DriftConfig(window=50, interval=10,
+                                                 cooldown=20),
+                               perf_drift=PerfDriftConfig(
+                                   delta_perf=0.08, window=128, interval=5,
+                                   cooldown=10, min_samples=16),
+                               # minimal-movement refinement: a full
+                               # re-solve relocates nearly every slot
+                               # (~0.4 s stall at saturation); the paper's
+                               # Alg 2 swap path recovers the same capacity
+                               # for a few dozen moves
+                               full_resolve_on_stress=False,
+                               expert_bytes=EXPERT_BYTES(m)),
+                    initial_w=W0)
+                sim = EPSimulator(m, cluster, WORKLOADS[workload], cfg,
+                                  controller=ctl)
+            else:
+                pl = _placement("vibe", W0, cluster, perf)
+                sim = EPSimulator(m, cluster, WORKLOADS[workload], cfg,
+                                  placement=pl)
+            recs = sim.run(reqs, phase="prefill")
+            gps[arm] = goodput(recs, slo)
+            if arm == "adaptive" and sim.controller is not None:
+                stats = dict(
+                    recalibrations=len(sim.controller.updates),
+                    perf_recalibrations=sum(
+                        1 for u in sim.controller.updates
+                        if u.kind == "perf"),
+                    stall_total_ms=1e3 * sum(
+                        s for s, _, _ in sim.migration_stalls))
+        gap = gps["oracle"] - gps["stale"]
+        recovered = (gps["adaptive"] - gps["stale"]) / gap if gap > 1e-9 \
+            else float("nan")
+        rows.append({
+            "bench": "fig11_hw",
+            "label": f"hw/{scenario}",
+            "goodput_stale": gps["stale"],
+            "goodput_adaptive": gps["adaptive"],
+            "goodput_oracle": gps["oracle"],
+            "recovered": recovered,
+            **stats,
+        })
     return rows
 
 

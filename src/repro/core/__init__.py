@@ -2,11 +2,12 @@
 # Experts. Hardware-aware expert placement for distributed MoE serving.
 from .activation import ActivationProfiler, routing_tally
 from .controller import PlacementUpdate, ViBEConfig, ViBEController
-from .drift import DriftConfig, DriftDetector, DriftEvent, cosine_distance
+from .drift import (DriftConfig, DriftDetector, DriftEvent, PerfDriftConfig,
+                    PerfDriftDetector, PerfDriftEvent, cosine_distance)
 from .incremental import (IncrementalResult, SlotSwap, Swap,
                           incremental_update, incremental_update_replicated)
-from .perf_model import (DeviceProfile, PerfModel, fit_perf_model,
-                         profile_device)
+from .perf_model import (DeviceProfile, PerfModel, TelemetryBuffer,
+                         fit_perf_model, profile_device, refit_from_samples)
 from .placement import (Placement, ReplicatedPlacement,
                         contiguous_placement, default_slots_per_rank,
                         eplb_placement, gem_placement, harmoeny_placement,
@@ -19,16 +20,19 @@ from .placement import (Placement, ReplicatedPlacement,
 from .policy import (PlacementPolicy, PolicyCapabilities, SolveContext,
                      UnknownPolicyError, get_policy, register_policy,
                      registered_policies)
-from .variability import (REGIMES, ClusterVariability, VariabilityRegime,
-                          make_cluster)
+from .variability import (REGIMES, SCENARIOS, ClusterVariability,
+                          VariabilityEvent, VariabilityRegime, make_cluster,
+                          make_scenario)
 
 __all__ = [
     "ActivationProfiler", "routing_tally",
     "PlacementUpdate", "ViBEConfig", "ViBEController",
     "DriftConfig", "DriftDetector", "DriftEvent", "cosine_distance",
+    "PerfDriftConfig", "PerfDriftDetector", "PerfDriftEvent",
     "IncrementalResult", "SlotSwap", "Swap", "incremental_update",
     "incremental_update_replicated",
-    "DeviceProfile", "PerfModel", "fit_perf_model", "profile_device",
+    "DeviceProfile", "PerfModel", "TelemetryBuffer", "fit_perf_model",
+    "profile_device", "refit_from_samples",
     "Placement", "ReplicatedPlacement", "contiguous_placement",
     "default_slots_per_rank", "eplb_placement", "gem_placement",
     "harmoeny_placement", "layer_latency_span", "normalize_slot_budget",
@@ -40,5 +44,6 @@ __all__ = [
     "PlacementPolicy", "PolicyCapabilities", "SolveContext",
     "UnknownPolicyError", "get_policy", "register_policy",
     "registered_policies",
-    "REGIMES", "ClusterVariability", "VariabilityRegime", "make_cluster",
+    "REGIMES", "SCENARIOS", "ClusterVariability", "VariabilityEvent",
+    "VariabilityRegime", "make_cluster", "make_scenario",
 ]

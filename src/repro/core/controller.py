@@ -11,6 +11,16 @@ Ties the four components together across the three phases:
                       with minimal-movement swaps, others re-solve in full),
                       snapshot the reference, cool down.
 
+Phase 3 watches **both** halves of the paper's recalibration story: routing
+drift over the activation matrix (``observe``) and *performance* drift over
+the fitted f_g models (``observe_latency`` — per-rank (load, latency)
+telemetry fed back from the serving virtual clock or real kernel timers).
+A perf-drift event refits the affected ranks' models from the telemetry
+window (:func:`~repro.core.perf_model.refit_from_samples`), rebuilds the
+SolveContext with the refreshed models, and recalibrates; on the
+incremental path ``reweight_shares_by_speed`` then consumes the refreshed
+speeds, so traffic shares chase the hardware's *current* behaviour.
+
 The controller is engine-agnostic: the serving engine feeds it per-step
 routing tallies + observed batch token counts and asks for the current
 placement; when a recalibration fires, the controller returns a
@@ -28,12 +38,13 @@ yield the r_max = 1 degenerate).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Union
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from .activation import ActivationProfiler
-from .drift import DriftConfig, DriftDetector, DriftEvent
+from .drift import (DriftConfig, DriftDetector, DriftEvent, PerfDriftConfig,
+                    PerfDriftDetector, PerfDriftEvent)
 from .incremental import IncrementalResult
 from .perf_model import PerfModel
 from .placement import ReplicatedPlacement
@@ -47,6 +58,11 @@ class ViBEConfig:
     policy: str = "vibe"              # any name in repro.core.policy registry
     adaptive: bool = True             # Phase 3 on/off (paper: static vs adaptive)
     drift: DriftConfig = dataclasses.field(default_factory=DriftConfig)
+    perf_drift: Optional[PerfDriftConfig] = None
+    # None disables performance-drift monitoring (routing-only Phase 3, the
+    # pre-drift-refresh behaviour). Set a PerfDriftConfig to watch observed
+    # per-rank latencies against the fitted f_g models and refit + recalibrate
+    # when the relative residual exceeds delta_perf on any rank.
     epsilon: float = 0.03             # incremental solver tolerance
     expert_bytes: int = 0             # per-expert weight bytes (migration cost)
     full_resolve_on_stress: bool = True
@@ -79,6 +95,13 @@ class ViBEConfig:
         else:
             object.__setattr__(self, "slots_per_rank", self.slot_budget)
         caps = get_policy(self.policy).capabilities   # raises on unknown name
+        if self.perf_drift is not None and not caps.needs_perf_models:
+            # such a policy never reads f_g — refitting the models could
+            # never change its placement, so the monitor would be inert
+            raise ValueError(
+                f"perf_drift set, but policy {self.policy!r} has "
+                "capabilities.needs_perf_models=False — refreshed perf "
+                "models would never influence its placement")
         if self.slot_budget is not None and not caps.accepts_slot_budget:
             raise ValueError(
                 f"slot_budget set, but policy {self.policy!r} has "
@@ -98,12 +121,20 @@ class ViBEConfig:
 @dataclasses.dataclass(frozen=True)
 class PlacementUpdate:
     step: int
-    event: DriftEvent
+    event: Union[DriftEvent, PerfDriftEvent]
     placement: ReplicatedPlacement
     moved_experts: int
     migration_bytes: int
     swaps_per_layer: Optional[np.ndarray] = None
     full_resolve: bool = False
+    refit_ranks: Tuple[int, ...] = ()   # ranks whose f_g was refreshed
+    #                                     ("perf" events only)
+
+    @property
+    def kind(self) -> str:
+        """Which drift signal triggered this update:
+        "routing" | "stress" | "perf"."""
+        return self.event.kind
 
 
 class ViBEController:
@@ -125,6 +156,12 @@ class ViBEController:
         self.profiler = ActivationProfiler(n_layers, n_experts,
                                            window=config.drift.window)
         self.detector = DriftDetector(n_layers, n_experts, config.drift)
+        # perf-drift detector shares self.perf_models BY REFERENCE: its
+        # refit() replaces entries in place, so _context() always reads the
+        # freshest f_g without a copy protocol
+        self.perf_detector = (
+            PerfDriftDetector(n_ranks, self.perf_models, config.perf_drift)
+            if config.perf_drift is not None else None)
         w0 = (np.atleast_2d(initial_w) if initial_w is not None
               else np.full((n_layers, n_experts), 1.0 / n_experts))
         self.placement: ReplicatedPlacement = self._solve(w0)
@@ -174,16 +211,44 @@ class ViBEController:
             return None
         return self._recalibrate(event)
 
+    def observe_latency(self, rank_loads: np.ndarray,
+                        rank_latencies: np.ndarray
+                        ) -> Optional[PlacementUpdate]:
+        """Feed one step's per-rank (token load, observed MoE latency).
+
+        Arrays are (G,) or (L, G) — the engine/simulator virtual clocks
+        produce the per-layer form. When the windowed relative residual
+        against the fitted f_g exceeds δ_perf on any rank, the affected
+        models are refit from the telemetry window and a recalibration runs
+        with the refreshed estimates (the paper's performance-refresh half
+        of §4.2.4). Returns the resulting update, or None.
+
+        Telemetry is tracked even for static controllers so static-vs-
+        adaptive comparisons share drift statistics, mirroring ``observe``.
+        """
+        if self.perf_detector is None:
+            return None
+        event = self.perf_detector.observe(rank_loads, rank_latencies)
+        if event is None or not self.cfg.adaptive:
+            return None
+        refit = self.perf_detector.refit(event.ranks)
+        if not refit:
+            return None                    # not enough samples to refresh
+        return self._recalibrate(event, refit_ranks=refit)
+
     # ------------------------------------------------------------------
-    def _recalibrate(self, event: DriftEvent) -> PlacementUpdate:
+    def _recalibrate(self, event: Union[DriftEvent, PerfDriftEvent],
+                     refit_ranks: Tuple[int, ...] = ()) -> PlacementUpdate:
         w = self.profiler.window_matrix()
         old = self.placement
-        if event.kind != "stress" or not self.cfg.full_resolve_on_stress:
-            incremental = self.policy.capabilities.supports_incremental
-        else:
-            # magnitude shift: operating point of every f_g moved → full
-            # re-solve at the new stress level (still same machinery).
+        if event.kind in ("stress", "perf") \
+                and self.cfg.full_resolve_on_stress:
+            # stress: the operating point of every f_g moved; perf: the
+            # f_g curves themselves moved → full re-solve with the fresh
+            # estimates (still same machinery).
             incremental = False
+        else:
+            incremental = self.policy.capabilities.supports_incremental
         if incremental:
             res: IncrementalResult = self.policy.refine(old, self._context(w))
             new, moved = res.placement, res.moved_expert_count()
@@ -191,10 +256,11 @@ class ViBEController:
                 step=self._step, event=event, placement=new,
                 moved_experts=moved,
                 migration_bytes=moved * self.cfg.expert_bytes,
-                swaps_per_layer=res.per_layer_swaps)
+                swaps_per_layer=res.per_layer_swaps,
+                refit_ranks=refit_ranks)
         else:
             # full greedy re-solve (the paper's contrast for eplb-style
-            # policies; also the stress-event path for every policy).
+            # policies; also the stress/perf-event path for every policy).
             # ``moved_experts`` counts changed (layer, slot) residents, so
             # every migrated *copy* is charged expert_bytes.
             new = self._solve(w)
@@ -203,8 +269,12 @@ class ViBEController:
                 step=self._step, event=event, placement=new,
                 moved_experts=moved,
                 migration_bytes=moved * self.cfg.expert_bytes,
-                full_resolve=True)
+                full_resolve=True, refit_ranks=refit_ranks)
         self.placement = upd.placement
+        # cool down BOTH monitors: the rearrangement perturbs routing and
+        # latency telemetry alike (transient migration burst, Appendix A.1)
         self.detector.snapshot()
+        if self.perf_detector is not None:
+            self.perf_detector.snapshot()
         self.updates.append(upd)
         return upd

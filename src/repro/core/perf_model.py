@@ -2,8 +2,12 @@
 
 Each EP rank g gets a model ``f_g(n)`` mapping token load ``n`` to expected
 fused-MoE kernel latency. The paper profiles each GPU once with the fused MoE
-kernel across a token-count sweep and notes the load→latency relationship is
-stable over time, so a fitted model can be retained for the serving lifetime.
+kernel across a token-count sweep (Phase 1); under *performance drift*
+(thermal throttling, power-cap changes, device replacement — §4.2.4) the
+fitted model goes stale, so this module also provides the online side: a
+:class:`TelemetryBuffer` of observed per-rank ``(n, latency)`` samples from
+serving itself, and :func:`refit_from_samples` which rebuilds f_g from the
+recent window with the same fitting machinery — no offline sweep required.
 
 We model the physically-motivated two-regime shape observed on both GPUs and
 TPUs:
@@ -25,6 +29,9 @@ The public surface is small:
   * :func:`fit_perf_model` — least-squares piecewise-linear fit from
     (token_count, latency) samples, as produced by the profiling harness.
   * :class:`DeviceProfile` — the profiling sweep record for one device.
+  * :class:`TelemetryBuffer` — per-rank rolling window of serving-observed
+    ``(n, latency)`` samples (the perf-drift detector's raw signal).
+  * :func:`refit_from_samples` — rebuild one rank's f_g from such a window.
 
 Everything here is plain numpy — this is control-plane code that runs on the
 host next to the serving engine, exactly as in the paper.
@@ -32,16 +39,19 @@ host next to the serving engine, exactly as in the paper.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Sequence
+from typing import Deque, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 __all__ = [
     "PerfModel",
     "DeviceProfile",
+    "TelemetryBuffer",
     "fit_perf_model",
     "profile_device",
+    "refit_from_samples",
 ]
 
 
@@ -119,7 +129,11 @@ def fit_perf_model(profile: DeviceProfile, n_knots: int = 8) -> PerfModel:
     Knots are placed at quantiles of the sampled token counts; latency at
     each knot is an isotonic-regularized local mean, guaranteeing the fitted
     f_g is monotone non-decreasing (physical requirement — more tokens never
-    finish faster).
+    finish faster). A 0-knot is always anchored at the memory-bound floor
+    (the smallest-load bin's latency — at decode-scale loads the expert
+    weights dominate and latency is flat in n), honouring the
+    :class:`PerfModel` contract that the first knot is 0 even when the
+    sweep starts at, say, 64 tokens.
     """
     tc, lt = profile.token_counts, profile.latencies
     order = np.argsort(tc)
@@ -145,6 +159,12 @@ def fit_perf_model(profile: DeviceProfile, n_knots: int = 8) -> PerfModel:
     lat = _pava(lat)
     # strictly positive floor
     lat = np.maximum(lat, 1e-9)
+    if knots[0] > 0.0:
+        # anchor the promised 0-knot at the memory-bound floor: loads below
+        # the smallest profiled count see the flat floor explicitly instead
+        # of relying on interp's silent clamp
+        knots = np.concatenate([[0.0], knots])
+        lat = np.concatenate([[lat[0]], lat])
     return PerfModel(knots, lat, device_id=profile.device_id)
 
 
@@ -191,3 +211,127 @@ def profile_device(
     return DeviceProfile(device_id=device_id,
                          token_counts=np.asarray(tc),
                          latencies=np.asarray(lat))
+
+
+# ---------------------------------------------------------------------------
+# online telemetry (perf-drift recalibration, §4.2.4)
+# ---------------------------------------------------------------------------
+
+class TelemetryBuffer:
+    """Per-rank rolling window of serving-observed ``(n, latency)`` samples.
+
+    Serving produces these for free: the engine's virtual clock (or a real
+    deployment's kernel timers) yields per-rank token load and measured MoE
+    latency every step. The buffer keeps the last ``window`` samples per
+    rank — enough load diversity (prefill chunks + decode batches) to refit
+    a piecewise-linear f_g without any offline sweep.
+    """
+
+    def __init__(self, n_ranks: int, window: int = 128):
+        if n_ranks < 1 or window < 1:
+            raise ValueError("n_ranks and window must be >= 1")
+        self.n_ranks = int(n_ranks)
+        self.window = int(window)
+        self._buf: List[Deque[Tuple[float, float]]] = [
+            collections.deque(maxlen=window) for _ in range(self.n_ranks)]
+
+    def add(self, rank_loads: np.ndarray, rank_latencies: np.ndarray) -> None:
+        """Record one step's observations.
+
+        ``rank_loads`` / ``rank_latencies``: matching (G,) or (L, G) arrays
+        — the per-layer rows the virtual clock computes are each a genuine
+        (n, f_g(n)) sample, so they all go in.
+        """
+        loads = np.atleast_2d(np.asarray(rank_loads, dtype=np.float64))
+        lats = np.atleast_2d(np.asarray(rank_latencies, dtype=np.float64))
+        if loads.shape != lats.shape or loads.shape[1] != self.n_ranks:
+            raise ValueError(f"loads {loads.shape} / latencies {lats.shape} "
+                             f"must match and have {self.n_ranks} columns")
+        for g in range(self.n_ranks):
+            self._buf[g].extend(zip(loads[:, g], lats[:, g]))
+
+    def count(self, rank: int) -> int:
+        return len(self._buf[rank])
+
+    def samples(self, rank: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(n, latency) arrays of the rank's current window (oldest first)."""
+        if not self._buf[rank]:
+            return np.empty(0), np.empty(0)
+        arr = np.asarray(self._buf[rank], dtype=np.float64)
+        return arr[:, 0], arr[:, 1]
+
+    def relative_residuals(self, models: Sequence[PerfModel],
+                           min_samples: int = 1) -> np.ndarray:
+        """(G,) windowed mean relative residual |observed − f_g(n)| / f_g(n).
+
+        Ranks with fewer than ``min_samples`` observations report NaN (the
+        detector treats that as "no signal yet").
+        """
+        if len(models) != self.n_ranks:
+            raise ValueError("one model per rank required")
+        out = np.full(self.n_ranks, np.nan)
+        for g, model in enumerate(models):
+            if self.count(g) < max(min_samples, 1):
+                continue
+            n, lat = self.samples(g)
+            pred = np.maximum(np.asarray(model(n), dtype=np.float64), 1e-12)
+            out[g] = float(np.mean(np.abs(lat - pred) / pred))
+        return out
+
+    def clear(self, rank: Optional[int] = None) -> None:
+        for g in ([rank] if rank is not None else range(self.n_ranks)):
+            self._buf[g].clear()
+
+
+def refit_from_samples(token_loads: np.ndarray, latencies: np.ndarray,
+                       device_id: int = 0, n_knots: int = 8,
+                       prior: Optional[PerfModel] = None,
+                       min_span: float = 4.0) -> PerfModel:
+    """Rebuild one rank's f_g from a telemetry window (online refresh).
+
+    Reuses :func:`fit_perf_model` — quantile knots over the *observed* load
+    range, isotonic latencies, 0-knot anchored at the memory-bound floor —
+    so the refreshed model has exactly the same shape guarantees as the
+    Phase 1 fit, just sourced from recent serving telemetry instead of an
+    offline sweep.
+
+    Serving windows rarely look like an offline sweep, so a ``prior`` model
+    (the one being replaced) disciplines the refit where the window is
+    uninformative — assuming the unseen region drifted *multiplicatively*,
+    which is physically exact for DVFS-style throttling (it slows the whole
+    kernel):
+
+    * narrow window (max/min < ``min_span``, e.g. a saturated server seeing
+      the same full prefill chunk every step): the window identifies only a
+      scale, so the prior's whole curve is rescaled by the median
+      observed/predicted ratio;
+    * diverse window: the shape is refit from the samples, and the prior's
+      knots *above* the observed range ride along, rescaled to match at
+      the seam — linear extrapolation from a low-load window would
+      otherwise wildly mispredict stressed loads the rank sees later.
+    """
+    tc = np.asarray(token_loads, dtype=np.float64)
+    lt = np.asarray(latencies, dtype=np.float64)
+    if tc.size < 2:
+        raise ValueError("need at least 2 telemetry samples to refit")
+    span = (float(tc.max()) + 1.0) / (float(tc.min()) + 1.0)
+    if prior is not None and span < min_span:
+        pred = np.maximum(np.asarray(prior(tc), dtype=np.float64), 1e-12)
+        factor = float(np.median(lt / pred))
+        return PerfModel(prior.knots.copy(),
+                         np.maximum(prior.lat * factor, 1e-9), device_id)
+    fitted = fit_perf_model(DeviceProfile(device_id, tc, lt),
+                            n_knots=n_knots)
+    if prior is None:
+        return fitted
+    n_hi = float(tc.max())
+    tail = prior.knots > n_hi * 1.25
+    if not tail.any():
+        return fitted
+    ratio = float(fitted(n_hi)) / max(float(prior(n_hi)), 1e-12)
+    knots = np.concatenate([fitted.knots, prior.knots[tail]])
+    lat = np.concatenate([fitted.lat,
+                          np.maximum(prior.lat[tail] * ratio, 1e-9)])
+    # the seam is continuous by construction (both sides equal ~fitted(n_hi)
+    # at n_hi); accumulate guards monotonicity against bin noise
+    return PerfModel(knots, np.maximum.accumulate(lat), device_id)

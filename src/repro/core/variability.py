@@ -26,6 +26,16 @@ so at low load all devices look identical (paper Fig 5 decode) and at high
 load the full process-variation spread is exposed (prefill). ViBE never sees
 this ground truth — it only observes profiled (n, latency) samples, exactly
 like the real system.
+
+**Time-varying hardware (§4.2.4 "performance estimates" refresh):** the
+cluster additionally carries a schedule of :class:`VariabilityEvent`\\ s, so
+the ground truth itself can drift: a thermal throttle ramping one device
+down, a fleet-wide power-cap step, transient neighbor interference, or a
+device replacement that changes a rank's intrinsic speed bin. ``latency``
+(and the simulator's vectorized twin) take the virtual-clock time ``t``;
+with no events the cluster is static and behaves exactly as before. Named
+scenario presets (:data:`SCENARIOS`, :func:`make_scenario`) back the
+hardware-drift benchmarks and the ``serve --variability-scenario`` flag.
 """
 
 from __future__ import annotations
@@ -39,9 +49,12 @@ from .perf_model import DeviceProfile, PerfModel, fit_perf_model, profile_device
 
 __all__ = [
     "VariabilityRegime",
+    "VariabilityEvent",
     "ClusterVariability",
     "REGIMES",
+    "SCENARIOS",
     "make_cluster",
+    "make_scenario",
 ]
 
 
@@ -71,6 +84,118 @@ class VariabilityRegime:
                 if dev < n_devices:
                     speeds[dev] = s
         return speeds
+
+
+@dataclasses.dataclass(frozen=True)
+class VariabilityEvent:
+    """One scheduled change to the cluster's ground-truth behaviour.
+
+    ``kind``:
+
+    * ``"ramp"``      — gradual slowdown: the device's effective speed is
+      multiplied by a factor going linearly 1 → (1 − magnitude) over
+      [t_start, t_start + duration], then holding (thermal throttle).
+    * ``"step"``      — instantaneous permanent slowdown by ``magnitude``
+      from ``t_start`` on (power-cap change).
+    * ``"transient"`` — slowdown by ``magnitude`` only during
+      [t_start, t_start + duration) (neighbor interference, shared-fabric
+      contention), full recovery afterwards.
+    * ``"replace"``   — the device's *intrinsic* speed bin (its entry in
+      ``ClusterVariability.speeds``) becomes ``magnitude`` from ``t_start``
+      on: a swapped part from a different process-variation bin. Unlike the
+      multiplicative kinds this only shows under stress, exactly like the
+      static spread.
+
+    ``device`` is an EP rank index, or None for the whole fleet (only
+    meaningful for the multiplicative kinds).
+    """
+
+    kind: str                        # "ramp" | "step" | "transient" | "replace"
+    t_start: float
+    magnitude: float                 # fractional slowdown; "replace": new speed
+    device: Optional[int] = None     # None = every device
+    duration: float = 0.0            # ramp length / transient length
+
+    def __post_init__(self):
+        if self.kind not in ("ramp", "step", "transient", "replace"):
+            raise ValueError(f"unknown VariabilityEvent kind {self.kind!r}")
+        if self.kind == "replace":
+            if self.device is None:
+                raise ValueError("replace events need a specific device")
+            if not 0.0 < self.magnitude <= 1.0:
+                raise ValueError("replace magnitude is the new intrinsic "
+                                 f"speed in (0, 1], got {self.magnitude}")
+        elif not 0.0 <= self.magnitude < 1.0:
+            raise ValueError(f"{self.kind} magnitude must be a fractional "
+                             f"slowdown in [0, 1), got {self.magnitude}")
+
+    def multiplier(self, t: float) -> float:
+        """Effective-speed multiplier this event contributes at time ``t``
+        (1.0 = inactive; "replace" events always return 1.0 here)."""
+        if self.kind == "replace" or t < self.t_start:
+            return 1.0
+        if self.kind == "step":
+            return 1.0 - self.magnitude
+        if self.kind == "transient":
+            return (1.0 - self.magnitude
+                    if t < self.t_start + self.duration else 1.0)
+        # ramp
+        if self.duration <= 0.0 or t >= self.t_start + self.duration:
+            return 1.0 - self.magnitude
+        frac = (t - self.t_start) / self.duration
+        return 1.0 - self.magnitude * frac
+
+
+#: Named hardware-drift scenarios for benchmarks / ``serve``. Each maps to a
+#: builder ``f(n_devices, t0, duration) -> List[VariabilityEvent]``; default
+#: magnitudes are calibrated to be clearly detectable (≫ jitter_sigma) while
+#: staying within the paper's measured throttling range.
+SCENARIOS: Dict[str, Callable[..., List[VariabilityEvent]]] = {}
+
+
+def _scenario(name):
+    def reg(fn):
+        SCENARIOS[name] = fn
+        return fn
+    return reg
+
+
+@_scenario("thermal-ramp")
+def _thermal_ramp(n_devices, t0, duration, magnitude=0.30):
+    # one device gradually throttles (clogged heatsink / thermal paste aging)
+    return [VariabilityEvent("ramp", t0, magnitude, device=0,
+                             duration=duration)]
+
+
+@_scenario("power-cap")
+def _power_cap(n_devices, t0, duration, magnitude=0.15):
+    # facility lowers the fleet power cap: every device steps down at once
+    return [VariabilityEvent("step", t0, magnitude, device=None)]
+
+
+@_scenario("interference")
+def _interference(n_devices, t0, duration, magnitude=0.35):
+    # a co-located tenant hammers shared fabric next to the last rank,
+    # then goes away
+    return [VariabilityEvent("transient", t0, magnitude,
+                             device=n_devices - 1, duration=duration)]
+
+
+@_scenario("device-replace")
+def _device_replace(n_devices, t0, duration, magnitude=0.86):
+    # rank 0's board is swapped for a part from a slower V-F bin
+    return [VariabilityEvent("replace", t0, magnitude, device=0)]
+
+
+def make_scenario(name: str, n_devices: int, t0: float = 1.0,
+                  duration: float = 4.0, **kw) -> List[VariabilityEvent]:
+    """Build the event schedule for a named hardware-drift scenario."""
+    try:
+        builder = SCENARIOS[name]
+    except KeyError:
+        raise ValueError(f"unknown variability scenario {name!r}; known: "
+                         f"{', '.join(sorted(SCENARIOS))}") from None
+    return builder(n_devices, t0, duration, **kw)
 
 
 #: Paper-measured regimes (§3, §5.5) + TPU projection (DESIGN.md §3).
@@ -131,6 +256,9 @@ class ClusterVariability:
 
     n_devices: int
     speeds: np.ndarray               # (G,) intrinsic speed factors in (0,1]
+    events: List[VariabilityEvent] = dataclasses.field(default_factory=list)
+    # time-varying drift schedule; empty = static cluster (historical
+    # behaviour; every ``t`` parameter below is then irrelevant)
     d_model: int = 7168
     d_ff: int = 2048
     experts_per_rank: int = 32
@@ -153,13 +281,46 @@ class ClusterVariability:
     def stress(self, n: float) -> float:
         return float(np.clip(n / self.n_tdp, 0.0, 1.0) ** self.stress_gamma)
 
-    def effective_speed(self, device_id: int, n: float) -> float:
-        """1 at rest; (1 − throttle − device deviation) at full stress."""
-        base = float(self.speeds[device_id])
-        return max(1.0 - (self.throttle + (1.0 - base)) * self.stress(n), 0.1)
+    # -- time-varying ground truth ------------------------------------------
 
-    def latency(self, device_id: int, n: float, jitter: bool = False) -> float:
-        """Ground-truth fused-MoE latency for n tokens on one rank.
+    def base_speeds_at(self, t: float = 0.0) -> np.ndarray:
+        """(G,) intrinsic speed bins at time ``t`` ("replace" events)."""
+        sp = np.asarray(self.speeds, dtype=np.float64)
+        if not self.events:
+            return sp
+        sp = sp.copy()
+        # by t_start, not list order: the most recent replacement wins
+        for ev in sorted(self.events, key=lambda e: e.t_start):
+            if ev.kind == "replace" and t >= ev.t_start:
+                sp[ev.device] = ev.magnitude
+        return sp
+
+    def multipliers_at(self, t: float = 0.0) -> np.ndarray:
+        """(G,) product of active events' effective-speed multipliers."""
+        m = np.ones(self.n_devices, dtype=np.float64)
+        for ev in self.events:
+            f = ev.multiplier(t)
+            if f == 1.0:
+                continue
+            if ev.device is None:
+                m *= f
+            else:
+                m[ev.device] *= f
+        return m
+
+    def effective_speed(self, device_id: int, n: float,
+                        t: float = 0.0) -> float:
+        """1 at rest; (1 − throttle − device deviation) at full stress,
+        further scaled by whatever drift events are active at time ``t``."""
+        base = float(self.base_speeds_at(t)[device_id])
+        mult = float(self.multipliers_at(t)[device_id])
+        speed = (1.0 - (self.throttle + (1.0 - base)) * self.stress(n)) * mult
+        return max(speed, 0.1)
+
+    def latency(self, device_id: int, n: float, t: float = 0.0,
+                jitter: bool = False) -> float:
+        """Ground-truth fused-MoE latency for n tokens on one rank at
+        virtual-clock time ``t``.
 
         DVFS throttling divides the *whole* kernel by the effective speed —
         a frequency drop slows the fabric and scheduling as well as the MXU,
@@ -169,22 +330,26 @@ class ClusterVariability:
         flops = 2.0 * n * self.d_model * self.d_ff * 3.0  # 3 GEMMs (SwiGLU)
         t_mem = self.weight_bytes / self.hbm_bw
         t_cmp = flops / self.peak_flops
-        t = self.t_base + max(t_mem, t_cmp) / self.effective_speed(device_id, n)
+        lat = (self.t_base
+               + max(t_mem, t_cmp) / self.effective_speed(device_id, n, t))
         if jitter and self.jitter_sigma > 0:
-            t *= float(1.0 + self._rng.normal(0.0, self.jitter_sigma))
-        return max(t, 1e-9)
+            lat *= float(1.0 + self._rng.normal(0.0, self.jitter_sigma))
+        return max(lat, 1e-9)
 
     # -- profiling interface (what ViBE is allowed to see) ------------------
 
     def profile_all(self, token_counts=(64, 128, 256, 512, 1024, 2048, 4096,
                                          8192, 16384),
-                    repeats: int = 3) -> List[DeviceProfile]:
-        fn = lambda g, n: self.latency(g, n, jitter=True)
+                    repeats: int = 3, t: float = 0.0) -> List[DeviceProfile]:
+        fn = lambda g, n: self.latency(g, n, t=t, jitter=True)
         return [profile_device(fn, g, token_counts, repeats)
                 for g in range(self.n_devices)]
 
-    def fit_models(self, **kw) -> List[PerfModel]:
-        return [fit_perf_model(p, **kw) for p in self.profile_all(**kw_pop(kw))]
+    def fit_models(self, t: float = 0.0, **kw) -> List[PerfModel]:
+        """Profile-and-fit at virtual-clock time ``t`` (Phase 1; an oracle
+        re-profile of a drifted cluster passes the post-drift time)."""
+        return [fit_perf_model(p, **kw)
+                for p in self.profile_all(t=t, **kw_pop(kw))]
 
 
 def kw_pop(kw):

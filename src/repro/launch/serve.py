@@ -16,8 +16,9 @@ import argparse
 import numpy as np
 
 from repro.configs import get_smoke
-from repro.core import (DriftConfig, ViBEConfig, ViBEController,
-                        make_cluster, registered_policies)
+from repro.core import (DriftConfig, PerfDriftConfig, SCENARIOS, ViBEConfig,
+                        ViBEController, make_cluster, make_scenario,
+                        registered_policies)
 from repro.models import moe_perm_shape
 from repro.serving import Engine, WORKLOADS, sample_requests, summarize
 
@@ -28,17 +29,25 @@ def serve(arch: str, *, policy: str = "vibe", n_requests: int = 12,
           qps: float = 50.0, workload: str = "sharegpt",
           regime: str = "mi325x", max_batch: int = 4, max_seq: int = 96,
           adaptive: bool = True, weighted_routing: bool = True,
-          moe_impl: str = "ragged", seed: int = 0):
+          moe_impl: str = "ragged", variability_scenario: str = "none",
+          scenario_start: float = 0.0, scenario_duration: float = 2.0,
+          perf_drift_delta: float = 0.0, seed: int = 0):
     cfg = get_smoke(arch)
     if not cfg.is_moe:
         raise SystemExit(f"{arch} has no MoE layers — ViBE serving n/a")
     n_moe, n_slots = moe_perm_shape(cfg, None, "train")
     ranks = min(8, n_slots)
+    # hardware-drift schedule: the ground-truth cluster changes over the
+    # virtual clock (thermal ramp, power cap, interference, replacement)
+    events = ([] if variability_scenario in ("none", "")
+              else make_scenario(variability_scenario, ranks,
+                                 t0=scenario_start,
+                                 duration=scenario_duration))
     cluster = make_cluster(ranks, regime, d_model=cfg.d_model,
                            d_ff=cfg.moe_d_ff,
                            experts_per_rank=max(n_slots // ranks, 1),
-                           seed=seed)
-    perf = cluster.fit_models()                    # Phase 1: profiling
+                           seed=seed, events=events)
+    perf = cluster.fit_models()                    # Phase 1: profiling (t=0)
     # ``policy`` may be any name in the repro.core.policy registry;
     # replication-capable policies use their default slot budget (singleton
     # footprint plus one spare replica slot per rank) and the engine reads
@@ -47,6 +56,10 @@ def serve(arch: str, *, policy: str = "vibe", n_requests: int = 12,
         n_moe, n_slots, ranks, perf,
         ViBEConfig(policy=policy, adaptive=adaptive,
                    drift=DriftConfig(window=20, interval=5, cooldown=5),
+                   perf_drift=(PerfDriftConfig(delta_perf=perf_drift_delta,
+                                               window=64, interval=5,
+                                               cooldown=10, min_samples=8)
+                               if perf_drift_delta > 0 else None),
                    expert_bytes=3 * cfg.d_model * cfg.moe_d_ff * 2))
     # weighted_routing threads the vibe_r solver's per-copy traffic shares
     # into the dispatch tables (share-weighted replica routing); disabling
@@ -86,6 +99,22 @@ def main() -> int:
                          "'capacity' = fixed per-slot buckets, every rank "
                          "pays slots×capacity rows and overflow drops "
                          "(legacy baseline)")
+    ap.add_argument("--variability-scenario", default="none",
+                    choices=("none",) + tuple(sorted(SCENARIOS)),
+                    help="hardware-drift schedule applied to the ground-"
+                         "truth cluster over the virtual clock (thermal "
+                         "ramp on one device, fleet power cap, transient "
+                         "interference, device replacement)")
+    ap.add_argument("--scenario-start", type=float, default=0.0,
+                    help="virtual-clock time (s) the drift scenario begins")
+    ap.add_argument("--scenario-duration", type=float, default=2.0,
+                    help="ramp/transient length (s) for scenarios that "
+                         "have one")
+    ap.add_argument("--perf-drift-delta", type=float, default=0.0,
+                    help="enable online performance-drift recalibration: "
+                         "refit f_g and re-solve when any rank's windowed "
+                         "relative latency residual exceeds this threshold "
+                         "(0 = routing-only recalibration, the default)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     engine, records = serve(args.arch, policy=args.policy,
@@ -94,6 +123,10 @@ def main() -> int:
                             adaptive=args.adaptive,
                             weighted_routing=args.weighted_routing,
                             moe_impl=args.moe_impl,
+                            variability_scenario=args.variability_scenario,
+                            scenario_start=args.scenario_start,
+                            scenario_duration=args.scenario_duration,
+                            perf_drift_delta=args.perf_drift_delta,
                             seed=args.seed)
     s = summarize(records)
     st = engine.stats
@@ -105,9 +138,18 @@ def main() -> int:
           f"virtual time {st.virtual_time:.3f}s")
     print(f"[serve] TTFT p50/p90 = {s['ttft_p50']:.4f}/{s['ttft_p90']:.4f}s "
           f"TPOT p50 = {s['tpot_p50']:.5f}s")
-    print(f"[serve] recalibrations: {st.migrations}, migrated slots "
+    kinds = {}
+    for u in engine.controller.updates:
+        kinds[u.kind] = kinds.get(u.kind, 0) + 1
+    by_kind = (" (" + ", ".join(f"{k}: {v}" for k, v in sorted(kinds.items()))
+               + ")") if kinds else ""
+    print(f"[serve] recalibrations: {st.migrations}{by_kind}, migrated slots "
           f"{st.migrated_slots}, bytes {st.migration_bytes}, dropped "
           f"assignments {st.dropped_assignments:.0f}")
+    if args.variability_scenario != "none":
+        print(f"[serve] hardware drift: scenario {args.variability_scenario} "
+              f"from t={args.scenario_start:.2f}s, perf-drift delta "
+              f"{args.perf_drift_delta:g}")
     return 0
 
 

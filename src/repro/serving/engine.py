@@ -213,9 +213,15 @@ class Engine:
                                           r_max=self._r_max)
         if charge:
             per_slot = 3 * self.cfg.d_model * self.cfg.moe_d_ff * 2
+            moved_bytes = moved_total * per_slot
             self.stats.migrations += 1
             self.stats.migrated_slots += moved_total
-            self.stats.migration_bytes += moved_total * per_slot
+            self.stats.migration_bytes += moved_bytes
+            if self.cluster is not None:
+                # the weight transfer stalls serving: charge it to the
+                # virtual clock so engine-measured TTFT/TPOT see the same
+                # migration stalls the simulator models (sim.migration_stalls)
+                self.stats.virtual_time += moved_bytes / self.cluster.ici_bw
         return moved_total
 
     def _observe(self, tallies: np.ndarray, tokens: float) -> None:
@@ -276,26 +282,43 @@ class Engine:
         exactly what the dispatch tables did this step, so weighted vs
         uniform replica routing shows up in TTFT/TPOT, not just in the
         tables. With ``moe_impl="capacity"`` every rank is charged its full
-        bucket allocation (slots_per_rank × capacity rows, zero padding
-        included) — the fixed-bucket kernel's honest, skew-oblivious cost.
+        bucket allocation (its real-slot count × capacity rows, zero
+        padding included — non-uniform slot budgets charge each rank its
+        actual bucket count) — the fixed-bucket kernel's honest,
+        skew-oblivious cost.
+
+        The per-rank (load, latency) rows also feed the controller's
+        performance-drift telemetry (``observe_latency``): the virtual
+        clock stands in for the kernel timers a real deployment would
+        read, so a drifting ``ClusterVariability`` (events schedule) is
+        observed — and recalibrated against — through exactly the samples
+        serving produced.
         """
         if self.cluster is None or self.controller is None \
                 or not self.cfg.is_moe:
             dt = 1e-3 * max(tokens, 1)                  # trivial fallback
+            self.stats.virtual_time += dt
+            return dt
+        if self.moe_impl == "capacity":
+            cf = (self.rules.capacity_factor if self.rules is not None
+                  else 1.25)
+            cap = capacity_bucket_rows(tokens, self.cfg.top_k,
+                                       self.n_slots, cf)
+            # per-rank *real* slot counts from the placement itself:
+            # non-uniform budgets mean ranks run different bucket counts
+            # (phantom slots allocate nothing)
+            budget = self.controller.placement.rank_slot_budget()
+            rank_load = budget.astype(np.float64) * cap
         else:
-            t = self._controller_tallies(tallies)
-            if self.moe_impl == "capacity":
-                cf = (self.rules.capacity_factor if self.rules is not None
-                      else 1.25)
-                s_loc = max(self.n_slots // self.controller.G, 1)
-                cap = capacity_bucket_rows(tokens, self.cfg.top_k,
-                                           self.n_slots, cf)
-                rank_load = np.full((t.shape[0], self.controller.G),
-                                    float(s_loc * cap))
-            else:
-                rank_load = realized_rank_loads(self._clock_placement(), t)
-            dt = float(rank_latency_matrix(self.cluster, rank_load).max(1).sum())
+            rank_load = realized_rank_loads(
+                self._clock_placement(), self._controller_tallies(tallies))
+        rank_time = rank_latency_matrix(self.cluster, rank_load,
+                                        t=self.stats.virtual_time)
+        dt = float(rank_time.max(1).sum())
         self.stats.virtual_time += dt
+        upd = self.controller.observe_latency(rank_load, rank_time)
+        if upd is not None:
+            self._apply_perm(self._controller_perm())
         return dt
 
     # -- request lifecycle ----------------------------------------------------

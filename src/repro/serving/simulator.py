@@ -56,26 +56,34 @@ def capacity_bucket_rows(tokens: float, top_k: int, n_slots: int,
 # ---------------------------------------------------------------------------
 
 def rank_latency_matrix(cluster: ClusterVariability, n_lg: np.ndarray,
-                        rng: Optional[np.random.Generator] = None) -> np.ndarray:
+                        rng: Optional[np.random.Generator] = None,
+                        t: float = 0.0) -> np.ndarray:
     """(L, G) per-rank token loads → (L, G) ground-truth MoE kernel seconds.
 
-    Vectorized version of ``ClusterVariability.latency`` (same formula).
-    The per-rank loads already reflect replica-aware splitting when they
-    come from ``ReplicatedPlacement.rank_loads`` (each expert's tokens are
-    divided over its copies by the solver's traffic shares), so latency
-    projection is placement-representation-agnostic.
+    Vectorized version of ``ClusterVariability.latency`` (same formula),
+    evaluated at virtual-clock time ``t`` so scheduled drift events
+    (thermal ramps, power caps, replacements) show up in simulated and
+    engine-clocked latencies alike. The per-rank loads already reflect
+    replica-aware splitting when they come from
+    ``ReplicatedPlacement.rank_loads`` (each expert's tokens are divided
+    over its copies by the solver's traffic shares), so latency projection
+    is placement-representation-agnostic.
     """
     n = np.maximum(np.asarray(n_lg, dtype=np.float64), 0.0)
     stress = np.clip(n / cluster.n_tdp, 0.0, 1.0) ** cluster.stress_gamma
-    speed = np.maximum(
-        1.0 - (cluster.throttle + (1.0 - cluster.speeds[None, :])) * stress,
-        0.1)
+    base = cluster.base_speeds_at(t) if cluster.events else cluster.speeds
+    speed = 1.0 - (cluster.throttle + (1.0 - base[None, :])) * stress
+    if cluster.events:
+        speed = speed * cluster.multipliers_at(t)[None, :]
+    speed = np.maximum(speed, 0.1)
     flops = 2.0 * n * cluster.d_model * cluster.d_ff * 3.0
     t_mem = cluster.weight_bytes / cluster.hbm_bw
-    t = cluster.t_base + np.maximum(t_mem, flops / cluster.peak_flops) / speed
+    lat = cluster.t_base + np.maximum(t_mem,
+                                      flops / cluster.peak_flops) / speed
     if rng is not None and cluster.jitter_sigma > 0:
-        t = t * (1.0 + rng.normal(0.0, cluster.jitter_sigma, size=t.shape))
-    return np.maximum(t, 1e-9)
+        lat = lat * (1.0 + rng.normal(0.0, cluster.jitter_sigma,
+                                      size=lat.shape))
+    return np.maximum(lat, 1e-9)
 
 
 def realized_rank_loads(placement, loads: np.ndarray) -> np.ndarray:
@@ -216,6 +224,9 @@ class EPSimulator:
         self._topics = (topic_loadings(workload, self.L, self.E)
                         if workload.topic_sigma > 0 else None)
         self.rng = np.random.default_rng(sim.seed)
+        # virtual-clock time of the step being simulated: run() keeps it
+        # current; drift events (ClusterVariability.events) key off it
+        self.now = 0.0
         # accounting
         self.layer_stats: List[LayerStats] = []
         self.rank_busy = np.zeros(self.G)
@@ -286,7 +297,6 @@ class EPSimulator:
         ``dropped_assignments`` (the artifact the ragged path removes)."""
         loads = np.atleast_2d(loads)
         n_slots = int(getattr(pl, "n_slots", self.E))
-        s_loc = max(n_slots // self.G, 1)
         cap = capacity_bucket_rows(tokens, self.model.top_k, n_slots,
                                    self.cfg.capacity_factor)
         share = getattr(pl, "share", None)
@@ -297,6 +307,11 @@ class EPSimulator:
                 pad_phantom_column(loads), pl.slot_expert, axis=1) * share
         self.dropped_assignments += float(
             np.maximum(slot_load - cap, 0.0).sum())
+        if hasattr(pl, "rank_slot_budget"):
+            # non-uniform budgets: each rank runs its own bucket count
+            # (phantom slots allocate nothing)
+            return pl.rank_slot_budget().astype(np.float64) * cap
+        s_loc = max(n_slots // self.G, 1)
         return np.full((loads.shape[0], self.G), float(s_loc * cap))
 
     def step_time(self, tokens: int, ctx: float,
@@ -318,7 +333,8 @@ class EPSimulator:
             rank_load = (realized_rank_loads(pl, loads)
                          if self.cfg.realized_loads
                          else pl.rank_loads(loads))              # (L, G)
-        rank_time = rank_latency_matrix(self.cluster, rank_load, self.rng)
+        rank_time = rank_latency_matrix(self.cluster, rank_load, self.rng,
+                                        t=self.now)
         layer_t = rank_time.max(axis=1)
         moe_t = float(layer_t.sum())
         self.rank_busy += rank_time.sum(axis=0)
@@ -334,16 +350,27 @@ class EPSimulator:
         t += self.cfg.step_overhead
 
         if self.controller is not None:
-            upd = self.controller.observe(loads, tokens=float(tokens))
-            if upd is not None:
-                bw = self.cfg.ici_bw or self.cluster.ici_bw
-                stall = (self.cfg.migration_overhead
-                         + upd.moved_experts * self.expert_bytes
-                         / (self.G * bw))
-                self.migration_stalls.append((stall, float(tokens),
-                                              upd.moved_experts))
-                t += stall
+            # performance-drift feed first (§4.2.4 f_g refresh): the jittered
+            # per-rank (load, latency) rows ARE the serving telemetry a real
+            # deployment would measure. Then the routing feed. Each can fire
+            # its own recalibration; both charge a migration stall.
+            t += self._account_update(
+                self.controller.observe_latency(rank_load, rank_time), tokens)
+            t += self._account_update(
+                self.controller.observe(loads, tokens=float(tokens)), tokens)
         return t
+
+    def _account_update(self, upd, tokens: int) -> float:
+        """Migration stall (coordination + weight transfer) for one
+        recalibration, or 0.0 when none fired."""
+        if upd is None:
+            return 0.0
+        bw = self.cfg.ici_bw or self.cluster.ici_bw
+        stall = (self.cfg.migration_overhead
+                 + upd.moved_experts * self.expert_bytes / (self.G * bw))
+        self.migration_stalls.append((stall, float(tokens),
+                                      upd.moved_experts))
+        return stall
 
     # -- event loop (continuous batching, prefill-priority) ----------------
 
@@ -366,6 +393,7 @@ class EPSimulator:
         switched = False
 
         while arrivals or waiting or running:
+            self.now = t                      # drift events key off this
             if drift_at is not None and not switched and t >= drift_at:
                 self.profile = drift_profile
                 switched = True

@@ -1,0 +1,530 @@
+"""Performance-drift recalibration (§4.2.4's f_g refresh) + satellite fixes.
+
+Covers the online perf-model pipeline end to end: time-varying ground truth
+(VariabilityEvent schedules), telemetry buffering, residual detection,
+window refits, controller recalibration — plus regression tests for the
+engine capacity-charge budget fix, the migration virtual-clock charge, the
+stress-precedence drift fix, the 0-knot anchor, and the benchmark's
+shared-hardware-snapshot fix.
+"""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core import (DeviceProfile, DriftConfig, DriftDetector,
+                        PerfDriftConfig, PerfDriftDetector, SCENARIOS,
+                        TelemetryBuffer, ViBEConfig, ViBEController,
+                        VariabilityEvent, fit_perf_model, make_cluster,
+                        make_scenario, refit_from_samples)
+from repro.serving.simulator import rank_latency_matrix
+
+# compute-bound fixture dims (t_base negligible): drift in effective speed
+# is visible in latency, as on the paper's real nodes
+FIX = dict(d_model=1024, d_ff=512, experts_per_rank=8)
+
+
+def _throttled_cluster(n=4, magnitude=0.3, t0=1.0, duration=2.0):
+    events = make_scenario("thermal-ramp", n, t0=t0, duration=duration,
+                           magnitude=magnitude)
+    return make_cluster(n, "mi325x", events=events, **FIX)
+
+
+class TestVariabilityEvents:
+    def test_event_kinds_validate(self):
+        with pytest.raises(ValueError):
+            VariabilityEvent("meteor", 0.0, 0.1)
+        with pytest.raises(ValueError):
+            VariabilityEvent("step", 0.0, 1.5)           # not a fraction
+        with pytest.raises(ValueError):
+            VariabilityEvent("replace", 0.0, 0.9)        # needs a device
+        VariabilityEvent("replace", 0.0, 0.9, device=0)  # ok
+
+    def test_ramp_multiplier_shape(self):
+        ev = VariabilityEvent("ramp", 1.0, 0.4, device=0, duration=2.0)
+        assert ev.multiplier(0.5) == 1.0
+        assert ev.multiplier(2.0) == pytest.approx(0.8)   # halfway
+        assert ev.multiplier(10.0) == pytest.approx(0.6)  # holds after
+
+    def test_transient_recovers(self):
+        ev = VariabilityEvent("transient", 1.0, 0.3, device=2, duration=1.0)
+        assert ev.multiplier(1.5) == pytest.approx(0.7)
+        assert ev.multiplier(2.5) == 1.0
+
+    def test_cluster_latency_time_varying_one_device(self):
+        cl = _throttled_cluster()
+        n = 4 * cl.n_tdp
+        before, after = cl.latency(0, n, t=0.0), cl.latency(0, n, t=10.0)
+        assert after > before * 1.2                   # ~30% throttle visible
+        # other devices untouched
+        assert cl.latency(1, n, t=10.0) == pytest.approx(
+            cl.latency(1, n, t=0.0))
+
+    def test_static_cluster_ignores_time(self):
+        cl = make_cluster(4, "mi325x", **FIX)
+        n = 4 * cl.n_tdp
+        assert cl.latency(2, n, t=123.0) == pytest.approx(
+            cl.latency(2, n, t=0.0))
+
+    def test_rank_latency_matrix_matches_scalar_path(self):
+        cl = _throttled_cluster()
+        loads = np.array([[1000.0, 5000.0, 9000.0, 2.0 * cl.n_tdp]])
+        for t in (0.0, 2.0, 8.0):
+            mat = rank_latency_matrix(cl, loads, t=t)
+            ref = [cl.latency(g, loads[0, g], t=t) for g in range(4)]
+            np.testing.assert_allclose(mat[0], ref, rtol=1e-12)
+
+    def test_replace_event_changes_intrinsic_bin(self):
+        cl = make_cluster(4, "mi325x", events=make_scenario(
+            "device-replace", 4, t0=1.0, magnitude=0.8), **FIX)
+        n = 4 * cl.n_tdp
+        assert cl.latency(0, n, t=5.0) > cl.latency(0, n, t=0.0)
+        # replacement is stress-dependent: invisible at rest (Fig 5)
+        assert cl.latency(0, 16, t=5.0) == pytest.approx(
+            cl.latency(0, 16, t=0.0), rel=1e-4)
+
+    def test_replace_events_resolve_by_time_not_list_order(self):
+        cl = make_cluster(4, "mi325x", events=[
+            VariabilityEvent("replace", 10.0, 0.9, device=0),
+            VariabilityEvent("replace", 2.0, 0.7, device=0),
+        ], **FIX)
+        assert cl.base_speeds_at(5.0)[0] == pytest.approx(0.7)
+        assert cl.base_speeds_at(11.0)[0] == pytest.approx(0.9)  # newest wins
+
+    def test_scenario_registry(self):
+        assert set(SCENARIOS) >= {"thermal-ramp", "power-cap",
+                                  "interference", "device-replace"}
+        with pytest.raises(ValueError):
+            make_scenario("nope", 8)
+
+
+class TestTelemetryBuffer:
+    def test_window_and_samples(self):
+        buf = TelemetryBuffer(2, window=4)
+        buf.add(np.array([[1.0, 10.0], [2.0, 20.0]]),
+                np.array([[0.1, 1.0], [0.2, 2.0]]))
+        assert buf.count(0) == 2 and buf.count(1) == 2
+        buf.add(np.full((3, 2), 5.0), np.full((3, 2), 0.5))
+        assert buf.count(0) == 4                       # window evicts oldest
+        n, lat = buf.samples(0)
+        assert n[0] == 2.0 and lat[0] == 0.2           # oldest kept sample
+
+    def test_shape_mismatch_raises(self):
+        buf = TelemetryBuffer(3)
+        with pytest.raises(ValueError):
+            buf.add(np.ones(3), np.ones(2))
+        with pytest.raises(ValueError):
+            buf.add(np.ones(4), np.ones(4))            # wrong rank count
+
+    def test_residuals_respect_min_samples(self):
+        cl = make_cluster(2, "uniform", **FIX)
+        models = cl.fit_models()
+        buf = TelemetryBuffer(2, window=16)
+        # 16384 is the top profiled knot, where the quantile-binned fit
+        # is sharp — the residual then isolates the min_samples gating
+        obs = np.array([cl.latency(0, 16384), cl.latency(1, 16384)])
+        buf.add(np.array([16384.0, 16384.0]), obs)
+        res = buf.relative_residuals(models, min_samples=4)
+        assert np.isnan(res).all()
+        for _ in range(4):
+            buf.add(np.array([16384.0, 16384.0]), obs)
+        res = buf.relative_residuals(models, min_samples=4)
+        assert np.isfinite(res).all() and res.max() < 0.05
+
+
+class TestZeroKnotAnchor:
+    def test_fit_anchors_zero_knot(self):
+        """Regression: docstring promises knots[0] == 0, but quantile knots
+        started at the smallest sampled count (64), silently flat-clamping
+        decode-scale loads through interp."""
+        prof = DeviceProfile(0, np.array([64.0, 256, 1024, 4096, 16384]),
+                             np.array([1e-3, 1.1e-3, 2e-3, 5e-3, 1.8e-2]))
+        m = fit_perf_model(prof)
+        assert m.knots[0] == 0.0
+        # decode-scale loads see the memory-bound floor explicitly
+        assert m(0) == pytest.approx(m(64))
+        assert m(13) == pytest.approx(m(64))
+
+    def test_refit_narrow_window_rescales_prior(self):
+        """A saturated window (one operating point) keeps the prior's curve
+        shape and rescales it — DVFS throttling is multiplicative."""
+        prior = fit_perf_model(DeviceProfile(
+            0, np.array([64.0, 1024, 4096, 16384]),
+            np.array([1e-3, 2e-3, 6e-3, 2.2e-2])))
+        n = np.full(12, 16000.0)
+        lat = np.asarray(prior(n)) * 1.5
+        m = refit_from_samples(n, lat, prior=prior)
+        np.testing.assert_allclose(m.knots, prior.knots)
+        np.testing.assert_allclose(m.lat, prior.lat * 1.5, rtol=1e-9)
+        # a diverse window refits the shape from data instead
+        n2 = np.array([100.0, 1000, 4000, 16000.0] * 3)
+        m2 = refit_from_samples(n2, np.asarray(prior(n2)), prior=prior)
+        assert m2.knots.size != prior.knots.size \
+            or not np.allclose(m2.knots, prior.knots)
+
+
+class TestPerfDriftDetector:
+    def _setup(self, **cfg):
+        cl = _throttled_cluster(magnitude=0.35, t0=0.0, duration=0.5)
+        models = cl.fit_models()                       # profiled at t=0
+        kw = dict(delta_perf=0.12, window=64, interval=5, cooldown=10,
+                  min_samples=8)
+        kw.update(cfg)
+        det = PerfDriftDetector(4, models, PerfDriftConfig(**kw))
+        return cl, det
+
+    def _feed(self, cl, det, t, steps, rng):
+        events = []
+        for _ in range(steps):
+            loads = rng.uniform(2000, 9000, size=(3, 4))
+            lats = np.array([[cl.latency(g, loads[l, g], t=t, jitter=True)
+                              for g in range(4)] for l in range(3)])
+            ev = det.observe(loads, lats)
+            if ev is not None:
+                events.append(ev)
+        return events
+
+    def test_no_fire_when_models_match(self):
+        cl, det = self._setup()
+        assert self._feed(cl, det, 0.0, 40, np.random.default_rng(0)) == []
+
+    def test_fires_on_throttled_rank(self):
+        cl, det = self._setup()
+        events = self._feed(cl, det, 5.0, 20, np.random.default_rng(1))
+        assert events and events[0].kind == "perf"
+        assert 0 in events[0].ranks                    # the ramped device
+        assert events[0].max_residual > 0.12
+        assert events[0].rank_residuals[0] > 0.12
+
+    def test_refires_until_snapshot_then_cools_down(self):
+        cl, det = self._setup(cooldown=100)
+        rng = np.random.default_rng(2)
+        events = self._feed(cl, det, 5.0, 12, rng)
+        assert events                     # refires every interval while hot
+        det.snapshot()                    # recalibration done → cool down
+        assert self._feed(cl, det, 5.0, 60, rng) == []
+
+    def test_refit_round_trip_clears_residual(self):
+        """Refit from the window on a throttled cluster: the refreshed f_g
+        tracks the drifted ground truth within the jitter band and the
+        residual signal drops back below threshold."""
+        cl, det = self._setup()
+        events = self._feed(cl, det, 5.0, 20, np.random.default_rng(3))
+        assert events
+        refit = det.refit(events[0].ranks)
+        assert 0 in refit
+        assert det.residuals().max() < 0.12            # signal cleared
+        grid = np.linspace(2000, 9000, 13)
+        truth = np.array([cl.latency(0, n, t=5.0) for n in grid])
+        pred = np.asarray(det.models[0](grid))
+        assert (np.abs(pred - truth) / truth).max() < 0.10
+
+
+class TestStressPrecedence:
+    """Regression: simultaneous magnitude surge + routing drift must take
+    the stress (full re-solve) path, not the incremental routing path."""
+
+    def _warm(self, det, base, tokens=4096, steps=40):
+        for _ in range(steps):
+            det.observe(base, tokens)
+
+    def test_simultaneous_drift_reports_stress(self):
+        rng = np.random.default_rng(0)
+        det = DriftDetector(4, 16, DriftConfig(window=20, interval=5))
+        base = rng.dirichlet(np.full(16, 0.3), size=4) * 4096
+        self._warm(det, base)
+        shifted = np.roll(base, 5, axis=1) * 4.0       # both signals at once
+        fired = [e for e in (det.observe(shifted, 4 * 4096)
+                             for _ in range(40)) if e is not None]
+        assert fired and fired[0].kind == "stress"
+        assert fired[0].routing_drift                  # both signals carried
+        assert fired[0].layer >= 0
+        assert fired[0].max_cos_distance > 0.05
+
+    def test_pure_stress_has_no_routing_layer(self):
+        rng = np.random.default_rng(1)
+        det = DriftDetector(4, 16, DriftConfig(window=20, interval=5))
+        base = rng.dirichlet(np.full(16, 0.3), size=4) * 4096
+        self._warm(det, base)
+        fired = [e for e in (det.observe(base * 4, 4 * 4096)
+                             for _ in range(40)) if e is not None]
+        assert fired and fired[0].kind == "stress"
+        assert not fired[0].routing_drift and fired[0].layer == -1
+
+    def test_controller_full_resolves_on_simultaneous_drift(self):
+        cl = make_cluster(4, "mi325x", **FIX)
+        ctl = ViBEController(
+            3, 16, 4, cl.fit_models(),
+            ViBEConfig(policy="vibe", adaptive=True, expert_bytes=100,
+                       drift=DriftConfig(window=10, interval=5, cooldown=5)))
+        rng = np.random.default_rng(2)
+        base = rng.dirichlet(np.full(16, 0.3), size=3) * 4096
+        for _ in range(20):
+            ctl.observe(base)
+        shifted = np.roll(base, 6, axis=1) * 4.0
+        upds = [u for u in (ctl.observe(shifted) for _ in range(30))
+                if u is not None]
+        assert upds and upds[0].kind == "stress"
+        assert upds[0].full_resolve                    # not the swap path
+
+
+class TestControllerPerfRecalibration:
+    def _controller(self, cl, **kw):
+        kw.setdefault("policy", "vibe")
+        kw.setdefault("adaptive", True)
+        kw.setdefault("expert_bytes", 1000)
+        kw.setdefault("perf_drift", PerfDriftConfig(
+            delta_perf=0.12, window=64, interval=5, cooldown=5,
+            min_samples=8))
+        return ViBEController(3, 16, 4, cl.fit_models(), ViBEConfig(**kw))
+
+    def _feed_latency(self, cl, ctl, t, steps, seed=0):
+        rng = np.random.default_rng(seed)
+        upds = []
+        for _ in range(steps):
+            loads = rng.uniform(2000, 9000, size=(3, 4))
+            lats = np.array([[cl.latency(g, loads[l, g], t=t, jitter=True)
+                              for g in range(4)] for l in range(3)])
+            u = ctl.observe_latency(loads, lats)
+            if u is not None:
+                upds.append(u)
+        return upds
+
+    def test_perf_event_refits_and_recalibrates(self):
+        cl = _throttled_cluster(magnitude=0.35, t0=0.0, duration=0.5)
+        ctl = self._controller(cl)
+        stale_pred = ctl.perf_models[0](8000)
+        upds = self._feed_latency(cl, ctl, 5.0, 30)
+        assert upds, "perf drift never recalibrated"
+        u = upds[0]
+        assert u.kind == "perf" and u.full_resolve
+        assert 0 in u.refit_ranks
+        assert ctl.updates and ctl.updates[0] is u
+        # the shared models list was refreshed in place
+        new_pred = ctl.perf_models[0](8000)
+        truth = cl.latency(0, 8000, t=5.0)
+        assert abs(new_pred - truth) / truth < abs(stale_pred - truth) / truth
+        assert abs(new_pred - truth) / truth < 0.08
+
+    def test_incremental_path_when_full_resolve_disabled(self):
+        cl = _throttled_cluster(magnitude=0.35, t0=0.0, duration=0.5)
+        ctl = self._controller(cl, full_resolve_on_stress=False)
+        upds = self._feed_latency(cl, ctl, 5.0, 30)
+        assert upds and not upds[0].full_resolve
+        assert upds[0].swaps_per_layer is not None
+
+    def test_static_controller_tracks_but_never_updates(self):
+        cl = _throttled_cluster(magnitude=0.35, t0=0.0, duration=0.5)
+        ctl = self._controller(cl, adaptive=False)
+        assert self._feed_latency(cl, ctl, 5.0, 30) == []
+        # telemetry still recorded for A/B stat parity
+        assert ctl.perf_detector.events
+        assert ctl.perf_detector.buffer.count(0) > 0
+
+    def test_no_detector_without_config(self):
+        cl = make_cluster(4, "mi325x", **FIX)
+        ctl = ViBEController(3, 16, 4, cl.fit_models(),
+                             ViBEConfig(policy="vibe"))
+        assert ctl.perf_detector is None
+        assert ctl.observe_latency(np.ones(4), np.ones(4)) is None
+
+    def test_perf_drift_requires_perf_model_policy(self):
+        with pytest.raises(ValueError, match="needs_perf_models"):
+            ViBEConfig(policy="eplb", perf_drift=PerfDriftConfig())
+
+
+class TestBenchSharedSnapshot:
+    """Regression: fig11's A/B arms must score one hardware snapshot —
+    fit_models() draws from the cluster's jitter RNG, so per-arm profiling
+    hands each arm different models."""
+
+    def test_fit_models_advances_jitter_rng(self):
+        cl = make_cluster(4, "mi325x", **FIX)
+        a, b = cl.fit_models(), cl.fit_models()
+        assert any(not np.allclose(x.lat, y.lat) for x, y in zip(a, b))
+
+    def test_fig11_arms_share_one_snapshot(self):
+        from benchmarks.bench_fig11_drift import _placement, _sim
+        from benchmarks.common import paper_cluster, profile_W
+        model = "deepseek-v3-671b"
+        cluster = paper_cluster(model, "mi325x")
+        perf = cluster.fit_models()
+        W0 = profile_W(model, "sonnet")
+        static_pl = _placement("vibe", W0, cluster, perf)
+        sim = _sim(model, "sonnet", "sharegpt", "vibe", True, cluster, perf)
+        np.testing.assert_array_equal(
+            sim.controller.placement.slot_expert, static_pl.slot_expert)
+
+
+class TestEngineAccounting:
+    def test_capacity_charge_uses_per_rank_budget(self):
+        """Regression: the capacity virtual clock priced every rank
+        n_slots // G × cap rows, ignoring non-uniform per-rank slot
+        budgets; it must read the placement's real bucket counts."""
+        import types
+        from repro.serving.engine import Engine, EngineStats
+        from repro.serving.simulator import capacity_bucket_rows
+        cl = make_cluster(4, "mi325x", **FIX)
+        budget = [6, 4, 4, 4]
+        ctl = ViBEController(
+            2, 16, 4, cl.fit_models(),
+            ViBEConfig(policy="vibe_r", slot_budget=budget))
+        eng = Engine.__new__(Engine)           # pricing path only — no jit
+        eng.cfg = types.SimpleNamespace(is_moe=True, top_k=2, n_experts=16)
+        eng.rules = None
+        eng.moe_impl = "capacity"
+        eng.cluster = cl
+        eng.controller = ctl
+        eng.n_slots = ctl.placement.n_slots
+        eng.stats = EngineStats()
+        rb = ctl.placement.rank_slot_budget()
+        assert rb.min() != rb.max()            # genuinely non-uniform
+        tallies = np.ones((2, 17))             # (L, E+1) with drop column
+        tokens = 512
+        dt = eng._charge(tallies, tokens)
+        cap = capacity_bucket_rows(tokens, 2, eng.n_slots, 1.25)
+        want = rank_latency_matrix(cl, rb.astype(float) * cap,
+                                   t=0.0).max(1).sum()
+        assert dt == pytest.approx(float(want))
+        # the old flat pricing (n_slots // G per rank) is measurably wrong
+        s_loc = eng.n_slots // 4
+        flat = rank_latency_matrix(
+            cl, np.full((2, 4), float(s_loc * cap)), t=0.0).max(1).sum()
+        assert dt != pytest.approx(float(flat))
+
+    def _engine(self, cfg_kw=(), cluster_kw=(), arch="qwen3-moe-235b-a22b"):
+        from repro.configs import get_smoke
+        from repro.models import moe_perm_shape
+        from repro.serving import Engine
+        cfg = get_smoke(arch)
+        n_moe, n_slots = moe_perm_shape(cfg, None, "train")
+        cluster = make_cluster(4, "mi325x", d_model=1024, d_ff=512,
+                               experts_per_rank=max(n_slots // 4, 1),
+                               **dict(cluster_kw))
+        ctl = ViBEController(
+            n_moe, n_slots, 4, cluster.fit_models(),
+            ViBEConfig(policy="vibe", expert_bytes=3 * cfg.d_model
+                       * cfg.moe_d_ff * 2, **dict(cfg_kw)))
+        return Engine(cfg, controller=ctl, cluster=cluster,
+                      max_batch=2, max_seq=48, seed=0)
+
+    def test_migration_charges_virtual_clock(self):
+        """Regression: engine recalibrations accrued migration_bytes but
+        never advanced virtual_time, hiding migration stalls from
+        engine-measured TTFT."""
+        eng = self._engine()
+        rng = np.random.default_rng(0)
+        perm = np.stack([rng.permutation(eng.n_slots)
+                         for _ in range(eng.n_moe)]).astype(np.int32)
+        vt0, bytes0 = eng.stats.virtual_time, eng.stats.migration_bytes
+        moved = eng._apply_perm(perm)
+        assert moved > 0
+        moved_bytes = eng.stats.migration_bytes - bytes0
+        assert moved_bytes > 0
+        assert eng.stats.virtual_time - vt0 == pytest.approx(
+            moved_bytes / eng.cluster.ici_bw)
+
+    def test_engine_perf_drift_recalibrates_end_to_end(self):
+        """The full feedback loop on real routing: virtual-clock telemetry →
+        perf-drift event → refit → re-solve → weight migration, all inside
+        the serving engine."""
+        from repro.serving import WORKLOADS, sample_requests
+        eng = self._engine(
+            cfg_kw=dict(adaptive=True,
+                        drift=DriftConfig(window=200, interval=10,
+                                          cooldown=10),
+                        perf_drift=PerfDriftConfig(
+                            delta_perf=0.25, window=64, interval=3,
+                            cooldown=4, min_samples=6)),
+            # rank 0 halves speed just after profiling: a multiplicative
+            # step is visible even at decode-scale loads
+            cluster_kw=dict(events=[VariabilityEvent("step", 1e-9, 0.5,
+                                                     device=0)],
+                            t_base=1e-7))
+        reqs = sample_requests(WORKLOADS["sharegpt"], 4, qps=100.0, seed=0)
+        reqs = [type(r)(r.req_id, r.arrival, 8, 6) for r in reqs]
+        eng.submit(reqs)
+        records = eng.run(max_steps=200)
+        done = [r for r in records if np.isfinite(r.finished_at)]
+        assert len(done) == 4
+        perf_upds = [u for u in eng.controller.updates if u.kind == "perf"]
+        assert perf_upds, "engine telemetry never triggered a perf refresh"
+        assert 0 in perf_upds[0].refit_ranks
+        assert eng.stats.migrations >= 1
+        # refreshed rank-0 model reflects the halved speed
+        pred = eng.controller.perf_models[0](64)
+        truth = eng.cluster.latency(0, 64, t=1.0)
+        assert abs(pred - truth) / truth < 0.15
+
+
+@pytest.mark.slow
+class TestThermalRampRecovery:
+    """Acceptance: on a thermal-ramp scenario, adaptive ViBE with perf-drift
+    recalibration recovers ≥ half of the goodput gap between the stale-model
+    run and an oracle re-solved with fresh models."""
+
+    def test_recovers_half_the_goodput_gap(self):
+        from benchmarks.bench_fig11_drift import (_hw_cluster, _placement,
+                                                  EXPERT_BYTES)
+        from benchmarks.common import profile_W
+        from repro.configs import get
+        from repro.serving import (EPSimulator, PAPER_SLOS, SimConfig,
+                                   WORKLOADS, goodput, sample_requests)
+        model = "deepseek-v3-671b"
+        m = get(model)
+        W0 = profile_W(model, "sonnet")
+        slo = PAPER_SLOS[("sonnet", model)]
+        t0, dur, t_end = 1.0, 2.0, 5.0
+        reqs = sample_requests(WORKLOADS["sonnet"], 300, qps=40.0, seed=4)
+        gps, ctl = {}, None
+        for arm in ("stale", "adaptive", "oracle"):
+            cl = _hw_cluster(model, "thermal-ramp", t0, dur)
+            perf = cl.fit_models(t=t_end if arm == "oracle" else 0.0)
+            cfg = SimConfig(ep_degree=8, seed=3, max_prefill_tokens=16_384)
+            if arm == "adaptive":
+                ctl = ViBEController(
+                    m._n_moe_layers(), m.n_experts, 8, perf,
+                    ViBEConfig(policy="vibe", adaptive=True,
+                               drift=DriftConfig(window=50, interval=10,
+                                                 cooldown=20),
+                               perf_drift=PerfDriftConfig(
+                                   delta_perf=0.08, window=128, interval=5,
+                                   cooldown=10, min_samples=16),
+                               full_resolve_on_stress=False,
+                               expert_bytes=EXPERT_BYTES(m)),
+                    initial_w=W0)
+                sim = EPSimulator(m, cl, WORKLOADS["sonnet"], cfg,
+                                  controller=ctl)
+                adaptive_cl = cl
+            else:
+                sim = EPSimulator(m, cl, WORKLOADS["sonnet"], cfg,
+                                  placement=_placement("vibe", W0, cl, perf))
+            gps[arm] = goodput(sim.run(reqs, phase="prefill"), slo)
+        gap = gps["oracle"] - gps["stale"]
+        assert gap > 0.1, f"scenario shows no stale-vs-oracle gap: {gps}"
+        recovered = (gps["adaptive"] - gps["stale"]) / gap
+        assert recovered >= 0.5, f"recovered only {recovered:.2f}: {gps}"
+        # the refreshed f_g tracks the drifted ground truth on the refit
+        # ranks (rank 0 is the ramped device) over the load range the rank
+        # actually served — an online refit is only ever valid over its
+        # telemetry window. The absolute band is set by the piecewise fit's
+        # knee-binning error (~10%, same as a fresh Phase-1 fit there), so
+        # the sharp claim is comparative: the refresh removes the ~45%
+        # staleness error the frozen model carries.
+        perf_upds = [u for u in ctl.updates if u.kind == "perf"]
+        assert perf_upds and any(0 in u.refit_ranks for u in perf_upds)
+        n_win, _ = ctl.perf_detector.buffer.samples(0)
+        lo, hi = np.quantile(n_win, [0.1, 0.9])
+        grid = np.linspace(lo, hi, 9)
+        truth = np.array([adaptive_cl.latency(0, n, t=10.0) for n in grid])
+        pred = np.asarray(ctl.perf_models[0](grid))
+        rel = np.abs(pred - truth) / truth
+        stale_cl = _hw_cluster(model, "thermal-ramp", t0, dur)
+        stale_rel = np.abs(np.asarray(
+            stale_cl.fit_models()[0](grid)) - truth) / truth
+        assert np.median(rel) < 0.15
+        assert np.median(rel) < 0.6 * np.median(stale_rel)
