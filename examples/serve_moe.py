@@ -1,30 +1,39 @@
 """End-to-end serving: a real JAX MoE model under the continuous-batching
-engine, with ViBE placement, drift detection and live weight migration.
+engine — paged KV cache, SLO-aware scheduling and chunked prefill — with
+ViBE placement, drift detection and live weight migration.
 
     PYTHONPATH=src python examples/serve_moe.py [--policy eplb]
+    PYTHONPATH=src python examples/serve_moe.py --scheduler slo_edf \\
+        --workload bursty --prefill-chunk 12
 """
 
 import argparse
 
 from repro.core import registered_policies
 from repro.launch.serve import serve
-from repro.serving import summarize
+from repro.serving import TRACES, WORKLOADS, registered_schedulers, summarize
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--policy", default="vibe",
                     choices=list(registered_policies()))
     ap.add_argument("--arch", default="qwen3-moe-235b-a22b")
+    ap.add_argument("--scheduler", default="fcfs",
+                    choices=list(registered_schedulers()))
+    ap.add_argument("--workload", default="sharegpt",
+                    choices=sorted(WORKLOADS) + sorted(TRACES))
+    ap.add_argument("--prefill-chunk", type=int, default=0)
     args = ap.parse_args()
 
     engine, records = serve(args.arch, policy=args.policy, n_requests=8,
-                            qps=30.0, workload="sharegpt", max_batch=4,
-                            max_seq=96)
+                            qps=30.0, workload=args.workload, max_batch=4,
+                            max_seq=96, scheduler=args.scheduler,
+                            prefill_chunk=args.prefill_chunk)
     s = summarize(records)
     st = engine.stats
     print(f"policy={args.policy}: served {s['n']} requests in "
           f"{st.steps} steps ({st.prefill_steps} prefill, "
-          f"{st.decode_steps} decode)")
+          f"{st.chunk_steps} chunks, {st.decode_steps} decode)")
     print(f"virtual time {st.virtual_time:.3f}s | "
           f"TTFT p50/p90 {s['ttft_p50'] * 1e3:.1f}/{s['ttft_p90'] * 1e3:.1f}ms"
           f" | TPOT p50 {s['tpot_p50'] * 1e3:.2f}ms")

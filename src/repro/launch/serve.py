@@ -5,31 +5,90 @@ the cluster (Alg 1 Phase 1), computes the initial placement (Phase 2),
 serves with drift-aware recalibration (Phase 3) and reports SLO metrics
 against the virtual clock (DESIGN.md §4).
 
+The engine side is configured through :class:`EngineConfig`: pick a
+scheduler from the registry (``--scheduler slo_edf``), enable chunked
+prefill (``--prefill-chunk 12``), size the paged KV block pool
+(``--kv-blocks/--block-size``), and feed either a single workload family
+or a multi-tenant arrival trace (``--workload bursty``).
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-235b-a22b \
-        --requests 12 --policy vibe
+        --requests 12 --policy vibe --scheduler slo_edf --workload bursty
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
+from typing import Optional, Union
 
 import numpy as np
 
 from repro.configs import get_smoke
 from repro.core import (DriftConfig, PerfDriftConfig, SCENARIOS, ViBEConfig,
-                        ViBEController, make_cluster, make_scenario,
-                        registered_policies)
+                        ViBEController, default_slots_per_rank, get_policy,
+                        make_cluster, make_scenario, registered_policies)
 from repro.models import moe_perm_shape
-from repro.serving import Engine, WORKLOADS, sample_requests, summarize
+from repro.serving import (Engine, EngineConfig, KVCacheConfig,
+                           SchedulerConfig, TRACES, WORKLOADS,
+                           registered_schedulers, sample_requests,
+                           sample_trace, summarize)
 
-__all__ = ["serve", "main"]
+__all__ = ["serve", "derive_slot_budget", "main"]
+
+
+def derive_slot_budget(n_ranks: int, n_experts: int, expert_bytes: int,
+                       spec: Union[str, int, None] = "auto"):
+    """Per-rank physical slot budget from device memory telemetry.
+
+    ``spec``:
+
+    * ``"auto"``  — query the local accelerator's allocator
+      (``jax.Device.memory_stats``) for free HBM, emulate ``n_ranks``
+      devices sharing it, and size each rank's replica budget by how many
+      expert tensors fit in its share after a safety margin. Hosts
+      without memory telemetry (the CPU CI runner) fall back
+      deterministically to the policy-default budget, so smoke runs are
+      identical across hosts.
+    * ``"default"`` / ``None`` — policy-default budget (returns None).
+    * an integer — uniform per-rank budget, passed through.
+
+    Returns a ``(n_ranks,)`` int array or None (= let the policy choose).
+    """
+    if spec in (None, "default", ""):
+        return None
+    if not isinstance(spec, str) or spec.lstrip("-").isdigit():
+        return np.full(n_ranks, int(spec), dtype=np.int64)
+    if spec != "auto":
+        raise ValueError(f"slots_per_rank must be 'auto', 'default' or an "
+                         f"integer, got {spec!r}")
+    base = default_slots_per_rank(n_experts, n_ranks)
+    stats = None
+    try:
+        import jax
+        stats = jax.local_devices()[0].memory_stats()
+    except Exception:
+        stats = None
+    if not stats:
+        # deterministic CPU fallback: exactly the policy-default budget
+        return np.full(n_ranks, base, dtype=np.int64)
+    free = int(stats.get("bytes_limit", 0)) - int(stats.get("bytes_in_use", 0))
+    if free <= 0:
+        return np.full(n_ranks, base, dtype=np.int64)
+    # 80% of this emulated rank's share of free memory holds its experts;
+    # clamp to [policy default, E) so the budget always solves
+    fit = int(0.8 * free / n_ranks / max(expert_bytes, 1))
+    per_rank = int(np.clip(fit, base, max(n_experts - 1, base)))
+    return np.full(n_ranks, per_rank, dtype=np.int64)
 
 
 def serve(arch: str, *, policy: str = "vibe", n_requests: int = 12,
           qps: float = 50.0, workload: str = "sharegpt",
           regime: str = "mi325x", max_batch: int = 4, max_seq: int = 96,
           adaptive: bool = True, weighted_routing: bool = True,
-          moe_impl: str = "ragged", variability_scenario: str = "none",
+          moe_impl: str = "ragged", scheduler: str = "fcfs",
+          prefill_chunk: int = 0, kv_blocks: Optional[int] = None,
+          block_size: int = 16, slots_per_rank: Union[str, int, None] = "auto",
+          variability_scenario: str = "none",
           scenario_start: float = 0.0, scenario_duration: float = 2.0,
           perf_drift_delta: float = 0.0, seed: int = 0):
     cfg = get_smoke(arch)
@@ -48,10 +107,14 @@ def serve(arch: str, *, policy: str = "vibe", n_requests: int = 12,
                            experts_per_rank=max(n_slots // ranks, 1),
                            seed=seed, events=events)
     perf = cluster.fit_models()                    # Phase 1: profiling (t=0)
-    # ``policy`` may be any name in the repro.core.policy registry;
-    # replication-capable policies use their default slot budget (singleton
-    # footprint plus one spare replica slot per rank) and the engine reads
-    # the resulting budget off the controller's placement.
+    expert_bytes = 3 * cfg.d_model * cfg.moe_d_ff * 2
+    # replication-capable policies honour a per-rank physical slot budget
+    # derived from device memory telemetry (paper §5.1's non-uniform
+    # allocation); other policies keep their fixed footprint.
+    budget = None
+    if get_policy(policy).capabilities.accepts_slot_budget:
+        budget = derive_slot_budget(ranks, cfg.n_experts, expert_bytes,
+                                    slots_per_rank)
     controller = ViBEController(
         n_moe, n_slots, ranks, perf,
         ViBEConfig(policy=policy, adaptive=adaptive,
@@ -60,18 +123,28 @@ def serve(arch: str, *, policy: str = "vibe", n_requests: int = 12,
                                                window=64, interval=5,
                                                cooldown=10, min_samples=8)
                                if perf_drift_delta > 0 else None),
-                   expert_bytes=3 * cfg.d_model * cfg.moe_d_ff * 2))
+                   expert_bytes=expert_bytes,
+                   slot_budget=budget))
     # weighted_routing threads the vibe_r solver's per-copy traffic shares
     # into the dispatch tables (share-weighted replica routing); disabling
     # it keeps the legacy uniform split for A/B comparison.
-    engine = Engine(cfg, controller=controller, cluster=cluster,
-                    max_batch=max_batch, max_seq=max_seq,
-                    weighted_routing=weighted_routing, moe_impl=moe_impl,
-                    seed=seed)
-    wl = WORKLOADS[workload]
-    reqs = sample_requests(wl, n_requests, qps=qps, seed=seed)
-    reqs = [type(r)(r.req_id, r.arrival, min(r.prompt_len, max_seq // 2),
-                    min(r.output_len, max_seq // 2 - 1)) for r in reqs]
+    econfig = EngineConfig(
+        max_batch=max_batch, max_seq=max_seq, moe_impl=moe_impl, seed=seed,
+        weighted_routing=weighted_routing,
+        scheduler=SchedulerConfig(name=scheduler,
+                                  prefill_chunk=prefill_chunk),
+        kv=(KVCacheConfig(block_size=block_size, n_blocks=kv_blocks)
+            if kv_blocks else None))
+    engine = Engine(cfg, econfig, controller=controller, cluster=cluster)
+    if workload in TRACES:
+        reqs = sample_trace(TRACES[workload], n_requests, qps=qps, seed=seed)
+    else:
+        reqs = sample_requests(WORKLOADS[workload], n_requests, qps=qps,
+                               seed=seed)
+    reqs = [dataclasses.replace(r, prompt_len=min(r.prompt_len, max_seq // 2),
+                                output_len=min(r.output_len,
+                                               max_seq // 2 - 1))
+            for r in reqs]
     engine.submit(reqs)
     records = engine.run()
     return engine, records
@@ -83,8 +156,32 @@ def main() -> int:
     ap.add_argument("--policy", default="vibe",
                     choices=list(registered_policies()))
     ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--workload", default="sharegpt")
+    ap.add_argument("--workload", default="sharegpt",
+                    choices=sorted(WORKLOADS) + sorted(TRACES),
+                    help="a workload family (Poisson arrivals) or a "
+                         "multi-tenant arrival trace (bursty/diurnal/flat)")
+    ap.add_argument("--qps", type=float, default=50.0)
     ap.add_argument("--regime", default="mi325x")
+    ap.add_argument("--scheduler", default="fcfs",
+                    choices=list(registered_schedulers()),
+                    help="continuous-batching scheduler (serving/"
+                         "scheduler.py registry)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="split prompts into fixed chunks of this many "
+                         "tokens, interleaved with decode steps "
+                         "(0 = whole-prompt prefill)")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="paged KV cache pool size in blocks (0 = pool "
+                         "sized to exactly cover the decode lanes)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block")
+    ap.add_argument("--slots-per-rank", default="auto",
+                    help="replica slot budget per rank for replication-"
+                         "capable policies: 'auto' (device memory "
+                         "telemetry, deterministic CPU fallback), "
+                         "'default', or an integer")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=96)
     ap.add_argument("--static", dest="adaptive", action="store_false")
     ap.add_argument("--uniform-replica-routing", dest="weighted_routing",
                     action="store_false",
@@ -118,11 +215,17 @@ def main() -> int:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     engine, records = serve(args.arch, policy=args.policy,
-                            n_requests=args.requests,
+                            n_requests=args.requests, qps=args.qps,
                             workload=args.workload, regime=args.regime,
+                            max_batch=args.max_batch, max_seq=args.max_seq,
                             adaptive=args.adaptive,
                             weighted_routing=args.weighted_routing,
                             moe_impl=args.moe_impl,
+                            scheduler=args.scheduler,
+                            prefill_chunk=args.prefill_chunk,
+                            kv_blocks=args.kv_blocks or None,
+                            block_size=args.block_size,
+                            slots_per_rank=args.slots_per_rank,
                             variability_scenario=args.variability_scenario,
                             scenario_start=args.scenario_start,
                             scenario_duration=args.scenario_duration,
@@ -132,12 +235,19 @@ def main() -> int:
     st = engine.stats
     routing = ("share-weighted" if args.weighted_routing
                else "uniform") + f" replica routing, {args.moe_impl} FFN"
-    print(f"[serve] {args.policy} on {args.arch} ({routing}): "
+    sched = (f"{args.scheduler}"
+             + (f", chunk={args.prefill_chunk}" if args.prefill_chunk
+                else ", whole-prompt"))
+    print(f"[serve] {args.policy} on {args.arch} ({routing}; {sched}): "
           f"{st.steps} steps "
-          f"({st.prefill_steps} prefill / {st.decode_steps} decode), "
+          f"({st.prefill_steps} prefill / {st.chunk_steps} chunks / "
+          f"{st.decode_steps} decode), "
           f"virtual time {st.virtual_time:.3f}s")
     print(f"[serve] TTFT p50/p90 = {s['ttft_p50']:.4f}/{s['ttft_p90']:.4f}s "
           f"TPOT p50 = {s['tpot_p50']:.5f}s")
+    print(f"[serve] KV pool: {engine.kv.config.n_blocks} blocks x "
+          f"{engine.kv.config.block_size} tokens, peak used "
+          f"{engine.kv.peak_blocks}")
     kinds = {}
     for u in engine.controller.updates:
         kinds[u.kind] = kinds.get(u.kind, 0) + 1

@@ -2,11 +2,12 @@
 # MoE with EP dispatch, recurrent mixers, and the per-arch assembly.
 from .sharding import ShardingRules, build_copy_cdf, build_slots_of
 from .model import (block_layout, decode_fn, init_cache, init_params,
-                    loss_fn, make_moe_tables, moe_perm_shape, prefill_fn,
-                    count_params)
+                    loss_fn, make_moe_tables, moe_perm_shape,
+                    prefill_chunk_fn, prefill_fn, count_params)
 
 __all__ = [
     "ShardingRules", "build_copy_cdf", "build_slots_of",
     "block_layout", "decode_fn", "init_cache", "init_params", "loss_fn",
-    "make_moe_tables", "moe_perm_shape", "prefill_fn", "count_params",
+    "make_moe_tables", "moe_perm_shape", "prefill_chunk_fn", "prefill_fn",
+    "count_params",
 ]

@@ -45,8 +45,8 @@ from . import ssm
 
 __all__ = [
     "LayerSpec", "block_layout", "init_params", "make_moe_tables",
-    "loss_fn", "prefill_fn", "decode_fn", "init_cache", "moe_perm_shape",
-    "count_params",
+    "loss_fn", "prefill_fn", "prefill_chunk_fn", "decode_fn", "init_cache",
+    "moe_perm_shape", "count_params",
 ]
 
 
@@ -367,9 +367,63 @@ def _run_attention(p, x, cfg, rules, window, positions, cache=None,
     return jnp.einsum("bsh,hd->bsd", out, p["wo"]), (k_cache, v_cache)
 
 
+def _run_attention_chunk(p, x, cfg, window, cache, positions, lane, offset,
+                         n_valid, row_valid):
+    """Chunked-prefill attention: one prompt chunk of one sequence against
+    its lane in the full (batch, S_max) cache.
+
+    ``row_valid`` masks the tail chunk's padding: padded rows never reach
+    the cache (masked write) and unwritten cache rows never reach the
+    scores (``kv_valid``), so a chunked prefill accumulates exactly the
+    rows a whole-prompt prefill would.
+    """
+    B, C, D = x.shape                    # B == 1: one sequence's chunk
+    hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    G = H // KV
+    k_cache, v_cache = cache
+    S_max = k_cache.shape[1]
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, C, KV, G, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(B, C, KV, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(B, C, KV, hd)
+    cos, sin = rope_tables(positions[None, :], hd, cfg.rope_theta)
+    q = apply_rope(q.reshape(B, C, KV * G, hd), cos, sin) \
+        .reshape(B, C, KV, G, hd)
+    k = apply_rope(k, cos, sin)
+    lane = jnp.asarray(lane, jnp.int32)
+    offset = jnp.asarray(offset, jnp.int32)
+
+    def write(cbuf, new):
+        # masked in-place write at (lane, offset): padded rows keep the
+        # old cache contents (offset + C <= S_max by EngineConfig
+        # validation, so dynamic_slice never clamps/shifts the window)
+        old = jax.lax.dynamic_slice(cbuf, (lane, offset, 0, 0),
+                                    (1, C, KV, hd))
+        upd = jnp.where(row_valid[None, :, None, None],
+                        new.astype(cbuf.dtype), old)
+        return jax.lax.dynamic_update_slice(cbuf, upd, (lane, offset, 0, 0))
+
+    k_cache = write(k_cache, k)
+    v_cache = write(v_cache, v)
+    k_lane = jax.lax.dynamic_slice(k_cache, (lane, 0, 0, 0),
+                                   (1, S_max, KV, hd))
+    v_lane = jax.lax.dynamic_slice(v_cache, (lane, 0, 0, 0),
+                                   (1, S_max, KV, hd))
+    kv_valid = jnp.arange(S_max) < offset + n_valid
+    out = flash_attention(q, k_lane, v_lane, causal=cfg.causal,
+                          window=window, q_positions=positions,
+                          kv_positions=jnp.arange(S_max), kv_valid=kv_valid)
+    out = out.reshape(B, C, H * hd)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), (k_cache, v_cache)
+
+
 def _block_body(cfg, rules, specs, bp, x, *, windows_blk, moe_tables_blk,
-                positions, phase, cache_blk=None, pos=None):
-    """One super-block forward. Returns (x, tallies, aux, new_cache_blk)."""
+                positions, phase, cache_blk=None, pos=None, chunk_ctx=None):
+    """One super-block forward. Returns (x, tallies, aux, new_cache_blk).
+
+    ``chunk_ctx`` — (lane, offset, n_valid, row_valid) for the chunked-
+    prefill phase: attention routes through :func:`_run_attention_chunk`
+    and MoE layers get the padding mask so telemetry stays honest.
+    """
     tallies, aux_total = [], jnp.float32(0.0)
     new_cache = []
     moe_i = 0
@@ -381,8 +435,14 @@ def _block_body(cfg, rules, specs, bp, x, *, windows_blk, moe_tables_blk,
             if windows_blk is not None:
                 window = windows_blk[i]
             cache = None if cache_blk is None else cache_blk[i]
-            h, st = _run_attention(sub["mixer"], h, cfg, rules, window,
-                                   positions, cache=cache, pos=pos)
+            if phase == "chunk":
+                lane, offset, n_valid, row_valid = chunk_ctx
+                h, st = _run_attention_chunk(
+                    sub["mixer"], h, cfg, window, cache, positions,
+                    lane, offset, n_valid, row_valid)
+            else:
+                h, st = _run_attention(sub["mixer"], h, cfg, rules, window,
+                                       positions, cache=cache, pos=pos)
             new_cache.append(st)
         else:
             st_in = None if cache_blk is None else cache_blk[i]
@@ -410,11 +470,15 @@ def _block_body(cfg, rules, specs, bp, x, *, windows_blk, moe_tables_blk,
                 # step, so tiny batches re-draw their replica-selection
                 # uniforms instead of replaying one fixed set forever
                 seed = jnp.sum(positions).astype(jnp.int32)
+                rv = None
+                if chunk_ctx is not None:
+                    rv = jnp.broadcast_to(chunk_ctx[3][None, :],
+                                          h2.shape[:2]).reshape(-1)
                 y, tally, aux = moe_layer(
                     sub["ffn"], h2, top_k=cfg.top_k,
                     n_experts=cfg.n_experts, rules=rules,
                     slots_of=so, n_copies=nc, copy_cdf=cdf,
-                    route_seed=seed, phase=phase)
+                    route_seed=seed, phase=phase, row_valid=rv)
                 if cfg.n_shared_experts:
                     tp = None if rules is None else P(rules.dp, None, rules.tp)
                     y = y + mlp(sub["shared"], h2, cfg.mlp_gated, tp_spec=tp)
@@ -463,7 +527,7 @@ def _unembed_w(cfg, params):
 # ---------------------------------------------------------------------------
 
 def _scan_blocks(cfg, rules, params, x, *, phase, moe_tables, positions,
-                 cache=None, pos=None):
+                 cache=None, pos=None, chunk_ctx=None):
     nb, specs = block_layout(cfg)
     win = _windows(cfg)
     win = None if win is None else jnp.asarray(win)
@@ -481,7 +545,8 @@ def _scan_blocks(cfg, rules, params, x, *, phase, moe_tables, positions,
         fn = lambda x_: _block_body(cfg, rules, specs, bp, x_,
                                     windows_blk=wb, moe_tables_blk=mt,
                                     positions=positions, phase=phase,
-                                    cache_blk=cb, pos=pos)
+                                    cache_blk=cb, pos=pos,
+                                    chunk_ctx=chunk_ctx)
         if rules is not None and rules.remat and phase == "train":
             x, tall, aux, nc = jax.checkpoint(fn)(x)
         else:
@@ -540,6 +605,50 @@ def prefill_fn(cfg: ArchConfig, rules: Optional[ShardingRules] = None):
         logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
                             _unembed_w(cfg, params).astype(jnp.float32))
         return logits, cache, tallies
+
+    return fn
+
+
+def prefill_chunk_fn(cfg: ArchConfig, rules: Optional[ShardingRules] = None):
+    """Chunked prefill: one fixed-width prompt chunk into one cache lane.
+
+    ``(params, tokens (1, C), cache, lane, offset, n_valid)`` →
+    ``(logits (1, V) at the chunk's last valid row, new cache, tallies)``.
+
+    ``lane``/``offset``/``n_valid`` are traced scalars, so one compilation
+    serves every lane, every chunk index and every tail length — the
+    engine pays one compile per chunk width, not per request. The caller
+    guarantees ``offset + C <= max_seq`` (``EngineConfig`` validates
+    ``max_seq % prefill_chunk == 0``); padded tail rows are masked out of
+    the cache write, the attention scores and the MoE tallies, so the
+    final chunk's logits and cache state match a whole-prompt prefill.
+    Logits are only meaningful on the chunk that completes the prompt.
+    """
+    _, specs = block_layout(cfg)
+    if any(s.mixer != "attn" for s in specs):
+        raise NotImplementedError(
+            f"{cfg.name}: chunked prefill needs a resumable per-position "
+            "cache; SSM/hybrid mixers carry recurrent state and are not "
+            "supported")
+    if rules is not None and rules.mesh is not None:
+        raise NotImplementedError(
+            "chunked prefill is single-device (the serving engine's "
+            "configuration); mesh sharding is not supported")
+
+    def fn(params, tokens, cache, lane, offset, n_valid, moe_tables=None):
+        x, _ = _embed(cfg, params, {"tokens": tokens}, rules)
+        C = x.shape[1]
+        positions = offset + jnp.arange(C)
+        row_valid = jnp.arange(C) < n_valid
+        x, tallies, _, new_cache = _scan_blocks(
+            cfg, rules, params, x, phase="chunk", moe_tables=moe_tables,
+            positions=positions, cache=cache,
+            chunk_ctx=(lane, offset, n_valid, row_valid))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        last = jnp.take(x[0], jnp.maximum(n_valid - 1, 0), axis=0)
+        logits = jnp.einsum("d,dv->v", last.astype(jnp.float32),
+                            _unembed_w(cfg, params).astype(jnp.float32))
+        return logits[None], new_cache, tallies
 
     return fn
 

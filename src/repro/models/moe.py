@@ -298,8 +298,12 @@ def _select_slots(idx: jnp.ndarray, slots_of: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def _dense_dispatch(p, xf, route_seed, *, top_k, n_experts, slots_of,
-                    n_copies, copy_cdf):
+                    n_copies, copy_cdf, row_valid=None):
     weights, idx, mean_prob = route(p["router"], xf, top_k)
+    if row_valid is not None:
+        # padded rows (chunked prefill): no gate weight, no tally — they
+        # must be invisible to both the output and the routing telemetry
+        weights = weights * row_valid[:, None].astype(weights.dtype)
     slots = _select_slots(idx, slots_of, n_copies, copy_cdf,
                           route_seed)                   # (t, K) physical
     n_slots = p["w1"].shape[0]
@@ -309,11 +313,18 @@ def _dense_dispatch(p, xf, route_seed, *, top_k, n_experts, slots_of,
     y = expert_ffn_ref(p["w1"], p["w3"], p["w2"],
                        jnp.broadcast_to(xf, (n_slots,) + xf.shape))
     out = jnp.einsum("te,etd->td", comb, y.astype(jnp.float32))
-    tally = jax.nn.one_hot(idx, n_experts, dtype=jnp.float32).sum((0, 1))
+    tally = _masked_tally(idx, n_experts, row_valid)
     aux = _aux_loss(tally, mean_prob, n_experts)
     # dense computes every expert on every token: nothing can be dropped
     tally = jnp.concatenate([tally, jnp.zeros((1,), jnp.float32)])
     return out.astype(xf.dtype), tally, aux
+
+
+def _masked_tally(idx, n_experts, row_valid=None):
+    oh = jax.nn.one_hot(idx, n_experts, dtype=jnp.float32)
+    if row_valid is not None:
+        oh = oh * row_valid[:, None, None].astype(jnp.float32)
+    return oh.sum((0, 1))
 
 
 def _aux_loss(tally, mean_prob, n_experts):
@@ -352,11 +363,13 @@ def _ragged_local_ffn(xf, tok_flat, wgt_flat, slot_flat, active, n_groups,
 
 
 def _dense_dispatch_ragged(p, xf, route_seed, *, top_k, n_experts, slots_of,
-                           n_copies, copy_cdf, bm, ffn):
+                           n_copies, copy_cdf, bm, ffn, row_valid=None):
     """Single-device ragged dispatch: compute each assignment exactly once
     (A = t·top_k rows) instead of the dense oracle's every-expert-on-every-
     token broadcast. Same return contract as ``_dense_dispatch``."""
     weights, idx, mean_prob = route(p["router"], xf, top_k)
+    if row_valid is not None:
+        weights = weights * row_valid[:, None].astype(weights.dtype)
     slots = _select_slots(idx, slots_of, n_copies, copy_cdf, route_seed)
     n_slots = p["w1"].shape[0]
     t = xf.shape[0]
@@ -364,7 +377,7 @@ def _dense_dispatch_ragged(p, xf, route_seed, *, top_k, n_experts, slots_of,
     out = _ragged_local_ffn(xf, tok_flat, weights.reshape(-1),
                             slots.reshape(-1), None, n_slots, bm, ffn,
                             p["w1"], p["w3"], p["w2"])
-    tally = jax.nn.one_hot(idx, n_experts, dtype=jnp.float32).sum((0, 1))
+    tally = _masked_tally(idx, n_experts, row_valid)
     aux = _aux_loss(tally, mean_prob, n_experts)
     tally = jnp.concatenate([tally, jnp.zeros((1,), jnp.float32)])
     return out.astype(xf.dtype), tally, aux
@@ -622,8 +635,15 @@ def moe_layer(
     copy_cdf: Optional[jnp.ndarray] = None,     # (E, r_max) cumulative shares
     route_seed=None,                   # int32 scalar salt (varies per step)
     phase: str = "train",              # "train" | "prefill" | "decode"
+    row_valid: Optional[jnp.ndarray] = None,    # (B·S,) bool — chunk padding
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Returns (y (B,S,D), tally (E+1,), aux_loss).
+
+    ``row_valid`` masks padded token rows (a chunked-prefill tail chunk):
+    masked rows get zero gate weight and contribute nothing to the tally,
+    so the routing telemetry the virtual clock prices stays honest.
+    Supported on the single-device dense paths only (the serving engine's
+    configuration); mesh dispatch with a row mask is not implemented.
 
     ``tally[:E]`` — logical-expert routing counts (pre-capacity, so each
     token contributes exactly top_k); ``tally[E]`` — assignments dropped by
@@ -671,13 +691,18 @@ def moe_layer(
                 p, x.reshape(B * S, D), route_seed, top_k=top_k,
                 n_experts=n_experts, slots_of=slots_of, n_copies=n_copies,
                 copy_cdf=copy_cdf, bm=rules.moe_block_m,
-                ffn=_get_ragged_ffn(rules))
+                ffn=_get_ragged_ffn(rules), row_valid=row_valid)
         else:
             out, tally, aux = _dense_dispatch(
                 p, x.reshape(B * S, D), route_seed, top_k=top_k,
                 n_experts=n_experts, slots_of=slots_of, n_copies=n_copies,
-                copy_cdf=copy_cdf)
+                copy_cdf=copy_cdf, row_valid=row_valid)
         return out.reshape(B, S, D), tally, aux
+
+    if row_valid is not None:
+        raise NotImplementedError(
+            "row_valid (chunked-prefill padding mask) is only supported on "
+            "the single-device dense dispatch paths")
 
     cf = rules.capacity_factor
     bm = rules.moe_block_m

@@ -1,19 +1,38 @@
 # Serving substrate: workload generation, SLO metrics, the discrete-event
-# multi-device EP simulator, and the JAX continuous-batching engine.
+# multi-device EP simulator, and the JAX continuous-batching engine —
+# configured through the unified ServingConfig hierarchy (config.py),
+# scheduled by the pluggable scheduler registry (scheduler.py), admitted
+# by the paged KV cache (kvcache.py).
+from .config import (EngineConfig, KVCacheConfig, SchedulerConfig,
+                     ServingConfig, SimConfig)
 from .engine import Engine, EngineStats
+from .kvcache import BlockAllocator, PagedKVCache
 from .metrics import PAPER_SLOS, SLO, RequestRecord, goodput, slo_frontier, \
     summarize
-from .simulator import (EPSimulator, LayerStats, SimConfig,
-                        rank_latency_matrix, realized_rank_loads)
-from .workload import WORKLOADS, Request, WorkloadSpec, routing_profile, \
-    sample_requests, step_loads
+from .scheduler import (Action, Chunk, RequestView, Scheduler,
+                        SchedulerContext, UnknownSchedulerError,
+                        get_scheduler, register_scheduler,
+                        registered_schedulers)
+from .simulator import (EPSimulator, LayerStats, rank_latency_matrix,
+                        realized_rank_loads)
+from .workload import (TRACES, WORKLOADS, ArrivalSpec, Request, TenantSpec,
+                       TraceSpec, WorkloadSpec, routing_profile,
+                       sample_arrivals, sample_requests, sample_trace,
+                       step_loads)
 
 __all__ = [
+    "EngineConfig", "KVCacheConfig", "SchedulerConfig", "ServingConfig",
+    "SimConfig",
     "Engine", "EngineStats",
+    "BlockAllocator", "PagedKVCache",
     "PAPER_SLOS", "SLO", "RequestRecord", "goodput", "slo_frontier",
     "summarize",
-    "EPSimulator", "LayerStats", "SimConfig", "rank_latency_matrix",
+    "Action", "Chunk", "RequestView", "Scheduler", "SchedulerContext",
+    "UnknownSchedulerError", "get_scheduler", "register_scheduler",
+    "registered_schedulers",
+    "EPSimulator", "LayerStats", "rank_latency_matrix",
     "realized_rank_loads",
-    "WORKLOADS", "Request", "WorkloadSpec", "routing_profile",
-    "sample_requests", "step_loads",
+    "TRACES", "WORKLOADS", "ArrivalSpec", "Request", "TenantSpec",
+    "TraceSpec", "WorkloadSpec", "routing_profile", "sample_arrivals",
+    "sample_requests", "sample_trace", "step_loads",
 ]

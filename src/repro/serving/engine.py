@@ -6,19 +6,35 @@ feed the ViBE controller, and a placement update migrates the stacked
 expert weights via :func:`repro.models.moe.apply_placement` and swaps the
 slot-lookup tables **without recompiling** the step functions.
 
+Configuration is one frozen :class:`EngineConfig` (serving/config.py):
+
+* **Paged KV cache** — admission is gated by a block pool
+  (:class:`~repro.serving.kvcache.PagedKVCache`), not a hardcoded batch
+  cap; the default pool exactly covers the lanes, so legacy behavior is
+  unchanged until a pool is configured.
+* **Scheduler-driven steps** — each :meth:`step` asks a registered
+  scheduler (serving/scheduler.py) what to run: a prefill chunk, a decode
+  step, or idle. The default (``fcfs``, ``prefill_chunk=0``) replicates
+  the legacy prefill-priority whole-prompt loop bit-for-bit.
+* **Chunked prefill** — with ``prefill_chunk > 0`` long prompts run as
+  fixed-width chunks (:func:`repro.models.model.prefill_chunk_fn`)
+  interleaved with decode steps, and each chunk is priced on the virtual
+  clock individually, so long-context requests stop head-of-line-blocking
+  TTFT.
+
 Because this host has one CPU device, wall-clock here is meaningless for
 multi-rank behaviour; the engine keeps a *virtual clock* driven by the same
 ground-truth cluster model the simulator uses (DESIGN.md §4), applied to
 the *real* per-step routing tallies the model just produced. On a real
-multi-chip deployment the virtual clock is replaced by measured step times;
-nothing else changes.
+multi-chip deployment the virtual clock is replaced by measured step times
+(pass them to :meth:`observe_step`); nothing else changes.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,21 +44,26 @@ from repro.configs.base import ArchConfig
 from repro.core import (ClusterVariability, ReplicatedPlacement,
                         ViBEController)
 from repro.models import (ShardingRules, decode_fn, init_cache, init_params,
-                          make_moe_tables, moe_perm_shape, prefill_fn)
+                          make_moe_tables, moe_perm_shape, prefill_chunk_fn,
+                          prefill_fn)
 from repro.models.model import block_layout
 from repro.models.moe import apply_placement
+from .config import EngineConfig
+from .kvcache import PagedKVCache
 from .metrics import RequestRecord
+from .scheduler import RequestView, SchedulerContext, get_scheduler
 from .simulator import (capacity_bucket_rows, rank_latency_matrix,
                         realized_rank_loads)
 from .workload import Request
 
-__all__ = ["Engine", "EngineStats"]
+__all__ = ["Engine", "EngineStats", "EngineConfig"]
 
 
 @dataclasses.dataclass
 class EngineStats:
     steps: int = 0
-    prefill_steps: int = 0
+    prefill_steps: int = 0           # requests whose prefill completed
+    chunk_steps: int = 0             # individual prefill-chunk model calls
     decode_steps: int = 0
     migrations: int = 0
     migrated_slots: int = 0
@@ -51,43 +72,70 @@ class EngineStats:
     virtual_time: float = 0.0
 
 
-class Engine:
-    """Continuous-batching engine for one (smoke-scale) model."""
+@dataclasses.dataclass
+class _Prefilling:
+    """An admitted request whose prompt is (partially) in the cache."""
 
-    def __init__(self, cfg: ArchConfig, *,
+    req: Request
+    lane: int
+    prompt: np.ndarray               # (1, prompt_len) generated tokens
+    prefilled: int = 0
+
+
+class Engine:
+    """Continuous-batching engine for one (smoke-scale) model.
+
+    ``Engine(cfg, EngineConfig(...), controller=..., cluster=...)`` is the
+    configured surface; the legacy keyword form
+    ``Engine(cfg, max_batch=..., max_seq=..., ...)`` still works through
+    :meth:`EngineConfig.from_kwargs` (bit-identical, ``DeprecationWarning``).
+    """
+
+    # class-level fallback: skeleton engines built without __init__
+    # (pricing-path tests use Engine.__new__) read default knobs here
+    config = EngineConfig()
+
+    def __init__(self, cfg: ArchConfig,
+                 config: Optional[EngineConfig] = None, *,
                  rules: Optional[ShardingRules] = None,
                  controller: Optional[ViBEController] = None,
                  cluster: Optional[ClusterVariability] = None,
-                 max_batch: int = 4, max_seq: int = 64,
-                 weighted_routing: bool = True,
-                 moe_impl: Optional[str] = None,
-                 seed: int = 0):
+                 **legacy):
+        if legacy:
+            if config is not None:
+                raise TypeError("pass either an EngineConfig or legacy "
+                                "keyword arguments, not both")
+            config = EngineConfig.from_kwargs(**legacy)
+        elif config is None:
+            config = EngineConfig()
+        if not isinstance(config, EngineConfig):
+            raise TypeError(f"config must be an EngineConfig, "
+                            f"got {type(config).__name__}")
+        self.config = config = config.resolve()
         self.cfg = cfg
         self.rules = rules
         self.controller = controller
         self.cluster = cluster
-        self.max_batch = max_batch
-        self.max_seq = max_seq
+        self.max_batch = config.max_batch
+        self.max_seq = config.max_seq
         # which grouped-FFN implementation the virtual clock prices:
         # "ragged" (dropless — cost is the realized dispatched load, the
         # model layer's default) or "capacity" (fixed buckets — every rank
         # pays slots_per_rank × capacity rows regardless of skew). Defaults
         # to the sharding rules' resolved impl so clock and dispatch agree.
+        moe_impl = config.moe_impl
         if moe_impl is None:
             moe_impl = (rules.moe_impl_resolved if rules is not None
                         else "ragged")
-        if moe_impl not in ("ragged", "capacity"):
-            raise ValueError(f"moe_impl must be 'ragged' or 'capacity', "
-                             f"got {moe_impl!r}")
         self.moe_impl = moe_impl
         # share-weighted replica routing: fold the controller placement's
         # per-copy traffic shares into the dispatch tables so the model
         # steers tokens the way the solver's latency objective assumes.
         # False = share-oblivious uniform split over copies (same selector,
         # flat CDF) — the A/B + regression knob.
-        self.weighted_routing = weighted_routing
+        self.weighted_routing = config.weighted_routing
         self.stats = EngineStats()
-        key = jax.random.PRNGKey(seed)
+        key = jax.random.PRNGKey(config.seed)
         self.params = init_params(cfg, key, rules)
         self.n_moe, self.n_slots = (moe_perm_shape(cfg, rules, "train")
                                     if cfg.is_moe else (0, 0))
@@ -120,14 +168,23 @@ class Engine:
                 n_slots=self.n_slots) if cfg.is_moe else None
         self._prefill = jax.jit(prefill_fn(cfg, rules))
         self._decode = jax.jit(decode_fn(cfg, rules))
+        # scheduling + memory: registered scheduler, paged KV admission
+        self.scheduler = get_scheduler(config.scheduler.name)
+        self._sched_cfg = config.scheduler
+        self._chunk = config.scheduler.prefill_chunk
+        self._prefill_chunk = (jax.jit(prefill_chunk_fn(cfg, rules))
+                               if self._chunk > 0 else None)
+        self.kv = PagedKVCache(config.kv)
+        self._prefill_streak = 0
         # slot state
-        self.cache = init_cache(cfg, max_batch, max_seq, rules)
-        self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
-        self.pos = np.zeros(max_batch, np.int64)
-        self.slot_req: List[Optional[Request]] = [None] * max_batch
-        self.slot_left = np.zeros(max_batch, np.int64)
+        self.cache = init_cache(cfg, self.max_batch, self.max_seq, rules)
+        self.tokens = jnp.zeros((self.max_batch, 1), jnp.int32)
+        self.pos = np.zeros(self.max_batch, np.int64)
+        self.slot_req: List[Optional[Request]] = [None] * self.max_batch
+        self.slot_left = np.zeros(self.max_batch, np.int64)
         self.records: Dict[int, RequestRecord] = {}
         self.waiting: collections.deque = collections.deque()
+        self._prefilling: Dict[int, _Prefilling] = {}
 
     # -- placement plumbing -------------------------------------------------
 
@@ -300,8 +357,8 @@ class Engine:
             self.stats.virtual_time += dt
             return dt
         if self.moe_impl == "capacity":
-            cf = (self.rules.capacity_factor if self.rules is not None
-                  else 1.25)
+            cf = self.config.capacity_factor if self.rules is None \
+                else self.rules.capacity_factor
             cap = capacity_bucket_rows(tokens, self.cfg.top_k,
                                        self.n_slots, cf)
             # per-rank *real* slot counts from the placement itself:
@@ -321,17 +378,63 @@ class Engine:
             self._apply_perm(self._controller_perm())
         return dt
 
+    def observe_step(self, tallies, tokens: float, latencies=None) -> float:
+        """Feed one step's telemetry; returns the step's virtual duration.
+
+        The unified observation surface (same shape as
+        ``EPSimulator.observe_step``): price the step, feed the per-rank
+        latency telemetry to the controller's drift detector, then feed
+        the routing tallies to the skew detector — either may trigger a
+        placement update, which is applied (and its migration stall
+        charged) before returning.
+
+        ``latencies`` — optional measured ``(rank_load, rank_time)`` pair
+        from a real deployment's kernel timers; None (the smoke-host
+        default) prices the step on the virtual clock instead.
+        """
+        tall = np.asarray(tallies)
+        if latencies is None:
+            dt = self._charge(tall, tokens)
+        else:
+            rank_load, rank_time = latencies
+            rank_time = np.asarray(rank_time, dtype=np.float64)
+            dt = float(rank_time.max(1).sum())
+            self.stats.virtual_time += dt
+            if self.controller is not None:
+                upd = self.controller.observe_latency(rank_load, rank_time)
+                if upd is not None:
+                    self._apply_perm(self._controller_perm())
+        self._observe(tall, float(tokens))
+        return dt
+
     # -- request lifecycle ----------------------------------------------------
 
     def submit(self, reqs: List[Request]) -> None:
         for r in reqs:
+            if r.prompt_len > self.max_seq:
+                raise ValueError(f"request {r.req_id} prompt_len "
+                                 f"{r.prompt_len} exceeds max_seq "
+                                 f"{self.max_seq}")
+            total = min(r.prompt_len + r.output_len, self.max_seq)
+            floor = int(self.kv.config.n_blocks * self.kv.config.watermark)
+            if self.kv.config.blocks_for(total) > \
+                    self.kv.config.n_blocks - floor:
+                raise ValueError(
+                    f"request {r.req_id} needs "
+                    f"{self.kv.config.blocks_for(total)} KV blocks but the "
+                    f"pool admits at most {self.kv.config.n_blocks - floor}")
             self.waiting.append(r)
             self.records[r.req_id] = RequestRecord(
                 r.req_id, r.arrival, r.prompt_len, r.output_len)
 
+    def _lane_free(self, b: int) -> bool:
+        if self.slot_req[b] is not None:
+            return False
+        return all(p.lane != b for p in self._prefilling.values())
+
     def _free_slot(self) -> Optional[int]:
         for b in range(self.max_batch):
-            if self.slot_req[b] is None:
+            if self._lane_free(b):
                 return b
         return None
 
@@ -345,46 +448,137 @@ class Engine:
             return ec.at[:, slot].set(pc[:, 0].astype(ec.dtype))
         self.cache = jax.tree.map(ins, self.cache, pre_cache)
 
+    def _release(self, lane: int) -> None:
+        r = self.slot_req[lane]
+        self.slot_req[lane] = None
+        self.kv.free_seq(r.req_id)
+
+    # -- scheduling ----------------------------------------------------------
+
+    def _build_context(self) -> SchedulerContext:
+        prefilling = [RequestView(p.req.req_id, p.req.arrival,
+                                  p.req.prompt_len, p.req.output_len,
+                                  p.prefilled, p.req.ttft_slo)
+                      for p in self._prefilling.values()]
+        waiting = []
+        for r in self.waiting:
+            total = min(r.prompt_len + r.output_len, self.max_seq)
+            if self.kv.can_admit(total):
+                waiting.append(RequestView(r.req_id, r.arrival, r.prompt_len,
+                                           r.output_len, 0, r.ttft_slo))
+        n_free = sum(1 for b in range(self.max_batch) if self._lane_free(b))
+        n_running = sum(1 for s in self.slot_req if s is not None)
+        return SchedulerContext(
+            now=self.stats.virtual_time, config=self._sched_cfg,
+            waiting=waiting, prefilling=prefilling, n_running=n_running,
+            prefill_streak=self._prefill_streak, can_start=n_free,
+            chunk_budget=self._chunk if self._chunk > 0 else self.max_seq)
+
     def step(self) -> bool:
-        """One engine step (prefill one request, or batched decode).
+        """One engine step, as directed by the configured scheduler:
+        one prefill chunk (or whole prompt), or one batched decode.
 
         Returns False when idle (no waiting or running requests).
         """
-        if self.waiting and self._free_slot() is not None:
-            r = self.waiting.popleft()
-            slot = self._free_slot()
-            # the engine can't start before the request arrives
-            self.stats.virtual_time = max(self.stats.virtual_time, r.arrival)
-            prompt = jnp.asarray(
-                np.random.default_rng(r.req_id).integers(
-                    0, self.cfg.vocab, size=(1, r.prompt_len)), jnp.int32)
-            batch = {"tokens": prompt}
-            logits, pre_cache, tallies = self._prefill(
-                self.params, batch, self.moe_tables)
-            self._insert_cache(slot, pre_cache)
-            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-            self.tokens = self.tokens.at[slot, 0].set(nxt[0])
-            self.pos[slot] = r.prompt_len
-            self.slot_req[slot] = r
-            self.slot_left[slot] = r.output_len - 1
-            tall = np.asarray(tallies)
-            if self.cfg.is_moe and tall.size:
-                self.stats.dropped_assignments += float(tall[:, -1].sum())
-            dt = self._charge(tall, r.prompt_len)
-            self._observe(tall, float(r.prompt_len))
-            rec = self.records[r.req_id]
-            rec.first_token_at = self.stats.virtual_time
-            if r.output_len <= 1:
-                rec.finished_at = self.stats.virtual_time
-                self.slot_req[slot] = None
-            self.stats.prefill_steps += 1
+        action = self.scheduler.schedule(self._build_context())
+        if action.kind == "prefill":
+            # the engine runs one chunk per step so the virtual clock
+            # prices every chunk individually (the simulator's scheduled
+            # loop batches a whole token budget instead)
+            self._exec_prefill(action.chunks[0].req_id)
+            self._prefill_streak += 1
             self.stats.steps += 1
             return True
+        if action.kind == "decode":
+            self._exec_decode()
+            self._prefill_streak = 0
+            self.stats.steps += 1
+            return True
+        return False
 
+    def _exec_prefill(self, req_id: int) -> None:
+        st = self._prefilling.get(req_id)
+        if st is None:
+            # admission: reserve a lane + the full worst-case KV block
+            # count (so decode extension can never fail mid-request)
+            r = next(x for x in self.waiting if x.req_id == req_id)
+            self.waiting = collections.deque(
+                x for x in self.waiting if x.req_id != req_id)
+            lane = self._free_slot()
+            self.kv.allocate(r.req_id,
+                             min(r.prompt_len + r.output_len, self.max_seq))
+            # the engine can't start before the request arrives
+            self.stats.virtual_time = max(self.stats.virtual_time, r.arrival)
+            prompt = np.random.default_rng(r.req_id).integers(
+                0, self.cfg.vocab, size=(1, r.prompt_len))
+            st = _Prefilling(r, lane, prompt)
+            self._prefilling[req_id] = st
+        if self._chunk > 0:
+            self._prefill_one_chunk(st)
+        else:
+            self._prefill_whole(st)
+
+    def _prefill_whole(self, st: _Prefilling) -> None:
+        """Legacy whole-prompt prefill (``prefill_chunk = 0``)."""
+        r = st.req
+        batch = {"tokens": jnp.asarray(st.prompt, jnp.int32)}
+        logits, pre_cache, tallies = self._prefill(
+            self.params, batch, self.moe_tables)
+        self._insert_cache(st.lane, pre_cache)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        self.tokens = self.tokens.at[st.lane, 0].set(nxt[0])
+        st.prefilled = r.prompt_len
+        self.kv.advance(r.req_id, min(r.prompt_len, self.max_seq))
+        tall = np.asarray(tallies)
+        if self.cfg.is_moe and tall.size:
+            self.stats.dropped_assignments += float(tall[:, -1].sum())
+        self.observe_step(tall, float(r.prompt_len))
+        self._finish_prefill(st)
+        self.stats.prefill_steps += 1
+
+    def _prefill_one_chunk(self, st: _Prefilling) -> None:
+        """One fixed-width chunk of ``st``'s prompt into its lane."""
+        r = st.req
+        C = self._chunk
+        off = st.prefilled
+        n_valid = min(C, r.prompt_len - off)
+        buf = np.zeros((1, C), np.int64)
+        buf[0, :n_valid] = st.prompt[0, off:off + n_valid]
+        logits, self.cache, tallies = self._prefill_chunk(
+            self.params, jnp.asarray(buf, jnp.int32), self.cache,
+            st.lane, off, n_valid, self.moe_tables)
+        st.prefilled += n_valid
+        self.kv.advance(r.req_id, n_valid)
+        # interleaved decode steps write a garbage row at pos[lane] for
+        # reserved lanes; parking pos at the next chunk offset makes the
+        # next chunk's first (always-valid) row overwrite it
+        self.pos[st.lane] = st.prefilled
+        tall = np.asarray(tallies)
+        if self.cfg.is_moe and tall.size:
+            self.stats.dropped_assignments += float(tall[:, -1].sum())
+        self.observe_step(tall, float(n_valid))
+        self.stats.chunk_steps += 1
+        if st.prefilled >= r.prompt_len:
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            self.tokens = self.tokens.at[st.lane, 0].set(nxt[0])
+            self._finish_prefill(st)
+            self.stats.prefill_steps += 1
+
+    def _finish_prefill(self, st: _Prefilling) -> None:
+        r = st.req
+        del self._prefilling[r.req_id]
+        self.pos[st.lane] = r.prompt_len
+        self.slot_req[st.lane] = r
+        self.slot_left[st.lane] = r.output_len - 1
+        rec = self.records[r.req_id]
+        rec.first_token_at = self.stats.virtual_time
+        if r.output_len <= 1:
+            rec.finished_at = self.stats.virtual_time
+            self._release(st.lane)
+
+    def _exec_decode(self) -> None:
         active = [b for b in range(self.max_batch)
                   if self.slot_req[b] is not None]
-        if not active:
-            return False
         pos = jnp.asarray(np.minimum(self.pos, self.max_seq - 1), jnp.int32)
         logits, self.cache, tallies = self._decode(
             self.params, self.tokens, self.cache, pos, self.moe_tables)
@@ -393,18 +587,19 @@ class Engine:
         tall = np.asarray(tallies)
         if self.cfg.is_moe and tall.size:
             self.stats.dropped_assignments += float(tall[:, -1].sum())
-        self._charge(tall, len(active))
-        self._observe(tall, float(len(active)))
+        self.observe_step(tall, float(len(active)))
         for b in active:
+            if self.pos[b] < self.max_seq:
+                # the new token occupied a fresh cache row (beyond
+                # max_seq the write is clamped onto the last row)
+                self.kv.extend(self.slot_req[b].req_id)
             self.pos[b] += 1
             self.slot_left[b] -= 1
             if self.slot_left[b] <= 0 or self.pos[b] >= self.max_seq - 1:
                 rec = self.records[self.slot_req[b].req_id]
                 rec.finished_at = self.stats.virtual_time
-                self.slot_req[b] = None
+                self._release(b)
         self.stats.decode_steps += 1
-        self.stats.steps += 1
-        return True
 
     def run(self, max_steps: int = 10_000) -> List[RequestRecord]:
         for _ in range(max_steps):

@@ -30,7 +30,10 @@ from repro.configs.base import ArchConfig
 from repro.core import (ClusterVariability, PerfModel, Placement,
                         ViBEController)
 from repro.core.placement import copy_enumeration, pad_phantom_column
+from .config import SimConfig
+from .kvcache import PagedKVCache
 from .metrics import RequestRecord
+from .scheduler import Action, RequestView, SchedulerContext, get_scheduler
 from .workload import (Request, WorkloadSpec, routing_profile, step_loads,
                        topic_loadings)
 
@@ -171,30 +174,14 @@ class LayerStats:
 # simulator
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
-class SimConfig:
-    ep_degree: int = 8
-    max_batch: int = 64              # decode batch cap
-    max_prefill_tokens: int = 8192   # prefill chunk budget per step
-    ici_bw: Optional[float] = None   # aggregate bytes/s; None = cluster preset
-    act_bytes: float = 1.0           # a2a payload bytes/elem (FP8, Table 2a)
-    attn_flops_scale: float = 0.35   # MLA-compression adjustment (DESIGN §4)
-    poisson_loads: bool = True       # Poisson approx to multinomial (fast)
-    realized_loads: bool = False     # score token-granular dispatched loads
-    # (realized_rank_loads) instead of the solver's fractional copy shares —
-    # makes the simulator's per-rank traffic match model-layer dispatch
-    moe_impl: str = "ragged"         # "ragged" | "capacity": what the MoE
-    # kernel *computes* per rank. "ragged" (default, matches the model
-    # layer's dropless default and the historical simulator behaviour)
-    # prices the realized routed tokens. "capacity" prices the fixed-bucket
-    # kernel honestly: every rank runs slots_per_rank × capacity rows
-    # (zero-padding included) regardless of skew, and per-slot overflow is
-    # tallied into ``dropped_assignments`` instead of adding compute.
-    capacity_factor: float = 1.25    # bucket sizing for moe_impl="capacity"
-    record_layer_stats: bool = False
-    migration_overhead: float = 2e-3 # fixed coordination cost per rearrange
-    step_overhead: float = 8e-3      # engine scheduling/launch cost per step
-    seed: int = 0
+# SimConfig moved to serving/config.py (frozen, part of the unified
+# ServingConfig hierarchy); re-exported here for back-compat. The
+# ``moe_impl`` semantics are unchanged: "ragged" (default, matches the
+# model layer's dropless default and the historical simulator behaviour)
+# prices the realized routed tokens; "capacity" prices the fixed-bucket
+# kernel honestly — every rank runs slots_per_rank × capacity rows
+# (zero-padding included) regardless of skew, and per-slot overflow is
+# tallied into ``dropped_assignments`` instead of adding compute.
 
 
 class EPSimulator:
@@ -349,16 +336,31 @@ class EPSimulator:
         t += self.model.n_layers * self._attn_time(tokens, ctx)
         t += self.cfg.step_overhead
 
-        if self.controller is not None:
-            # performance-drift feed first (§4.2.4 f_g refresh): the jittered
-            # per-rank (load, latency) rows ARE the serving telemetry a real
-            # deployment would measure. Then the routing feed. Each can fire
-            # its own recalibration; both charge a migration stall.
-            t += self._account_update(
-                self.controller.observe_latency(rank_load, rank_time), tokens)
-            t += self._account_update(
-                self.controller.observe(loads, tokens=float(tokens)), tokens)
+        t += self.observe_step(loads, tokens, latencies=(rank_load, rank_time))
         return t
+
+    def observe_step(self, tallies, tokens: float, latencies=None) -> float:
+        """Feed one step's telemetry; returns migration-stall seconds.
+
+        The unified observation surface (same shape as
+        ``Engine.observe_step``). Performance-drift feed first (§4.2.4
+        f_g refresh): the jittered per-rank ``latencies`` —
+        ``(rank_load, rank_time)`` — ARE the serving telemetry a real
+        deployment would measure. Then the routing feed (``tallies``,
+        per-expert loads). Each can fire its own recalibration; both
+        charge a migration stall (returned, so external callers can add
+        it to their clock the way ``step_time`` does internally).
+        """
+        if self.controller is None:
+            return 0.0
+        stall = 0.0
+        if latencies is not None:
+            rank_load, rank_time = latencies
+            stall += self._account_update(
+                self.controller.observe_latency(rank_load, rank_time), tokens)
+        stall += self._account_update(
+            self.controller.observe(tallies, tokens=float(tokens)), tokens)
+        return stall
 
     def _account_update(self, upd, tokens: int) -> float:
         """Migration stall (coordination + weight transfer) for one
@@ -383,7 +385,15 @@ class EPSimulator:
         * decode:  warm prefix cache — prompt cost skipped (paper §5.1).
         * drift_profile/drift_at: swap the routing profile at a given time
           (the SG→SN / SN→SG transitions of §5.4).
+
+        With ``cfg.scheduler`` set the loop is scheduler-driven
+        (:meth:`_run_scheduled`): chunked prefill, SLO-aware ordering and
+        optional paged-KV admission. ``cfg.scheduler=None`` keeps this
+        legacy prefill-priority whole-prompt loop byte-for-byte.
         """
+        if self.cfg.scheduler is not None:
+            return self._run_scheduled(requests, phase, drift_profile,
+                                       drift_at)
         recs = {r.req_id: RequestRecord(r.req_id, r.arrival, r.prompt_len,
                                         r.output_len) for r in requests}
         arrivals = collections.deque(sorted(requests, key=lambda r: r.arrival))
@@ -442,6 +452,142 @@ class EPSimulator:
                     done.append(b)
             for b in done:
                 running.remove(b)
+        return list(recs.values())
+
+    # -- event loop (scheduler-driven: chunked prefill, SLO ordering) -------
+
+    def _run_scheduled(self, requests: Sequence[Request], phase: str,
+                       drift_profile: Optional[np.ndarray],
+                       drift_at: Optional[float]) -> List[RequestRecord]:
+        """Scheduler-driven serving loop (``cfg.scheduler`` set).
+
+        Per step a registered scheduler picks a prefill batch (all its
+        chunks run in one synchronized step under the
+        ``max_prefill_tokens`` budget, each priced at its own context
+        depth) or a decode step. ``cfg.kv`` adds paged-KV admission:
+        requests wait until the block pool can commit their full
+        reservation. ``cfg.kv=None`` keeps admission unbounded (legacy).
+        """
+        sched_cfg = self.cfg.scheduler
+        scheduler = get_scheduler(sched_cfg.name)
+        kv = PagedKVCache(self.cfg.kv) if self.cfg.kv is not None else None
+        recs = {r.req_id: RequestRecord(r.req_id, r.arrival, r.prompt_len,
+                                        r.output_len) for r in requests}
+        by_id = {r.req_id: r for r in requests}
+        arrivals = collections.deque(sorted(requests,
+                                            key=lambda r: r.arrival))
+        waiting: collections.deque = collections.deque()
+        prefilling: Dict[int, int] = {}   # req_id -> prompt tokens done
+        running: List[List] = []          # [req, tokens_left, ctx]
+        t = 0.0
+        streak = 0
+        switched = False
+
+        while arrivals or waiting or prefilling or running:
+            self.now = t
+            if drift_at is not None and not switched and t >= drift_at:
+                self.profile = drift_profile
+                switched = True
+            while arrivals and arrivals[0].arrival <= t:
+                waiting.append(arrivals.popleft())
+            if not waiting and not prefilling and not running:
+                t = arrivals[0].arrival
+                continue
+
+            wviews = []
+            for r in waiting:
+                if kv is not None and not kv.can_admit(r.prompt_len
+                                                       + r.output_len):
+                    continue
+                wviews.append(RequestView(r.req_id, r.arrival, r.prompt_len,
+                                          r.output_len, 0, r.ttft_slo))
+            pviews = [RequestView(by_id[i].req_id, by_id[i].arrival,
+                                  by_id[i].prompt_len, by_id[i].output_len,
+                                  done, by_id[i].ttft_slo)
+                      for i, done in prefilling.items()]
+            action = scheduler.schedule(SchedulerContext(
+                now=t, config=sched_cfg, waiting=wviews, prefilling=pviews,
+                n_running=len(running), prefill_streak=streak,
+                can_start=len(wviews),
+                chunk_budget=self.cfg.max_prefill_tokens))
+
+            if action.kind == "prefill":
+                # admission pass: earlier admissions in the same batch
+                # shrink the pool, so re-check each new request against
+                # the live allocator state (the view was a snapshot)
+                chunks = []
+                for c in action.chunks:
+                    r = by_id[c.req_id]
+                    if c.req_id not in prefilling:
+                        if kv is not None and not kv.can_admit(
+                                r.prompt_len + r.output_len):
+                            continue
+                        waiting.remove(r)
+                        if kv is not None:
+                            kv.allocate(r.req_id,
+                                        r.prompt_len + r.output_len)
+                        prefilling[c.req_id] = 0
+                    chunks.append(c)
+                if chunks:
+                    # one synchronized step runs the whole chunk batch;
+                    # each chunk priced at its own attention depth
+                    toks = sum(c.n_tokens for c in chunks)
+                    depths = [prefilling[c.req_id] + c.n_tokens / 2
+                              for c in chunks]
+                    ctx = float(np.mean(depths))
+                    dt = (self.step_time(toks, ctx) if phase != "decode"
+                          else self.cluster.t_base)
+                    t += dt
+                    for c in chunks:
+                        r = by_id[c.req_id]
+                        if kv is not None:
+                            kv.advance(r.req_id, c.n_tokens)
+                        prefilling[c.req_id] += c.n_tokens
+                        if prefilling[c.req_id] >= r.prompt_len:
+                            del prefilling[c.req_id]
+                            recs[r.req_id].first_token_at = t
+                            if r.output_len <= 1 or phase == "prefill":
+                                recs[r.req_id].finished_at = t
+                                if kv is not None:
+                                    kv.free_seq(r.req_id)
+                            else:
+                                running.append([r, r.output_len - 1,
+                                                r.prompt_len])
+                    streak += 1
+                    continue
+                # every candidate lost admission since the snapshot —
+                # behave as if the scheduler had answered decode/idle
+                action = Action("decode") if running else Action("idle")
+
+            if action.kind == "decode":
+                batch = running[:self.cfg.max_batch]
+                toks = len(batch)
+                ctx = float(np.mean([b[2] for b in batch]))
+                dt = self.step_time(toks, ctx)
+                t += dt
+                done = []
+                for b in batch:
+                    b[1] -= 1
+                    b[2] += 1
+                    if kv is not None:
+                        kv.extend(b[0].req_id)
+                    if b[1] <= 0:
+                        recs[b[0].req_id].finished_at = t
+                        done.append(b)
+                        if kv is not None:
+                            kv.free_seq(b[0].req_id)
+                for b in done:
+                    running.remove(b)
+                streak = 0
+                continue
+
+            # idle: nothing runnable now — jump to the next arrival, or
+            # give up if KV admission can never be satisfied (requests
+            # too large for the pool with nothing in flight to free)
+            if arrivals:
+                t = arrivals[0].arrival
+                continue
+            break
         return list(recs.values())
 
     # -- summary helpers ----------------------------------------------------

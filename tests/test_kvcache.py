@@ -1,0 +1,142 @@
+"""Property tests for the paged KV cache's memory-accounting invariants.
+
+The allocator decides what may run; corruption here surfaces as
+cross-request KV reuse, so the invariants are pinned hard: a block is
+never double-assigned, never leaked across request lifecycles, and the
+watermark floor is never breached by admission.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serving import BlockAllocator, KVCacheConfig, PagedKVCache
+
+
+class TestBlockAllocator:
+    def test_alloc_free_roundtrip(self):
+        a = BlockAllocator(8)
+        blocks = a.alloc(5)
+        assert len(blocks) == len(set(blocks)) == 5
+        assert a.n_free == 3
+        a.free(blocks)
+        assert a.n_free == 8
+
+    def test_exhaustion_raises(self):
+        a = BlockAllocator(4)
+        a.alloc(4)
+        with pytest.raises(MemoryError):
+            a.alloc(1)
+
+    def test_double_free_raises(self):
+        a = BlockAllocator(4)
+        blocks = a.alloc(2)
+        a.free(blocks)
+        with pytest.raises(ValueError):
+            a.free(blocks)
+
+    def test_foreign_block_raises(self):
+        a = BlockAllocator(4)
+        a.alloc(1)
+        with pytest.raises(ValueError):
+            a.free([3])              # never handed out
+
+    @settings(max_examples=30, deadline=None)
+    @given(n_blocks=st.integers(1, 64), seed=st.integers(0, 2 ** 16))
+    def test_never_double_assigned(self, n_blocks, seed):
+        """Random alloc/free interleavings: live block sets stay disjoint
+        and alloc+free partitions the pool exactly."""
+        rng = np.random.default_rng(seed)
+        a = BlockAllocator(n_blocks)
+        live = {}                    # handle -> blocks
+        for _ in range(50):
+            if live and rng.random() < 0.4:
+                h = list(live)[int(rng.integers(len(live)))]
+                a.free(live.pop(h))
+            else:
+                want = int(rng.integers(0, n_blocks + 1))
+                try:
+                    blocks = a.alloc(want)
+                except MemoryError:
+                    assert want > a.n_free
+                    continue
+                live[len(live) + int(rng.integers(1 << 20))] = blocks
+            held = [b for bs in live.values() for b in bs]
+            assert len(held) == len(set(held)), "block double-assigned"
+            assert a.n_free + len(held) == n_blocks, "block leaked"
+        for h in list(live):
+            a.free(live.pop(h))
+        assert a.n_free == n_blocks
+
+
+class TestPagedKVCache:
+    def _kv(self, n_blocks=16, block_size=4, watermark=0.0):
+        return PagedKVCache(KVCacheConfig(block_size=block_size,
+                                          n_blocks=n_blocks,
+                                          watermark=watermark))
+
+    def test_committing_admission_extend_never_fails(self):
+        kv = self._kv(n_blocks=4, block_size=4)
+        assert kv.can_admit(10)      # 3 blocks
+        kv.allocate(0, 10)
+        kv.advance(0, 6)             # prompt
+        for _ in range(4):           # 4 decode tokens inside reservation
+            kv.extend(0)
+        with pytest.raises(ValueError):
+            kv.advance(0, 3)         # 13 > 12 rows: overran reservation
+        kv.free_seq(0)
+        assert kv.used_blocks == 0
+
+    def test_watermark_holds_back_headroom(self):
+        kv = self._kv(n_blocks=10, block_size=4, watermark=0.2)
+        assert kv.can_admit(32)      # 8 blocks vs 10 - 2 reserve
+        assert not kv.can_admit(36)  # 9 blocks breaches the floor
+        kv.allocate(0, 32)
+        assert not kv.can_admit(1)   # reserve floor holds at the margin
+
+    def test_double_allocate_raises(self):
+        kv = self._kv()
+        kv.allocate(7, 4)
+        with pytest.raises(ValueError):
+            kv.allocate(7, 4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(n_blocks=st.integers(2, 48), block_size=st.integers(1, 8),
+           watermark=st.floats(0.0, 0.5), seed=st.integers(0, 2 ** 16))
+    def test_no_leak_across_lifecycles(self, n_blocks, block_size,
+                                       watermark, seed):
+        """Admit/advance/extend/free request lifecycles at random: used
+        blocks always equals the sum of live reservations, the watermark
+        floor is never breached by admission, and draining every sequence
+        returns the pool to empty."""
+        rng = np.random.default_rng(seed)
+        cfg = KVCacheConfig(block_size=block_size, n_blocks=n_blocks,
+                            watermark=watermark)
+        kv = PagedKVCache(cfg)
+        floor = int(n_blocks * watermark)
+        live = {}                    # seq_id -> total_tokens
+        next_id = 0
+        for _ in range(60):
+            if live and rng.random() < 0.45:
+                sid = list(live)[int(rng.integers(len(live)))]
+                del live[sid]
+                kv.free_seq(sid)
+            else:
+                total = int(rng.integers(1, 4 * block_size + 1))
+                if kv.can_admit(total):
+                    kv.allocate(next_id, total)
+                    kv.advance(next_id, int(rng.integers(0, total + 1)))
+                    live[next_id] = total
+                    next_id += 1
+                else:
+                    assert (kv.allocator.n_free - floor
+                            < cfg.blocks_for(total))
+            expect = sum(cfg.blocks_for(t) for t in live.values())
+            assert kv.used_blocks == expect, "leak or phantom allocation"
+            assert kv.n_seqs == len(live)
+        for sid in list(live):
+            kv.free_seq(sid)
+        assert kv.used_blocks == 0
+        assert kv.utilization() == 0.0
+        assert kv.peak_blocks <= n_blocks

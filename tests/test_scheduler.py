@@ -1,0 +1,176 @@
+"""Scheduler registry + built-in policy semantics (serving/scheduler.py).
+
+The engine and the simulator's scheduled loop both trust three contracts
+pinned here: registry lookups are closed over registered names, chunk
+packing respects the token budget and admission limits, and ``slo_edf``
+never starves decode past its configured bound.
+"""
+
+import dataclasses
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serving import (Action, Chunk, RequestView, SchedulerConfig,
+                           SchedulerContext, UnknownSchedulerError,
+                           get_scheduler, register_scheduler,
+                           registered_schedulers)
+from repro.serving.scheduler import _REGISTRY
+
+
+def _ctx(waiting=(), prefilling=(), n_running=0, prefill_streak=0,
+         can_start=4, chunk_budget=64, prefill_chunk=0,
+         decode_starvation_bound=4, ttft_slo=0.35):
+    return SchedulerContext(
+        now=0.0,
+        config=SchedulerConfig(prefill_chunk=prefill_chunk,
+                               decode_starvation_bound=decode_starvation_bound,
+                               ttft_slo=ttft_slo),
+        waiting=list(waiting), prefilling=list(prefilling),
+        n_running=n_running, prefill_streak=prefill_streak,
+        can_start=can_start, chunk_budget=chunk_budget)
+
+
+def _req(req_id, arrival=0.0, prompt=8, output=4, prefilled=0, slo=None):
+    return RequestView(req_id=req_id, arrival=arrival, prompt_len=prompt,
+                       output_len=output, prefilled=prefilled, ttft_slo=slo)
+
+
+class TestRegistry:
+    def test_builtins_registered(self):
+        assert {"fcfs", "slo_edf", "decode_priority"} <= \
+            set(registered_schedulers())
+
+    def test_unknown_name_lists_registry(self):
+        with pytest.raises(UnknownSchedulerError, match="fcfs"):
+            get_scheduler("nope")
+
+    def test_duplicate_and_replace(self):
+        class Dummy:
+            name = "fcfs"
+
+            def schedule(self, ctx):
+                return Action("idle")
+
+        with pytest.raises(ValueError, match="already registered"):
+            register_scheduler(Dummy)
+        orig = get_scheduler("fcfs")
+        try:
+            register_scheduler(Dummy, replace=True)
+            assert isinstance(get_scheduler("fcfs"), Dummy)
+        finally:
+            _REGISTRY["fcfs"] = orig
+
+    def test_protocol_enforced(self):
+        class NoSchedule:
+            name = "broken"
+
+        with pytest.raises(TypeError):
+            register_scheduler(NoSchedule)
+
+
+class TestChunkPacking:
+    def test_whole_prompt_mode_one_chunk_each(self):
+        ctx = _ctx(waiting=[_req(0, prompt=8), _req(1, prompt=8)],
+                   chunk_budget=64)
+        chunks = ctx.build_chunks(ctx.waiting)
+        assert [(c.req_id, c.n_tokens) for c in chunks] == [(0, 8), (1, 8)]
+
+    def test_first_chunk_always_taken_over_budget(self):
+        # a prompt larger than the budget still gets its chunk — otherwise
+        # a big request at the head of the queue would deadlock the loop
+        ctx = _ctx(waiting=[_req(0, prompt=100)], chunk_budget=16)
+        assert ctx.build_chunks(ctx.waiting) == (Chunk(0, 100),)
+
+    def test_budget_stops_later_chunks(self):
+        ctx = _ctx(waiting=[_req(0, prompt=10), _req(1, prompt=10)],
+                   chunk_budget=12)
+        chunks = ctx.build_chunks(ctx.waiting)
+        assert [c.req_id for c in chunks] == [0]
+
+    def test_can_start_gates_new_but_not_midprefill(self):
+        mid = _req(0, prompt=12, prefilled=4)
+        new = _req(1, prompt=8)
+        ctx = _ctx(waiting=[new], prefilling=[mid], can_start=0,
+                   prefill_chunk=4)
+        chunks = ctx.build_chunks([mid, new])
+        assert [c.req_id for c in chunks] == [0]
+        assert chunks[0].n_tokens == 4           # chunked: min(4, remaining)
+
+    def test_chunked_sizes_clamped_to_remaining(self):
+        mid = _req(0, prompt=10, prefilled=8)
+        ctx = _ctx(prefilling=[mid], prefill_chunk=4)
+        assert ctx.build_chunks([mid])[0].n_tokens == 2
+
+
+class TestBuiltins:
+    def test_fcfs_prefers_prefill_in_arrival_order(self):
+        s = get_scheduler("fcfs")
+        a = s.schedule(_ctx(waiting=[_req(1, arrival=0.1),
+                                     _req(0, arrival=0.0)], n_running=2))
+        assert a.kind == "prefill"
+        assert a.chunks[0].req_id == 1           # list order, not sorted
+
+    def test_fcfs_decode_when_no_prefill(self):
+        s = get_scheduler("fcfs")
+        assert s.schedule(_ctx(n_running=2)).kind == "decode"
+        assert s.schedule(_ctx()).kind == "idle"
+
+    def test_edf_orders_by_deadline_with_tenant_slo(self):
+        s = get_scheduler("slo_edf")
+        # req 5 arrives later but its tight tenant SLO makes it urgent
+        a = s.schedule(_ctx(waiting=[_req(3, arrival=0.0, slo=0.5),
+                                     _req(5, arrival=0.1, slo=0.05)]))
+        assert a.kind == "prefill"
+        assert a.chunks[0].req_id == 5
+
+    def test_edf_forces_decode_at_starvation_bound(self):
+        s = get_scheduler("slo_edf")
+        ctx = _ctx(waiting=[_req(0)], n_running=1, prefill_streak=4,
+                   decode_starvation_bound=4)
+        assert s.schedule(ctx).kind == "decode"
+        # but not when nothing is decoding — forcing decode would idle
+        ctx2 = _ctx(waiting=[_req(0)], n_running=0, prefill_streak=9)
+        assert s.schedule(ctx2).kind == "prefill"
+
+    def test_decode_priority_extreme(self):
+        s = get_scheduler("decode_priority")
+        assert s.schedule(_ctx(waiting=[_req(0)], n_running=1)).kind \
+            == "decode"
+        assert s.schedule(_ctx(waiting=[_req(0)])).kind == "prefill"
+
+    @settings(max_examples=40, deadline=None)
+    @given(streak=st.integers(0, 12), bound=st.integers(1, 8),
+           n_running=st.integers(0, 8), n_waiting=st.integers(0, 6))
+    def test_edf_starvation_bound_property(self, streak, bound, n_running,
+                                           n_waiting):
+        """slo_edf never returns prefill once the streak reaches the bound
+        while sequences are decoding — TPOT starvation is bounded."""
+        s = get_scheduler("slo_edf")
+        ctx = _ctx(waiting=[_req(i, arrival=i * 0.01)
+                            for i in range(n_waiting)],
+                   n_running=n_running, prefill_streak=streak,
+                   decode_starvation_bound=bound)
+        a = s.schedule(ctx)
+        if n_running > 0 and streak >= bound:
+            assert a.kind == "decode"
+        assert isinstance(a, Action)
+
+
+class TestViewInvariants:
+    def test_views_frozen(self):
+        v = _req(0)
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            v.prefilled = 3
+
+    def test_deadline_falls_back_to_config_slo(self):
+        assert _req(0, arrival=1.0).deadline(0.35) == pytest.approx(1.35)
+        assert _req(0, arrival=1.0, slo=0.1).deadline(0.35) \
+            == pytest.approx(1.1)
+
+    def test_action_validation(self):
+        with pytest.raises(ValueError):
+            Action("prefill")                    # needs chunks
+        with pytest.raises(ValueError):
+            Action("nonsense")

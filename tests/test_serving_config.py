@@ -1,0 +1,109 @@
+"""The unified ServingConfig hierarchy (serving/config.py).
+
+Pins the API-redesign contract: configs are frozen value objects, the
+legacy ``Engine(**kwargs)`` surface maps onto ``EngineConfig.from_kwargs``
+with a DeprecationWarning, and — the load-bearing guarantee — a default
+``EngineConfig`` reproduces the legacy engine loop bit-for-bit.
+"""
+
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import (DriftConfig, ViBEConfig, ViBEController,
+                        make_cluster)
+from repro.models import moe_perm_shape
+from repro.serving import (Engine, EngineConfig, KVCacheConfig,
+                           SchedulerConfig, SimConfig, WORKLOADS,
+                           sample_requests)
+
+
+class TestConfigObjects:
+    def test_frozen(self):
+        for cfg in (KVCacheConfig(), SchedulerConfig(), EngineConfig(),
+                    SimConfig()):
+            with pytest.raises(dataclasses.FrozenInstanceError):
+                cfg.seed_or_block = 1
+
+    def test_blocks_for(self):
+        kv = KVCacheConfig(block_size=16, n_blocks=8)
+        assert kv.blocks_for(1) == 1
+        assert kv.blocks_for(16) == 1
+        assert kv.blocks_for(17) == 2
+        assert kv.blocks_for(0) == 1     # every sequence owns >= 1 block
+
+    def test_chunk_must_divide_max_seq(self):
+        EngineConfig(max_seq=48, scheduler=SchedulerConfig(prefill_chunk=12))
+        with pytest.raises(ValueError, match="divide"):
+            EngineConfig(max_seq=48,
+                         scheduler=SchedulerConfig(prefill_chunk=7))
+
+    def test_resolve_fills_defaults(self):
+        cfg = EngineConfig(max_batch=3, max_seq=48).resolve()
+        assert cfg.scheduler == SchedulerConfig()
+        # default pool exactly covers the dense lanes: the paged cache
+        # never rejects what the legacy lane-count admission accepted
+        assert cfg.kv.n_blocks == 3 * -(-48 // cfg.kv.block_size)
+        # resolve is idempotent and keeps explicit sub-configs
+        explicit = EngineConfig(kv=KVCacheConfig(n_blocks=7)).resolve()
+        assert explicit.kv.n_blocks == 7
+
+    def test_from_kwargs_deprecation_and_unknown(self):
+        with pytest.warns(DeprecationWarning, match="EngineConfig"):
+            cfg = EngineConfig.from_kwargs(max_batch=2, max_seq=32)
+        assert cfg.max_batch == 2 and cfg.max_seq == 32
+        with pytest.raises(TypeError, match="bogus"):
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                EngineConfig.from_kwargs(bogus=1)
+
+
+class TestLegacyShim:
+    def _parts(self, seed=0):
+        cfg = get_smoke("qwen3-moe-235b-a22b")
+        n_moe, n_slots = moe_perm_shape(cfg, None, "train")
+        cluster = make_cluster(4, "mi325x", d_model=cfg.d_model,
+                               d_ff=cfg.moe_d_ff,
+                               experts_per_rank=n_slots // 4, seed=seed)
+        ctl = ViBEController(
+            n_moe, n_slots, 4, cluster.fit_models(),
+            ViBEConfig(policy="vibe", adaptive=True,
+                       drift=DriftConfig(window=8, interval=4, cooldown=4),
+                       expert_bytes=3 * cfg.d_model * cfg.moe_d_ff * 2))
+        return cfg, ctl, cluster
+
+    def test_legacy_kwargs_bit_identical_to_config(self):
+        """Engine(**legacy) and Engine(cfg, EngineConfig(...)) drive the
+        same virtual clock, the same recalibrations, the same records."""
+        reqs = sample_requests(WORKLOADS["sharegpt"], 3, qps=100.0, seed=0)
+        reqs = [dataclasses.replace(r, prompt_len=8, output_len=5)
+                for r in reqs]
+        cfg, ctl, cluster = self._parts()
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            e1 = Engine(cfg, controller=ctl, cluster=cluster,
+                        max_batch=2, max_seq=48, seed=0)
+        e1.submit(list(reqs))
+        r1 = e1.run(max_steps=200)
+
+        cfg2, ctl2, cluster2 = self._parts()
+        e2 = Engine(cfg2, EngineConfig(max_batch=2, max_seq=48, seed=0),
+                    controller=ctl2, cluster=cluster2)
+        e2.submit(list(reqs))
+        r2 = e2.run(max_steps=200)
+
+        assert e1.stats == e2.stats
+        for a, b in zip(r1, r2):
+            assert a.req_id == b.req_id
+            np.testing.assert_array_equal(
+                [a.first_token_at, a.finished_at],
+                [b.first_token_at, b.finished_at])
+
+    def test_config_plus_legacy_kwargs_rejected(self):
+        cfg, ctl, cluster = self._parts()
+        with pytest.raises(TypeError, match="both"):
+            Engine(cfg, EngineConfig(), controller=ctl, cluster=cluster,
+                   max_batch=2)

@@ -1,0 +1,99 @@
+"""Trace-driven workload generation: arrival processes + tenant mixes.
+
+The arrival statistics are load-bearing for the fig8 sweep and the P90
+TTFT acceptance test: bursty must actually be overdispersed relative to
+Poisson, diurnal must actually swing, and tenants must carry their
+length distributions and TTFT SLOs through to the sampled requests.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serving import (ArrivalSpec, TRACES, TenantSpec, TraceSpec,
+                           WORKLOADS, sample_arrivals, sample_trace)
+
+
+def _dispersion(arrivals, window=1.0):
+    """Index of dispersion of per-window counts (Poisson → ~1)."""
+    edges = np.arange(0.0, arrivals[-1], window)
+    counts, _ = np.histogram(arrivals, bins=edges)
+    return counts.var() / counts.mean()
+
+
+class TestArrivalProcesses:
+    def test_poisson_rate_and_dispersion(self):
+        rng = np.random.default_rng(0)
+        a = sample_arrivals(ArrivalSpec("poisson"), 4000, 10.0, rng)
+        assert len(a) / a[-1] == pytest.approx(10.0, rel=0.1)
+        assert _dispersion(a) == pytest.approx(1.0, abs=0.25)
+
+    def test_bursty_overdispersed_same_mean_rate(self):
+        rng = np.random.default_rng(0)
+        spec = ArrivalSpec("bursty", burst_factor=4.0, burst_fraction=0.2,
+                           sojourn=2.0)
+        a = sample_arrivals(spec, 4000, 10.0, rng)
+        # long-run mean rate preserved...
+        assert len(a) / a[-1] == pytest.approx(10.0, rel=0.15)
+        # ...but counts are overdispersed (the MMPP burst structure)
+        assert _dispersion(a) > 2.0
+
+    def test_diurnal_rate_swings(self):
+        rng = np.random.default_rng(0)
+        spec = ArrivalSpec("diurnal", amplitude=0.8, period=60.0)
+        a = sample_arrivals(spec, 6000, 10.0, rng)
+        # per-second rate near the sinusoid's crest vs trough
+        phase = (a % 60.0)
+        crest = np.sum((phase > 10) & (phase < 20))   # sin ≈ +1 at t=15
+        trough = np.sum((phase > 40) & (phase < 50))  # sin ≈ -1 at t=45
+        assert crest > 3 * trough
+
+    def test_arrivals_sorted_and_positive(self):
+        rng = np.random.default_rng(1)
+        for proc in ("poisson", "bursty", "diurnal"):
+            a = sample_arrivals(ArrivalSpec(proc), 500, 25.0, rng)
+            assert (np.diff(a) >= 0).all()
+            assert a[0] > 0
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError, match="process"):
+            ArrivalSpec("fractal")
+        with pytest.raises(ValueError, match="negative"):
+            ArrivalSpec("bursty", burst_factor=10.0, burst_fraction=0.2)
+
+
+class TestTraces:
+    def test_registry_contents(self):
+        assert {"flat", "bursty", "diurnal"} <= set(TRACES)
+
+    def test_bursty_tenant_mix_and_slos(self):
+        reqs = sample_trace(TRACES["bursty"], 2000, qps=20.0, seed=0)
+        assert len(reqs) == 2000
+        tenants = {r.tenant for r in reqs}
+        assert tenants == {"chat", "longctx"}
+        frac_chat = np.mean([r.tenant == "chat" for r in reqs])
+        assert frac_chat == pytest.approx(0.85, abs=0.03)
+        for r in reqs:
+            assert r.ttft_slo == (0.25 if r.tenant == "chat" else 0.60)
+        # tenant length distributions follow their workload families
+        chat_in = np.mean([r.prompt_len for r in reqs
+                           if r.tenant == "chat"])
+        long_in = np.mean([r.prompt_len for r in reqs
+                           if r.tenant == "longctx"])
+        assert long_in > 5 * chat_in
+
+    def test_deterministic_given_seed(self):
+        a = sample_trace(TRACES["bursty"], 64, qps=20.0, seed=3)
+        b = sample_trace(TRACES["bursty"], 64, qps=20.0, seed=3)
+        assert a == b
+        c = sample_trace(TRACES["bursty"], 64, qps=20.0, seed=4)
+        assert a != c
+
+    def test_trace_spec_validation(self):
+        with pytest.raises(ValueError, match="tenant"):
+            TraceSpec("empty", ArrivalSpec("poisson"), ())
+        with pytest.raises(ValueError, match="unknown workload"):
+            TraceSpec("bad", ArrivalSpec("poisson"),
+                      (TenantSpec("t", "nope", 1.0),))
+
+    def test_primary_workload_drives_routing(self):
+        assert TRACES["bursty"].primary is WORKLOADS["sharegpt"]
