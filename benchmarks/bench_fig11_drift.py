@@ -25,10 +25,10 @@ profiling per arm would hand each arm a different hardware snapshot.
 
 from repro.configs import get
 from repro.core import (DriftConfig, PerfDriftConfig, SCENARIOS, SolveContext,
-                        ViBEConfig, ViBEController, get_policy, make_cluster,
-                        make_scenario)
-from repro.serving import (EPSimulator, PAPER_SLOS, SimConfig, WORKLOADS,
-                           goodput, sample_requests)
+                        StealConfig, ViBEConfig, ViBEController, get_policy,
+                        make_cluster, make_scenario)
+from repro.serving import (EPSimulator, PAPER_SLOS, SimConfig, TRACES,
+                           WORKLOADS, goodput, sample_requests, sample_trace)
 from .common import emit, paper_cluster, profile_W
 
 EXPERT_BYTES = lambda m: 3 * m.d_model * m.moe_d_ff * 2
@@ -191,5 +191,65 @@ def run_hardware(model="deepseek-v3-671b", quick=True, workload="sonnet",
     return rows
 
 
+# ---------------------------------------------------------------------------
+# dispatch-time work stealing: bursty arrivals on a stale profile
+# ---------------------------------------------------------------------------
+
+def run_steal(model="deepseek-v3-671b", quick=True, qps=10.0,
+              headroom=0.0, slot_budget=64):
+    """Token rescheduling between recalibrations (ISSUE 7 acceptance run).
+
+    The regime placement alone cannot fix: every arm's plan is solved from
+    a STALE profile (sonnet) while the served traffic is bursty multi-tenant
+    chat (sharegpt-dominated), and no arm recalibrates. Three arms share
+    one hardware snapshot and one request trace:
+
+    * ``vibe_r/static`` — pure-placement ViBE-R, shares frozen at the plan;
+    * ``vibe_r/steal``  — same plan + TokenRescheduler reweighting copy
+      shares from realized tallies each step;
+    * ``harmoeny/static`` — load-only replication baseline.
+
+    Stealing must come out strictly ahead of both: it reacts to the
+    realized (shifted, bursty) load while the static arms keep splitting
+    traffic for a profile that no longer describes it.
+    """
+    m = get(model)
+    slo = PAPER_SLOS[("sharegpt", model)]
+    n_req = 200 if quick else 500
+    W0 = profile_W(model, "sonnet")            # deliberately stale
+    cluster = paper_cluster(model, "mi325x")
+    perf = cluster.fit_models()
+    reqs = sample_trace(TRACES["bursty"], n_req, qps=qps, seed=4)
+    arms = (("vibe_r/static", "vibe_r", None),
+            ("vibe_r/steal", "vibe_r",
+             StealConfig(headroom=headroom, smoothing=1.0, max_shift=0.5)),
+            ("harmoeny/static", "harmoeny", None))
+    rows = []
+    for label, policy, steal in arms:
+        # every arm gets the same slot budget: without replicas there is
+        # nothing to steal, and a budget asymmetry would confound the A/B
+        ctl = ViBEController(
+            m._n_moe_layers(), m.n_experts, 8, perf,
+            ViBEConfig(policy=policy, adaptive=False, steal=steal,
+                       slot_budget=slot_budget),
+            initial_w=W0)
+        sim = EPSimulator(m, cluster, WORKLOADS["sharegpt"],
+                          SimConfig(ep_degree=8, seed=3,
+                                    max_prefill_tokens=16_384),
+                          controller=ctl)
+        recs = sim.run(reqs, phase="prefill")
+        row = {"bench": "fig11_steal", "label": f"steal/{label}",
+               "goodput": goodput(recs, slo)}
+        if steal is not None:
+            rs = ctl.rescheduler
+            row.update(steals=rs.steals, steal_updates=sim.steal_updates,
+                       share_moved=rs.share_moved)
+        assert not ctl.updates                 # every arm truly static
+        rows.append(row)
+    emit(rows, "fig11_steal")
+    return rows
+
+
 if __name__ == "__main__":
     run(quick=False)
+    run_steal(quick=False)

@@ -10,7 +10,7 @@ rows are the CI goodput-regression gate's input (run.py --check).
 
 from repro.serving import PAPER_SLOS, TRACES, goodput, sample_requests, \
     sample_trace, slo_frontier, summarize, WORKLOADS
-from repro.core import registered_policies
+from repro.core import StealConfig, registered_policies
 
 from .common import MODELS, emit, make_sim, qps_grid
 
@@ -44,10 +44,18 @@ def run(quick=True, phase="prefill"):
             agrid = (grid if arrival == "poisson" else
                      tuple(round(q * TRACE_GRID_SCALE, 1) for q in grid))
             frontiers = {}
-            for policy in registered_policies():
+            # trace arrivals get a dispatch-time work-stealing arm on top of
+            # the pure-placement sweep: bursts between recalibrations are
+            # exactly the regime the rescheduler targets
+            policies = registered_policies() + (
+                ("vibe_r+steal",) if arrival != "poisson" else ())
+            for policy in policies:
+                base_policy, _, variant = policy.partition("+")
+                steal = StealConfig() if variant == "steal" else None
                 g2q = {}
                 for qps in agrid:
-                    sim = make_sim(model, workload, policy, seed=1)
+                    sim = make_sim(model, workload, base_policy, seed=1,
+                                   steal=steal)
                     recs = sim.run(_requests(arrival, workload, n_req, qps),
                                    phase=phase)
                     g2q[qps] = goodput(recs, slo)

@@ -16,7 +16,8 @@ import numpy as np
 
 from repro.configs import get
 from repro.core import (ClusterVariability, DriftConfig, SolveContext,
-                        ViBEConfig, ViBEController, get_policy, make_cluster)
+                        StealConfig, ViBEConfig, ViBEController, get_policy,
+                        make_cluster)
 from repro.serving import (EPSimulator, PAPER_SLOS, SimConfig, WORKLOADS,
                            goodput, routing_profile, sample_requests,
                            slo_frontier, summarize)
@@ -58,16 +59,20 @@ def placement_for(policy: str, model_name: str, workload: str,
 def make_sim(model_name: str, workload: str, policy: str,
              regime: str = "mi325x", ep: int = 8, seed: int = 1,
              adaptive: bool = False, record_layers: bool = False,
-             cluster: Optional[ClusterVariability] = None) -> EPSimulator:
+             cluster: Optional[ClusterVariability] = None,
+             steal: Optional[StealConfig] = None) -> EPSimulator:
     m = get(model_name)
     cluster = cluster or paper_cluster(model_name, regime, ep)
     sim_cfg = SimConfig(ep_degree=ep, seed=seed, max_prefill_tokens=16_384,
                         record_layer_stats=record_layers)
-    if adaptive:
+    if adaptive or steal is not None:
+        # a controller-backed sim: adaptive recalibration, dispatch-time
+        # stealing, or both (stealing works for static controllers too —
+        # its whole point is reacting between/without recalibrations)
         perf = cluster.fit_models()
         ctl = ViBEController(
             m._n_moe_layers(), m.n_experts, ep, perf,
-            ViBEConfig(policy=policy, adaptive=True,
+            ViBEConfig(policy=policy, adaptive=adaptive, steal=steal,
                        drift=DriftConfig(window=50, interval=10,
                                          cooldown=20),
                        expert_bytes=3 * m.d_model * m.moe_d_ff * 2),

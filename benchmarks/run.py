@@ -4,7 +4,8 @@
     PYTHONPATH=src python -m benchmarks.run --check
 
 ``--check`` is the CI regression gate: it reruns the quick ``kernels``,
-``placement`` and ``fig8`` harnesses and compares their gated metrics
+``placement``, ``fig8`` and ``fig11_steal`` harnesses and compares their
+gated metrics
 against the checked-in JSON baselines under ``results/bench/`` (restored
 afterwards — the gate never mutates its own reference). Each spec
 declares a direction: ``time`` metrics fail on a >25% slowdown
@@ -42,6 +43,7 @@ HARNESSES = {
     "fig8": bench_fig8_slo.run,
     "fig10": bench_fig10_gap.run,
     "fig11": bench_fig11_drift.run,
+    "fig11_steal": bench_fig11_drift.run_steal,
     "fig13": bench_fig13_sensitivity.run,
     "fig15": bench_fig15_scaling.run,
     "placement": bench_placement_solve.run,
@@ -60,6 +62,7 @@ CHECK_SPECS = {
     "placement": ("placement_solve", ("solve_ms_vibe", "solve_ms_vibe_r"),
                   "time"),
     "fig8": ("fig8_slo", ("frontier_qps",), "quality"),
+    "fig11_steal": ("fig11_steal", ("goodput",), "quality"),
 }
 #: fail --check when fresh wall-clock exceeds baseline by more than this;
 #: override with BENCH_CHECK_TOL (e.g. a noisy shared CI runner may need
@@ -166,7 +169,8 @@ def main() -> int:
                     help="paper-scale sweeps (slower)")
     ap.add_argument("--only", default="")
     ap.add_argument("--check", action="store_true",
-                    help="rerun quick kernels+placement+fig8 benches and "
+                    help="rerun quick kernels+placement+fig8+fig11_steal "
+                         "benches and "
                          f"fail on >{REGRESSION_TOL}x wall-clock or "
                          f">{QUALITY_TOL}x goodput-frontier loss vs the "
                          "checked-in results/bench baselines")

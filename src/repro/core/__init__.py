@@ -20,6 +20,7 @@ from .placement import (Placement, ReplicatedPlacement,
 from .policy import (PlacementPolicy, PolicyCapabilities, SolveContext,
                      UnknownPolicyError, get_policy, register_policy,
                      registered_policies)
+from .steal import StealConfig, TokenRescheduler
 from .variability import (REGIMES, SCENARIOS, ClusterVariability,
                           VariabilityEvent, VariabilityRegime, make_cluster,
                           make_scenario)
@@ -44,6 +45,7 @@ __all__ = [
     "PlacementPolicy", "PolicyCapabilities", "SolveContext",
     "UnknownPolicyError", "get_policy", "register_policy",
     "registered_policies",
+    "StealConfig", "TokenRescheduler",
     "REGIMES", "SCENARIOS", "ClusterVariability", "VariabilityEvent",
     "VariabilityRegime", "make_cluster", "make_scenario",
 ]

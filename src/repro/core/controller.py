@@ -49,6 +49,7 @@ from .incremental import IncrementalResult
 from .perf_model import PerfModel
 from .placement import ReplicatedPlacement
 from .policy import PlacementPolicy, SolveContext, get_policy
+from .steal import StealConfig, TokenRescheduler
 
 __all__ = ["ViBEConfig", "PlacementUpdate", "ViBEController"]
 
@@ -82,6 +83,14 @@ class ViBEConfig:
     # recalibration, re-proportion each expert's copy shares to the speeds
     # of the ranks its copies landed on (placement.reweight_shares_by_speed)
     # so the weighted dispatch keeps steering traffic toward fast copies.
+    steal: Optional[StealConfig] = None
+    # dispatch-time token rescheduling (core/steal.py): between
+    # recalibrations, shift bounded traffic shares away from the rank whose
+    # predicted latency exceeds the fleet mean by the configured headroom,
+    # toward sibling replica copies on faster ranks. Operates even with
+    # adaptive=False (it is orthogonal to recalibration — exactly the
+    # stale-profile regime it exists for). Requires a replication-capable
+    # policy: without copies there is nowhere to shift share.
 
     # -- validated against the registered policy's capabilities -----------
     def __post_init__(self):
@@ -116,6 +125,13 @@ class ViBEConfig:
                 f"reweight_shares=True, but policy {self.policy!r} lacks "
                 "supports_replication+supports_incremental — the flag "
                 "would never take effect")
+        if self.steal is not None and not caps.supports_replication:
+            # stealing reweights *copy* shares; a singleton placement has
+            # one copy per expert, so every steal would cancel — inert
+            raise ValueError(
+                f"steal set, but policy {self.policy!r} has "
+                "capabilities.supports_replication=False — a singleton "
+                "placement has no replica copies to shift share between")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,6 +181,12 @@ class ViBEController:
         w0 = (np.atleast_2d(initial_w) if initial_w is not None
               else np.full((n_layers, n_experts), 1.0 / n_experts))
         self.placement: ReplicatedPlacement = self._solve(w0)
+        # dispatch-time work stealing: shares self.perf_models BY REFERENCE
+        # (like perf_detector) so online refits retune the steal trigger
+        self.rescheduler = (TokenRescheduler(config.steal, self.perf_models)
+                            if config.steal is not None else None)
+        if self.rescheduler is not None:
+            self.rescheduler.reset(self.placement)
         self._step = 0
         self.updates: List[PlacementUpdate] = []
 
@@ -188,6 +210,15 @@ class ViBEController:
     def step(self) -> int:
         return self._step
 
+    @property
+    def dispatch_placement(self) -> ReplicatedPlacement:
+        """What dispatch should route against *right now*: the responsive
+        (steal-adjusted) placement when stealing is on, else the plan.
+        Same slot table either way — only traffic shares differ."""
+        if self.rescheduler is not None:
+            return self.rescheduler.placement
+        return self.placement
+
     def observe(self, step_counts: np.ndarray,
                 tokens: Optional[float] = None) -> Optional[PlacementUpdate]:
         """Feed one forward pass; returns an update when recalibration fires.
@@ -198,6 +229,11 @@ class ViBEController:
         self._step += 1
         step_counts = np.asarray(step_counts, dtype=np.float64)
         self.profiler.update(step_counts)
+        if self.rescheduler is not None:
+            # BEFORE the adaptive gate: stealing is dispatch-time and
+            # orthogonal to recalibration — it must run for static
+            # controllers too (the stale-profile regime it exists for)
+            self.rescheduler.observe(step_counts)
         if tokens is None:
             tokens = float(step_counts[0].sum())
         if not self.cfg.adaptive \
@@ -271,6 +307,10 @@ class ViBEController:
                 migration_bytes=moved * self.cfg.expert_bytes,
                 full_resolve=True, refit_ranks=refit_ranks)
         self.placement = upd.placement
+        if self.rescheduler is not None:
+            # recalibration restarts the responsive shares from the fresh
+            # plan — post-migration tallies reflect the new layout
+            self.rescheduler.reset(upd.placement)
         # cool down BOTH monitors: the rearrangement perturbs routing and
         # latency telemetry alike (transient migration burst, Appendix A.1)
         self.detector.snapshot()

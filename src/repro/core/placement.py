@@ -610,6 +610,7 @@ def _replicated_solve(
     targets: np.ndarray,           # (L, G) per-rank token targets τ_{l,g}
     n_ranks: int,
     budget: np.ndarray,            # (G,) per-rank physical slot budget
+    perf_models: Optional[Sequence[PerfModel]] = None,
 ) -> ReplicatedPlacement:
     """Shared replication machinery behind ViBE-R and HarMoEny-style solves.
 
@@ -626,6 +627,17 @@ def _replicated_solve(
        proportionally to the *speed* of the rank each copy landed on, so
        the share lands where f_g is fastest (uniform speeds → uniform
        shares).
+
+    With ``perf_models`` given, a **reweighted refill** closes the loop
+    between phases 2 and 3: the greedy fill assumed uniform per-copy loads,
+    but the speed-proportional shares mean copies on fast ranks carry more
+    — so the fill re-runs with per-copy loads under those shares, and each
+    layer keeps whichever of the two placements has the lower predicted
+    straggler latency max_g f_g(n_g). Never worse than the single-pass
+    solve by construction (the incremental path's
+    ``reweight_shares_by_speed`` folded into the full solve). Uniform
+    speeds make the reweighted loads identical to the uniform ones, so
+    hardware-oblivious solves (HarMoEny) pass None and skip the refill.
 
     The physical layout is rank-major with ``max(budget)`` slots per rank;
     ranks below the maximum pad their tail slots with phantoms (id E,
@@ -646,37 +658,61 @@ def _replicated_solve(
     cum = np.cumsum(copies, axis=1)                              # (L, E)
     ce = (np.arange(S)[None, :, None] >= cum[:, None, :]).sum(2) \
         .astype(np.int32)                                        # (L, S)
-    cl = np.take_along_axis(w, ce, axis=1) \
-        / np.take_along_axis(copies, ce, axis=1)
+    we = np.take_along_axis(w, ce, axis=1)                       # (L, S)
+    cl = we / np.take_along_axis(copies, ce, axis=1)
 
     # Phase 2: vectorized greedy fill over copies (descending per-copy load)
-    order = np.argsort(-cl, axis=1, kind="stable")
-    load = np.zeros((L, G))
-    slots_free = np.tile(budget, (L, 1))
-    on_rank = np.zeros((L, G, E), dtype=bool)
-    copy_rank = np.empty((L, S), dtype=np.int32)
-    for i in range(S):
-        item = order[:, i]                                       # (L,)
-        e_item = ce[rows, item]                                  # (L,)
-        gap = targets - load
-        invalid = (slots_free == 0) | on_rank[rows, :, e_item]
-        # rows where the dedup constraint is unsatisfiable fall back to the
-        # slot constraint alone (can only happen when copies ≥ free ranks)
-        stuck = invalid.all(axis=1)
-        if stuck.any():
-            invalid[stuck] = (slots_free[stuck] == 0)
-        gap[invalid] = -np.inf
-        g = np.argmax(gap, axis=1)                               # (L,)
-        copy_rank[rows, item] = g
-        load[rows, g] += cl[rows, item]
-        slots_free[rows, g] -= 1
-        on_rank[rows, g, e_item] = True
+    def _fill(cl: np.ndarray) -> np.ndarray:
+        order = np.argsort(-cl, axis=1, kind="stable")
+        load = np.zeros((L, G))
+        slots_free = np.tile(budget, (L, 1))
+        on_rank = np.zeros((L, G, E), dtype=bool)
+        copy_rank = np.empty((L, S), dtype=np.int32)
+        for i in range(S):
+            item = order[:, i]                                   # (L,)
+            e_item = ce[rows, item]                              # (L,)
+            gap = targets - load
+            invalid = (slots_free == 0) | on_rank[rows, :, e_item]
+            # rows where the dedup constraint is unsatisfiable fall back to
+            # the slot constraint alone (only when copies ≥ free ranks)
+            stuck = invalid.all(axis=1)
+            if stuck.any():
+                invalid[stuck] = (slots_free[stuck] == 0)
+            gap[invalid] = -np.inf
+            g = np.argmax(gap, axis=1)                           # (L,)
+            copy_rank[rows, item] = g
+            load[rows, g] += cl[rows, item]
+            slots_free[rows, g] -= 1
+            on_rank[rows, g, e_item] = True
+        return copy_rank
 
     # Phase 3: speed-proportional copy shares
-    sp = speeds[rows[:, None], copy_rank]                        # (L, S)
-    denom = np.zeros((L, E))
-    np.add.at(denom, (rows[:, None], ce), sp)
-    share = sp / np.take_along_axis(denom, ce, axis=1)
+    def _shares(copy_rank: np.ndarray) -> np.ndarray:
+        sp = speeds[rows[:, None], copy_rank]                    # (L, S)
+        denom = np.zeros((L, E))
+        np.add.at(denom, (rows[:, None], ce), sp)
+        return sp / np.take_along_axis(denom, ce, axis=1)
+
+    copy_rank = _fill(cl)
+    share = _shares(copy_rank)
+
+    if perf_models is not None:
+        # reweighted refill: redo the greedy under the loads the shares
+        # actually send, keep per layer only when the predicted straggler
+        # latency strictly improves
+        def _objective(cr: np.ndarray, sh: np.ndarray) -> np.ndarray:
+            rank_load = np.zeros((L, G))
+            np.add.at(rank_load, (rows[:, None], cr), we * sh)
+            lat = np.empty_like(rank_load)
+            for g, m in enumerate(perf_models):
+                lat[:, g] = m(rank_load[:, g])
+            return lat.max(axis=1)
+        cr2 = _fill(we * share)
+        sh2 = _shares(cr2)
+        better = _objective(cr2, sh2) < _objective(copy_rank, share)
+        if better.any():
+            copy_rank = np.where(better[:, None], cr2, copy_rank)
+            share = np.where(better[:, None], sh2, share)
 
     # Lay out rank-major slots, copies ordered by expert id within a rank
     key = copy_rank.astype(np.int64) * (E + 1) + ce
@@ -713,17 +749,20 @@ def vibe_r_placement(
     """ViBE-R: co-optimize replication degree with per-device speed.
 
     :func:`_replicated_solve` under ViBE's speed-proportional token targets
-    (τ_g ∝ s_g = 1/f_g(n_ref)). ``slots_per_rank`` may be a scalar (the
-    paper's uniform memory footprint) or a (G,) array of per-rank budgets
-    driven by device memory headroom — ranks below the maximum pad with
-    phantom slots.
+    (τ_g ∝ s_g = 1/f_g(n_ref)), including its reweighted refill (the fill
+    re-run under the speed-proportional shares' realized loads, kept per
+    layer only when the predicted straggler latency improves).
+    ``slots_per_rank`` may be a scalar (the paper's uniform memory
+    footprint) or a (G,) array of per-rank budgets driven by device memory
+    headroom — ranks below the maximum pad with phantom slots.
     """
     w = np.atleast_2d(np.asarray(w, dtype=np.float64))
     L, E = w.shape
     G = len(perf_models)
     budget = normalize_slot_budget(slots_per_rank, E, G)
     speeds, targets = _speed_targets(w, perf_models, n_ref_mode)
-    return _replicated_solve(w, speeds, targets, G, budget)
+    return _replicated_solve(w, speeds, targets, G, budget,
+                             perf_models=perf_models)
 
 
 def harmoeny_placement(

@@ -24,9 +24,10 @@ from typing import Optional, Union
 import numpy as np
 
 from repro.configs import get_smoke
-from repro.core import (DriftConfig, PerfDriftConfig, SCENARIOS, ViBEConfig,
-                        ViBEController, default_slots_per_rank, get_policy,
-                        make_cluster, make_scenario, registered_policies)
+from repro.core import (DriftConfig, PerfDriftConfig, SCENARIOS, StealConfig,
+                        ViBEConfig, ViBEController, default_slots_per_rank,
+                        get_policy, make_cluster, make_scenario,
+                        registered_policies)
 from repro.models import moe_perm_shape
 from repro.serving import (Engine, EngineConfig, KVCacheConfig,
                            SchedulerConfig, TRACES, WORKLOADS,
@@ -90,7 +91,8 @@ def serve(arch: str, *, policy: str = "vibe", n_requests: int = 12,
           block_size: int = 16, slots_per_rank: Union[str, int, None] = "auto",
           variability_scenario: str = "none",
           scenario_start: float = 0.0, scenario_duration: float = 2.0,
-          perf_drift_delta: float = 0.0, seed: int = 0):
+          perf_drift_delta: float = 0.0, steal: bool = False,
+          steal_headroom: float = 0.1, seed: int = 0):
     cfg = get_smoke(arch)
     if not cfg.is_moe:
         raise SystemExit(f"{arch} has no MoE layers — ViBE serving n/a")
@@ -124,7 +126,9 @@ def serve(arch: str, *, policy: str = "vibe", n_requests: int = 12,
                                                cooldown=10, min_samples=8)
                                if perf_drift_delta > 0 else None),
                    expert_bytes=expert_bytes,
-                   slot_budget=budget))
+                   slot_budget=budget,
+                   steal=(StealConfig(headroom=steal_headroom)
+                          if steal else None)))
     # weighted_routing threads the vibe_r solver's per-copy traffic shares
     # into the dispatch tables (share-weighted replica routing); disabling
     # it keeps the legacy uniform split for A/B comparison.
@@ -207,6 +211,16 @@ def main() -> int:
     ap.add_argument("--scenario-duration", type=float, default=2.0,
                     help="ramp/transient length (s) for scenarios that "
                          "have one")
+    ap.add_argument("--steal", action="store_true",
+                    help="dispatch-time token rescheduling (work stealing): "
+                         "between recalibrations, shift bounded traffic "
+                         "shares off the predicted-slowest rank's replica "
+                         "copies toward copies on faster ranks (replication-"
+                         "capable policies only, e.g. --policy vibe_r)")
+    ap.add_argument("--steal-headroom", type=float, default=0.1,
+                    help="steal only when the hottest rank's predicted "
+                         "latency exceeds the fleet mean by this relative "
+                         "margin (default 0.1)")
     ap.add_argument("--perf-drift-delta", type=float, default=0.0,
                     help="enable online performance-drift recalibration: "
                          "refit f_g and re-solve when any rank's windowed "
@@ -230,6 +244,8 @@ def main() -> int:
                             scenario_start=args.scenario_start,
                             scenario_duration=args.scenario_duration,
                             perf_drift_delta=args.perf_drift_delta,
+                            steal=args.steal,
+                            steal_headroom=args.steal_headroom,
                             seed=args.seed)
     s = summarize(records)
     st = engine.stats
@@ -256,6 +272,11 @@ def main() -> int:
     print(f"[serve] recalibrations: {st.migrations}{by_kind}, migrated slots "
           f"{st.migrated_slots}, bytes {st.migration_bytes}, dropped "
           f"assignments {st.dropped_assignments:.0f}")
+    if args.steal:
+        rs = engine.controller.rescheduler
+        print(f"[serve] stealing: {st.steal_updates} share updates "
+              f"({rs.steals} steal steps, {rs.share_moved:.3f} total share "
+              f"moved, headroom {args.steal_headroom:g})")
     if args.variability_scenario != "none":
         print(f"[serve] hardware drift: scenario {args.variability_scenario} "
               f"from t={args.scenario_start:.2f}s, perf-drift delta "

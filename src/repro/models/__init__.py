@@ -3,11 +3,12 @@
 from .sharding import ShardingRules, build_copy_cdf, build_slots_of
 from .model import (block_layout, decode_fn, init_cache, init_params,
                     loss_fn, make_moe_tables, moe_perm_shape,
-                    prefill_chunk_fn, prefill_fn, count_params)
+                    prefill_chunk_fn, prefill_fn, count_params,
+                    refresh_moe_share_tables)
 
 __all__ = [
     "ShardingRules", "build_copy_cdf", "build_slots_of",
     "block_layout", "decode_fn", "init_cache", "init_params", "loss_fn",
     "make_moe_tables", "moe_perm_shape", "prefill_chunk_fn", "prefill_fn",
-    "count_params",
+    "count_params", "refresh_moe_share_tables",
 ]

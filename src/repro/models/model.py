@@ -237,6 +237,30 @@ def make_moe_tables(cfg: ArchConfig, rules: Optional[ShardingRules],
             jnp.asarray(copy_cdf.reshape(nb, m, cfg.n_experts, r)))
 
 
+def refresh_moe_share_tables(cfg: ArchConfig, moe_tables,
+                             perm: np.ndarray, share: np.ndarray):
+    """Rebuild only the ``copy_cdf`` entry of ``moe_tables`` for new shares.
+
+    The fast path for dispatch-time share updates (work stealing,
+    :mod:`repro.core.steal`): the slot table is unchanged, so ``slots_of``
+    and ``n_copies`` — the expensive per-slot enumeration in
+    :func:`~repro.models.sharding.build_slots_of` — are reused as-is, and
+    only the cumulative-share table is recomputed. The returned tuple has
+    identical shapes/dtypes to the input (copy-axis width taken from the
+    existing ``slots_of``), so swapping it into a jitted step function
+    never recompiles.
+    """
+    if moe_tables is None:
+        return None
+    slots_of, n_copies, old_cdf = moe_tables
+    nb, m, E, r = old_cdf.shape
+    perm = np.atleast_2d(perm)
+    copy_cdf = build_copy_cdf(perm, cfg.n_experts, perm.shape[1],
+                              share=share, r_max=r)
+    return (slots_of, n_copies,
+            jnp.asarray(copy_cdf.reshape(nb, m, E, r)))
+
+
 # ---------------------------------------------------------------------------
 # block body
 # ---------------------------------------------------------------------------

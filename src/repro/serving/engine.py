@@ -45,7 +45,7 @@ from repro.core import (ClusterVariability, ReplicatedPlacement,
                         ViBEController)
 from repro.models import (ShardingRules, decode_fn, init_cache, init_params,
                           make_moe_tables, moe_perm_shape, prefill_chunk_fn,
-                          prefill_fn)
+                          prefill_fn, refresh_moe_share_tables)
 from repro.models.model import block_layout
 from repro.models.moe import apply_placement
 from .config import EngineConfig
@@ -68,6 +68,7 @@ class EngineStats:
     migrations: int = 0
     migrated_slots: int = 0
     migration_bytes: int = 0
+    steal_updates: int = 0           # share-only table refreshes (stealing)
     dropped_assignments: float = 0.0  # capacity-overflow drops (all layers)
     virtual_time: float = 0.0
 
@@ -160,6 +161,16 @@ class Engine:
             # keep table shapes — and the compiled step functions — stable.
             self._r_max = min(controller.G,
                               self.n_slots - controller.E + 1)
+        if controller is not None \
+                and getattr(controller, "rescheduler", None) is not None \
+                and not self.weighted_routing:
+            # stolen shares can only steer dispatch through the weighted
+            # CDF tables; with a uniform split they'd be silently inert
+            raise ValueError("controller has work stealing enabled "
+                             "(ViBEConfig.steal) but weighted_routing is "
+                             "False — stolen shares would never reach "
+                             "dispatch")
+        self._steal_version = 0
         if controller is not None:
             self._apply_perm(self._controller_perm(), charge=False)
         else:
@@ -232,7 +243,11 @@ class Engine:
         """
         if self.controller is None or not self.weighted_routing:
             return None
-        return getattr(self.controller.placement, "share", None)
+        # dispatch_placement = responsive (steal-adjusted) shares when the
+        # controller runs a TokenRescheduler, the plan's shares otherwise
+        pl = getattr(self.controller, "dispatch_placement",
+                     self.controller.placement)
+        return getattr(pl, "share", None)
 
     _AUTO_SHARE = object()      # sentinel: derive from the controller
 
@@ -268,6 +283,7 @@ class Engine:
                                           n_slots=self.n_slots,
                                           share=self._share,
                                           r_max=self._r_max)
+        self._sync_steal_version()
         if charge:
             per_slot = 3 * self.cfg.d_model * self.cfg.moe_d_ff * 2
             moved_bytes = moved_total * per_slot
@@ -288,6 +304,35 @@ class Engine:
         upd = self.controller.observe(t, tokens=tokens)
         if upd is not None:
             self._apply_perm(self._controller_perm())
+        elif self._steal_dirty():
+            self._apply_share()
+
+    def _steal_dirty(self) -> bool:
+        rs = getattr(self.controller, "rescheduler", None)
+        return rs is not None and rs.version != self._steal_version
+
+    def _sync_steal_version(self) -> None:
+        rs = getattr(self.controller, "rescheduler", None)
+        self._steal_version = rs.version if rs is not None else 0
+
+    def _apply_share(self) -> None:
+        """Share-only dispatch-table refresh after a steal update.
+
+        The slot table (and thus the weights) is untouched — only the
+        cumulative-share CDF the inverse-CDF replica selector reads is
+        rebuilt (:func:`refresh_moe_share_tables` reuses the existing
+        ``slots_of``/``n_copies``). Shapes are pinned, so no recompile;
+        the clock charges only the small share-table broadcast.
+        """
+        rs = self.controller.rescheduler
+        self._share = np.array(rs.placement.share)
+        self.moe_tables = refresh_moe_share_tables(
+            self.cfg, self.moe_tables, self._perm, self._share)
+        self._sync_steal_version()
+        self.stats.steal_updates += 1
+        if self.cluster is not None:
+            self.stats.virtual_time += \
+                rs.share_table_bytes / self.cluster.ici_bw
 
     def _controller_tallies(self, tallies: np.ndarray) -> np.ndarray:
         """Pad router tallies (logical experts) to the controller's width.
@@ -314,8 +359,14 @@ class Engine:
         copies — pricing the solver's shares then would hide exactly the
         gap the A/B knob exists to measure, so the clock uses a uniform-
         share view of the same slot table (cached per placement object).
+
+        With stealing on, ``dispatch_placement`` is the responsive
+        (steal-adjusted) placement — the clock prices what the dispatch
+        tables actually did this step, since tables refresh *after* each
+        step's observation.
         """
-        pl = self.controller.placement
+        pl = getattr(self.controller, "dispatch_placement",
+                     self.controller.placement)
         if self.weighted_routing:
             return pl
         if getattr(self, "_uniform_clock_src", None) is not pl:

@@ -224,13 +224,23 @@ class EPSimulator:
         self.migration_stalls: List[Tuple[float, float, int]] = []
         self.expert_bytes = (3 * model.d_model * model.moe_d_ff * 2
                              if model.moe_d_ff else 0)
+        # dispatch-time work stealing (controller.rescheduler): track the
+        # responsive-share version so each share-only update is charged
+        # its table broadcast exactly once
+        self.steal_updates = 0
+        rs = getattr(controller, "rescheduler", None)
+        self._steal_version = rs.version if rs is not None else 0
 
     # -- placement ---------------------------------------------------------
 
     @property
     def placement(self) -> Placement:
+        """What this step's dispatch routes (and is priced) against: the
+        controller's responsive placement when work stealing is on (same
+        slot table, steal-adjusted shares), its plan otherwise."""
         if self.controller is not None:
-            return self.controller.placement
+            return getattr(self.controller, "dispatch_placement",
+                           self.controller.placement)
         if self._static_placement is None:
             raise ValueError("need controller or static placement")
         return self._static_placement
@@ -354,12 +364,25 @@ class EPSimulator:
         if self.controller is None:
             return 0.0
         stall = 0.0
+        recalibrated = False
         if latencies is not None:
             rank_load, rank_time = latencies
-            stall += self._account_update(
-                self.controller.observe_latency(rank_load, rank_time), tokens)
-        stall += self._account_update(
-            self.controller.observe(tallies, tokens=float(tokens)), tokens)
+            upd = self.controller.observe_latency(rank_load, rank_time)
+            recalibrated |= upd is not None
+            stall += self._account_update(upd, tokens)
+        upd = self.controller.observe(tallies, tokens=float(tokens))
+        recalibrated |= upd is not None
+        stall += self._account_update(upd, tokens)
+        rs = getattr(self.controller, "rescheduler", None)
+        if rs is not None and rs.version != self._steal_version:
+            if not recalibrated:
+                # share-only steal update: the fleet syncs just the new
+                # CDF table — no weights move (a recalibration's migration
+                # stall already covers its own table rebuild)
+                bw = self.cfg.ici_bw or self.cluster.ici_bw
+                stall += rs.share_table_bytes / bw
+                self.steal_updates += 1
+            self._steal_version = rs.version
         return stall
 
     def _account_update(self, upd, tokens: int) -> float:

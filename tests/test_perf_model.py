@@ -82,3 +82,54 @@ def test_property_fit_never_negative_and_callable(seed, n_knots):
     m = fit_perf_model(DeviceProfile(0, tc, lat), n_knots=n_knots)
     probe = m(rng.uniform(0, 2e5, size=16))
     assert np.all(probe > 0)
+
+
+def test_fit_local_regression_exact_on_affine_sweeps():
+    """The per-knot estimator answers "latency AT the knot": on exactly
+    affine data every knot value must reproduce the truth line regardless
+    of how samples sit inside their bins. The pre-fix bin *mean* answered
+    "average latency NEAR the knot" and lands at the bin centroid instead —
+    off by slope × (centroid − knot) whenever sampling is asymmetric."""
+    base, slope = 2e-3, 5e-7
+    # asymmetric clusters: samples pile up on one side of each knot
+    tc = np.array([100., 110., 120., 400.,
+                   1000., 1040., 1080., 1800.,
+                   5000., 5100., 5200., 8000.], dtype=float)
+    lat = base + slope * tc                        # noiseless affine truth
+    m = fit_perf_model(DeviceProfile(0, tc, lat), n_knots=4)
+    inner = m.knots[m.knots > 0]                   # skip the 0-anchor
+    np.testing.assert_allclose(m(inner), base + slope * inner, rtol=1e-9)
+    # tripwire: the bin-mean estimator is measurably biased on this fixture
+    knots = np.unique(np.quantile(tc, np.linspace(0, 1, 4)))
+    idx = np.abs(tc[:, None] - knots[None, :]).argmin(axis=1)
+    means = np.array([lat[idx == i].mean() for i in range(knots.size)])
+    bias = np.abs(means - (base + slope * knots)) / (base + slope * knots)
+    assert bias.max() > 0.02, "fixture no longer discriminates mean vs fit"
+
+
+def test_fit_knee_bias_removed():
+    """Regression for the documented ~10% stress-knee bias: on a flat-then-
+    steep profile whose knee bin straddles the kink, the local-regression
+    knot value must sit far closer to the true knee latency than the old
+    bin mean did (PerfDriftConfig.delta_perf thresholds below 0.10 rely on
+    this)."""
+    knee, base, slope = 2048.0, 1e-3, 2e-6
+    def truth(n):
+        return base + slope * np.maximum(np.asarray(n, dtype=float)
+                                         - knee, 0.0)
+    # dense sweep with samples on both sides of the knee
+    tc = np.array([64., 256., 512., 1024., 1536., 1900., 2000.,
+                   2100., 2300., 2700., 3500., 4096., 6144., 8192.])
+    lat = truth(tc)
+    m = fit_perf_model(DeviceProfile(0, tc, lat), n_knots=8)
+    inner = m.knots[m.knots > 0]
+    fit_err = np.abs(m(inner) - truth(inner)) / truth(inner)
+    assert fit_err.max() < 0.05, fit_err
+    # the old bin-mean estimator on the same knots is an order worse: bins
+    # on the steep side average up-slope samples into the knot value
+    knots = np.unique(np.quantile(tc, np.linspace(0, 1, 8)))
+    idx = np.abs(tc[:, None] - knots[None, :]).argmin(axis=1)
+    means = np.array([lat[idx == i].mean() for i in range(knots.size)])
+    mean_err = np.abs(means - truth(knots)) / truth(knots)
+    assert mean_err.max() > 0.10, mean_err          # the documented bias
+    assert mean_err.max() > 10 * fit_err.max()

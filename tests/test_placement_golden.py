@@ -26,8 +26,13 @@ GOLDEN_W = np.array([
     [120., 40., 5000., 700., 2200., 350., 90., 500.],
 ])
 GOLDEN_SLOPES = [1e-8, 2e-8, 4e-8, 8e-8]
+# Goldens regenerated when the reweighted-refill pass was folded into
+# _replicated_solve: layer 0's refill found a strictly better layout
+# (predicted straggler latency 0.0006051 → 0.0005859), layer 1 kept the
+# single-pass solve (refill did not improve it) — shares there are
+# unchanged to the last digit.
 GOLDEN_SLOT_EXPERT = np.array([
-    [0, 1, 6, 0, 1, 7, 0, 3, 5, 0, 2, 4],
+    [0, 1, 7, 0, 1, 3, 0, 4, 5, 0, 2, 6],
     [2, 4, 6, 1, 2, 4, 2, 3, 5, 0, 2, 7],
 ], dtype=np.int32)
 GOLDEN_SHARE = np.array([
@@ -36,7 +41,7 @@ GOLDEN_SHARE = np.array([
     [0.2768019609, 0.5105386417, 1.0, 1.0, 0.2653743570, 0.4894613583,
      0.2451339400, 1.0, 1.0, 1.0, 0.2126897420, 1.0],
 ])
-GOLDEN_MAX_LATENCY = np.array([0.0006051237, 0.0006346759])
+GOLDEN_MAX_LATENCY = np.array([0.0005859237, 0.0006346759])
 
 
 def test_vibe_r_solver_golden_fixture():

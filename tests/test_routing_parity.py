@@ -120,6 +120,88 @@ def test_dispatch_matches_token_granular_realized_loads():
 
 
 # ---------------------------------------------------------------------------
+# responsive (stolen) shares keep parity — ISSUE 7 acceptance gate
+# ---------------------------------------------------------------------------
+
+def stolen_fixture(**kw):
+    """The skewed fixture's placement after genuine work-stealing steps:
+    a TokenRescheduler fed a load mix shifted away from the profiled skew,
+    so the responsive share table has visibly diverged from the plan."""
+    from repro.core import StealConfig, TokenRescheduler
+
+    rng, perf, prof, rp = skewed_fixture(**kw)
+    rs = TokenRescheduler(StealConfig(headroom=0.0, max_shift=0.5,
+                                      smoothing=1.0), perf)
+    rs.reset(rp)
+    for _ in range(3):
+        rs.observe(np.roll(prof, 5, axis=1) * 100_000)
+    assert rs.steals > 0, "fixture failed to trigger a steal"
+    dp = rs.placement
+    assert np.abs(dp.share - rp.share).max() > 1e-3
+    return rng, prof, dp
+
+
+def test_stolen_shares_dispatch_matches_simulator_loads():
+    """The 5% dispatch↔simulator parity bound holds for *responsive*
+    (steal-adjusted) share tables exactly as it does for the solver's plan
+    — the rescheduler's reweighting stays inside what inverse-CDF replica
+    selection can realize."""
+    rng, prof, dp = stolen_fixture()
+    for layer in range(prof.shape[0]):
+        idx = draw_assignments(rng, prof[layer], t=50_000)
+        loads = per_layer_loads(idx, dp.n_experts)
+        predicted = dp.rank_loads(np.tile(loads, (dp.n_layers, 1)))[layer]
+        dispatched = dispatch_rank_loads(dp, idx, layer, weighted=True)
+        rel = np.abs(dispatched - predicted) / predicted
+        assert rel.max() <= TOL, (layer, rel)
+
+
+def test_stolen_shares_token_granular_parity_and_conservation():
+    """Token-granular scoring of stolen shares: realized_rank_loads agrees
+    with hash dispatch within the parity bound and conserves every token."""
+    rng, prof, dp = stolen_fixture()
+    idx = draw_assignments(rng, prof[0], t=50_000)
+    loads = per_layer_loads(idx, dp.n_experts)
+    tiled = np.tile(loads, (dp.n_layers, 1))
+    realized = realized_rank_loads(dp, tiled)
+    np.testing.assert_allclose(realized.sum(1), tiled.sum(1))
+    dispatched = dispatch_rank_loads(dp, idx, 0, weighted=True)
+    assert dispatched.sum() == idx.size           # every draw lands somewhere
+    rel = np.abs(dispatched - realized[0]) / realized[0]
+    assert rel.max() <= TOL
+
+
+def test_stolen_shares_preserve_moe_semantics_and_drop_column():
+    """Ragged dispatch through a *stolen* share table: outputs and logical
+    tallies equal the singleton reference (copies hold identical weights),
+    i.e. stealing never drops a token — the drop column stays structurally
+    zero."""
+    import jax
+
+    _, _, dp = stolen_fixture(E=8, slots_per_rank=3)
+    E, D, F, K = 8, 32, 64, 2
+    p = MOE.moe_init(jax.random.PRNGKey(0), d=D, f=F, n_experts=E, n_slots=E)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, D)) \
+        .astype(jnp.bfloat16)
+    y_ref, tally_ref, _ = MOE.moe_layer(p, x, top_k=K, n_experts=E,
+                                        rules=None)
+    perm = dp.perm[0]
+    p_rep = dict(p)
+    for k in ("w1", "w2", "w3"):
+        p_rep[k] = p[k][perm]
+    slots_of, n_copies = build_slots_of(dp.perm, E, dp.n_slots)
+    cdf = dp.copy_cdf()
+    y, tally, _ = MOE.moe_layer(p_rep, x, top_k=K, n_experts=E, rules=None,
+                                slots_of=jnp.asarray(slots_of[0]),
+                                n_copies=jnp.asarray(n_copies[0]),
+                                copy_cdf=jnp.asarray(cdf[0]))
+    err = float(jnp.abs(y_ref.astype(jnp.float32)
+                        - y.astype(jnp.float32)).max())
+    assert err < 1e-5, err
+    np.testing.assert_allclose(np.asarray(tally_ref), np.asarray(tally))
+
+
+# ---------------------------------------------------------------------------
 # realized_rank_loads (simulator side of the seam)
 # ---------------------------------------------------------------------------
 

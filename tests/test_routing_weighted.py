@@ -259,3 +259,33 @@ def test_incremental_folded_reweight_never_worse_than_posthoc(seed):
     obj_folded = _replicated_objective(folded.placement, w1, perf)
     obj_posthoc = _replicated_objective(posthoc, w1, perf)
     assert obj_folded <= obj_posthoc + 1e-12, (obj_folded, obj_posthoc)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_full_solve_reweighted_refill_never_worse(seed):
+    """ISSUE 7 satellite: the reweighted-refill pass folded into the full
+    ViBE-R solve must never worsen the predicted straggler objective
+    Σ_l max_g f_g vs the single-pass solve it replaced — the mirror of
+    test_incremental_folded_reweight_never_worse_than_posthoc for
+    _replicated_solve."""
+    from repro.core.placement import (_replicated_solve, _speed_targets,
+                                      normalize_slot_budget)
+
+    rng = np.random.default_rng(seed)
+    perf = affine_perf([1e-8, 2e-8, 4e-8, 8e-8])
+    w = rng.random((2, 16)) * 50_000 + 1
+    budget = normalize_slot_budget(6, 16, 4)
+    speeds, targets = _speed_targets(w, perf, "rank")
+    single = _replicated_solve(w, speeds, targets, 4, budget)
+    folded = _replicated_solve(w, speeds, targets, 4, budget,
+                               perf_models=perf)
+    obj_folded = _replicated_objective(folded, w, perf)
+    obj_single = _replicated_objective(single, w, perf)
+    assert obj_folded <= obj_single + 1e-12, (obj_folded, obj_single)
+    # replica counts are a refill invariant (only the fill moved) and the
+    # public entry point IS the folded solve
+    np.testing.assert_array_equal(folded.n_copies(), single.n_copies())
+    np.testing.assert_allclose(
+        vibe_r_placement(w, perf, slots_per_rank=6).share,
+        folded.share, atol=1e-12)

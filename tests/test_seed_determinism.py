@@ -1,0 +1,101 @@
+"""Seed-determinism sweep across the registered policy × scheduler matrix.
+
+Running serve's core loop twice with the same seed must be *bit-identical*:
+any unseeded RNG, dict-order iteration, wall-clock read, or accumulation-
+order drift anywhere in the stack (controller solve, scheduler decisions,
+simulated loads, virtual-clock pricing, work stealing) shows up here as a
+record or stat mismatch. The matrix is registry-driven, so newly registered
+policies and schedulers are swept automatically.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import (StealConfig, ViBEConfig, ViBEController,
+                        get_policy, make_cluster, registered_policies)
+from repro.serving import (EPSimulator, Engine, EngineConfig,
+                           SchedulerConfig, SimConfig, WORKLOADS,
+                           registered_schedulers, routing_profile,
+                           sample_requests)
+
+POLICIES = registered_policies()
+SCHEDULERS = registered_schedulers()
+
+
+def _record_key(r):
+    return (r.req_id, r.arrival, r.prompt_len, r.output_len,
+            r.first_token_at, r.finished_at)
+
+
+def _build(policy, sched):
+    cfg = get_smoke("qwen3-moe-235b-a22b")
+    cluster = make_cluster(4, "mi325x", d_model=cfg.d_model,
+                           d_ff=cfg.moe_d_ff,
+                           experts_per_rank=cfg.n_experts // 4)
+    L, E = cfg._n_moe_layers(), cfg.n_experts
+    wl = WORKLOADS["sharegpt"]
+    W = routing_profile(wl, L, E) * 4096 * cfg.top_k
+    # replication-capable policies also exercise the steal path, so the
+    # sweep covers the responsive-share machinery too
+    steal = (StealConfig(headroom=0.0, smoothing=1.0)
+             if get_policy(policy).capabilities.supports_replication
+             else None)
+    ctl = ViBEController(L, E, 4, cluster.fit_models(),
+                         ViBEConfig(policy=policy, steal=steal),
+                         initial_w=W)
+    return cfg, cluster, wl, ctl, sched
+
+
+def _sim_once(policy, sched):
+    cfg, cluster, wl, ctl, sched = _build(policy, sched)
+    sim = EPSimulator(cfg, cluster, wl,
+                      SimConfig(ep_degree=4, seed=5,
+                                max_prefill_tokens=4096,
+                                scheduler=SchedulerConfig(name=sched)),
+                      controller=ctl)
+    recs = sim.run(sample_requests(wl, 20, qps=30.0, seed=6),
+                   phase="prefill")
+    rs = ctl.rescheduler
+    return (tuple(_record_key(r) for r in recs),
+            (sim.steps, sim.now, sim.total_layer_time,
+             sim.total_barrier_idle, sim.dropped_assignments,
+             sim.steal_updates, len(ctl.updates),
+             rs.steals if rs is not None else -1,
+             rs.share_moved if rs is not None else -1.0))
+
+
+@pytest.mark.parametrize("sched", SCHEDULERS)
+@pytest.mark.parametrize("policy", POLICIES)
+def test_simulator_run_bit_identical_across_reruns(policy, sched):
+    recs_a, stats_a = _sim_once(policy, sched)
+    recs_b, stats_b = _sim_once(policy, sched)
+    assert recs_a == recs_b
+    assert stats_a == stats_b
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("sched", SCHEDULERS)
+def test_engine_run_bit_identical_across_reruns(sched):
+    """The real JAX engine loop, one representative policy (vibe_r with
+    stealing — the most state-carrying configuration) per scheduler."""
+
+    def once():
+        cfg, cluster, wl, ctl, name = _build("vibe_r", sched)
+        eng = Engine(cfg, EngineConfig(
+            max_batch=2, max_seq=48, seed=0,
+            scheduler=SchedulerConfig(name=name, prefill_chunk=16)),
+            controller=ctl, cluster=cluster)
+        reqs = sample_requests(wl, 3, qps=100.0, seed=1)
+        reqs = [type(r)(r.req_id, r.arrival, 8, 6) for r in reqs]
+        eng.submit(reqs)
+        recs = eng.run(max_steps=200)
+        st = eng.stats
+        return (tuple(_record_key(r) for r in recs),
+                (st.decode_steps, st.prefill_steps, st.virtual_time,
+                 st.steal_updates, ctl.rescheduler.steals))
+
+    ra, sa = once()
+    rb, sb = once()
+    assert ra == rb
+    assert sa == sb
