@@ -20,9 +20,10 @@ special-casing here (capability flags decide what each solve consumes).
 import numpy as np
 
 from repro.configs import get
-from repro.core import (SolveContext, get_policy, make_cluster,
-                        registered_policies)
-from repro.serving import WORKLOADS, routing_profile
+from repro.core import (ClusterTopology, SolveContext, get_policy,
+                        make_cluster, registered_policies)
+from repro.serving import (EPSimulator, SimConfig, WORKLOADS,
+                           routing_profile, sample_requests, summarize)
 from repro.serving.simulator import rank_latency_matrix
 from .common import PROFILE_TOKENS, emit
 
@@ -34,7 +35,7 @@ def run(model="deepseek-v3-671b", workload="sharegpt", quick=True,
     spec = WORKLOADS[workload]
     policies = registered_policies()
     rows = []
-    for ep in (8, 16, 32, 64, 128):
+    for ep in (8, 16, 32, 64, 128, 256):
         if E % ep:
             continue
         tail = {p: [] for p in policies}
@@ -78,5 +79,61 @@ def run(model="deepseek-v3-671b", workload="sharegpt", quick=True,
     return rows
 
 
+def run_hier(model="deepseek-v3-671b", workload="sharegpt", quick=True,
+             n_nodes=8, n_requests=16):
+    """Fleet-scale 2-level sweep: vibe_h vs vibe_r on the same topology.
+
+    Both policies solve against the *same* 2-level topology (``n_nodes``
+    nodes, ICI within / ~8x-slower DCN between) and replay the same
+    request trace through :class:`EPSimulator` with the hierarchical a2a
+    clock. ``dcn_reduction_x`` (flat vibe_r's cross-node bytes over
+    vibe_h's) and ``ttft_ratio`` (vibe_r's P90 TTFT over vibe_h's) are
+    the ``--check`` quality gates: vibe_h must keep cutting DCN traffic
+    without giving the tail latency back.
+    """
+    m = get(model)
+    L, E = m._n_moe_layers(), m.n_experts
+    spec = WORKLOADS[workload]
+    rows = []
+    for ep in ((64,) if quick else (64, 128, 256)):
+        if E % ep or ep % n_nodes:
+            continue
+        cluster = make_cluster(ep, "mi325x", d_model=m.d_model,
+                               d_ff=m.moe_d_ff,
+                               experts_per_rank=max(E // ep, 1), seed=0)
+        topo = ClusterTopology.uniform(n_nodes, ep // n_nodes,
+                                       cluster.ici_bw)
+        perf = cluster.fit_models()
+        W = routing_profile(spec, L, E) * PROFILE_TOKENS * m.top_k
+        arm = {}
+        for policy in ("vibe_r", "vibe_h"):
+            pl = get_policy(policy).solve(SolveContext(
+                w=W, n_ranks=ep, perf_models=perf, topology=topo))
+            sim = EPSimulator(m, cluster, spec,
+                              SimConfig(ep_degree=ep, seed=1,
+                                        max_prefill_tokens=16_384,
+                                        topology=topo),
+                              placement=pl)
+            reqs = sample_requests(spec, n_requests, qps=50.0, seed=2)
+            s = summarize(sim.run(reqs))
+            arm[policy] = (sim.dcn_bytes, sim.ici_bytes, s["ttft_p90"])
+        dcn_r, ici_r, p90_r = arm["vibe_r"]
+        dcn_h, ici_h, p90_h = arm["vibe_h"]
+        rows.append({
+            "bench": "fig15_hier", "label": f"EP{ep}",
+            "ep": ep, "n_nodes": n_nodes,
+            "dcn_gb_vibe_r": dcn_r / 1e9, "dcn_gb_vibe_h": dcn_h / 1e9,
+            "dcn_frac_vibe_r": dcn_r / max(dcn_r + ici_r, 1e-9),
+            "dcn_frac_vibe_h": dcn_h / max(dcn_h + ici_h, 1e-9),
+            "dcn_reduction_x": dcn_r / max(dcn_h, 1e-9),
+            "ttft_p90_ms_vibe_r": 1e3 * p90_r,
+            "ttft_p90_ms_vibe_h": 1e3 * p90_h,
+            "ttft_ratio": p90_r / max(p90_h, 1e-12),
+        })
+    emit(rows, "fig15_hier")
+    return rows
+
+
 if __name__ == "__main__":
     run(quick=False)
+    run_hier(quick=False)

@@ -15,9 +15,9 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.configs import get
-from repro.core import (ClusterVariability, DriftConfig, SolveContext,
-                        StealConfig, ViBEConfig, ViBEController, get_policy,
-                        make_cluster)
+from repro.core import (ClusterTopology, ClusterVariability, DriftConfig,
+                        SolveContext, StealConfig, ViBEConfig, ViBEController,
+                        get_policy, make_cluster)
 from repro.serving import (EPSimulator, PAPER_SLOS, SimConfig, WORKLOADS,
                            goodput, routing_profile, sample_requests,
                            slo_frontier, summarize)
@@ -43,16 +43,22 @@ def profile_W(model_name: str, workload: str, ep: int = 8) -> np.ndarray:
 
 def placement_for(policy: str, model_name: str, workload: str,
                   cluster: ClusterVariability, ep: int = 8,
-                  slots_per_rank=None):
+                  slots_per_rank=None,
+                  topology: Optional[ClusterTopology] = None):
     """Registry-driven solve: capabilities decide what the context carries
-    (no per-policy special-casing)."""
+    (no per-policy special-casing). The default topology is the explicit
+    flat one — bit-identical placements to the pre-topology call sites
+    (pinned by tests), while making the topology input first-class."""
     W = profile_W(model_name, workload, ep)
     pol = get_policy(policy)
     caps = pol.capabilities
+    if topology is None:
+        topology = ClusterTopology.flat(ep, cluster.ici_bw)
     ctx = SolveContext(
         w=W, n_ranks=ep,
         perf_models=cluster.fit_models() if caps.needs_perf_models else None,
-        slot_budget=slots_per_rank if caps.accepts_slot_budget else None)
+        slot_budget=slots_per_rank if caps.accepts_slot_budget else None,
+        topology=topology)
     return pol.solve(ctx)
 
 

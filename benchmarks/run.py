@@ -46,6 +46,7 @@ HARNESSES = {
     "fig11_steal": bench_fig11_drift.run_steal,
     "fig13": bench_fig13_sensitivity.run,
     "fig15": bench_fig15_scaling.run,
+    "fig15_hier": bench_fig15_scaling.run_hier,
     "placement": bench_placement_solve.run,
     "kernels": bench_kernels.run,
 }
@@ -63,6 +64,10 @@ CHECK_SPECS = {
                   "time"),
     "fig8": ("fig8_slo", ("frontier_qps",), "quality"),
     "fig11_steal": ("fig11_steal", ("goodput",), "quality"),
+    # vibe_h must keep beating flat vibe_r on cross-node (DCN) bytes on a
+    # 2-level topology without regressing simulated P90 TTFT (ratios > 1)
+    "fig15_hier": ("fig15_hier", ("dcn_reduction_x", "ttft_ratio"),
+                   "quality"),
 }
 #: fail --check when fresh wall-clock exceeds baseline by more than this;
 #: override with BENCH_CHECK_TOL (e.g. a noisy shared CI runner may need

@@ -25,7 +25,7 @@ if __name__ == "__main__":
     ap.add_argument("--prefill-chunk", type=int, default=0)
     args = ap.parse_args()
 
-    engine, records = serve(args.arch, policy=args.policy, n_requests=8,
+    engine, records, _ = serve(args.arch, policy=args.policy, n_requests=8,
                             qps=30.0, workload=args.workload, max_batch=4,
                             max_seq=96, scheduler=args.scheduler,
                             prefill_chunk=args.prefill_chunk)

@@ -11,8 +11,8 @@ from .perf_model import (DeviceProfile, PerfModel, TelemetryBuffer,
 from .placement import (Placement, ReplicatedPlacement,
                         contiguous_placement, default_slots_per_rank,
                         eplb_placement, gem_placement, harmoeny_placement,
-                        layer_latency_span, normalize_slot_budget,
-                        pad_phantom_column,
+                        inflate_placement, layer_latency_span,
+                        normalize_slot_budget, pad_phantom_column,
                         placement_to_permutation, permutation_to_placement,
                         predicted_layer_latency, predicted_rank_latencies,
                         reweight_shares_by_speed, solve_model_placement,
@@ -21,6 +21,7 @@ from .policy import (PlacementPolicy, PolicyCapabilities, SolveContext,
                      UnknownPolicyError, get_policy, register_policy,
                      registered_policies)
 from .steal import StealConfig, TokenRescheduler
+from .topology import ClusterTopology, parse_topology, vibe_h_placement
 from .variability import (REGIMES, SCENARIOS, ClusterVariability,
                           VariabilityEvent, VariabilityRegime, make_cluster,
                           make_scenario)
@@ -36,7 +37,8 @@ __all__ = [
     "profile_device", "refit_from_samples",
     "Placement", "ReplicatedPlacement", "contiguous_placement",
     "default_slots_per_rank", "eplb_placement", "gem_placement",
-    "harmoeny_placement", "layer_latency_span", "normalize_slot_budget",
+    "harmoeny_placement", "inflate_placement", "layer_latency_span",
+    "normalize_slot_budget",
     "pad_phantom_column", "placement_to_permutation",
     "permutation_to_placement",
     "predicted_layer_latency", "predicted_rank_latencies",
@@ -46,6 +48,7 @@ __all__ = [
     "UnknownPolicyError", "get_policy", "register_policy",
     "registered_policies",
     "StealConfig", "TokenRescheduler",
+    "ClusterTopology", "parse_topology", "vibe_h_placement",
     "REGIMES", "SCENARIOS", "ClusterVariability", "VariabilityEvent",
     "VariabilityRegime", "make_cluster", "make_scenario",
 ]

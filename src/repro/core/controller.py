@@ -50,8 +50,9 @@ from .perf_model import PerfModel
 from .placement import ReplicatedPlacement
 from .policy import PlacementPolicy, SolveContext, get_policy
 from .steal import StealConfig, TokenRescheduler
+from .topology import ClusterTopology
 
-__all__ = ["ViBEConfig", "PlacementUpdate", "ViBEController"]
+__all__ = ["ViBEConfig", "PlacementUpdate", "FailEvent", "ViBEController"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +92,11 @@ class ViBEConfig:
     # adaptive=False (it is orthogonal to recalibration — exactly the
     # stale-profile regime it exists for). Requires a replication-capable
     # policy: without copies there is nowhere to shift share.
+    topology: Optional[ClusterTopology] = None
+    # fleet topology (core/topology.py): node structure + ICI/DCN link
+    # asymmetry, threaded into every SolveContext so topology-aware
+    # policies (vibe_h) bin experts by node. None = flat cluster — every
+    # pre-existing policy behaves identically either way.
 
     # -- validated against the registered policy's capabilities -----------
     def __post_init__(self):
@@ -135,9 +141,19 @@ class ViBEConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class FailEvent:
+    """A rank (or several) left the fleet — device failure, scheduled
+    replace, or elastic shrink. Triggers a topology-masked full re-solve
+    through :meth:`ViBEController.mask_ranks`."""
+
+    ranks: Tuple[int, ...]
+    kind: str = "fail"
+
+
+@dataclasses.dataclass(frozen=True)
 class PlacementUpdate:
     step: int
-    event: Union[DriftEvent, PerfDriftEvent]
+    event: Union[DriftEvent, PerfDriftEvent, FailEvent]
     placement: ReplicatedPlacement
     moved_experts: int
     migration_bytes: int
@@ -148,8 +164,8 @@ class PlacementUpdate:
 
     @property
     def kind(self) -> str:
-        """Which drift signal triggered this update:
-        "routing" | "stress" | "perf"."""
+        """Which signal triggered this update:
+        "routing" | "stress" | "perf" | "fail"."""
         return self.event.kind
 
 
@@ -165,9 +181,14 @@ class ViBEController:
     ):
         if len(perf_models) != n_ranks:
             raise ValueError("one perf model per EP rank required")
+        if config.topology is not None \
+                and config.topology.n_ranks != n_ranks:
+            raise ValueError(f"topology has {config.topology.n_ranks} ranks "
+                             f"but the controller manages {n_ranks}")
         self.cfg = config
         self.policy: PlacementPolicy = get_policy(config.policy)
         self.L, self.E, self.G = n_layers, n_experts, n_ranks
+        self.dead_ranks: Tuple[int, ...] = ()
         self.perf_models = list(perf_models)
         self.profiler = ActivationProfiler(n_layers, n_experts,
                                            window=config.drift.window)
@@ -199,7 +220,9 @@ class ViBEController:
             perf_models=self.perf_models if caps.needs_perf_models else None,
             slot_budget=self.cfg.slot_budget,
             epsilon=self.cfg.epsilon,
-            reweight_shares=self.cfg.reweight_shares)
+            reweight_shares=self.cfg.reweight_shares,
+            topology=self.cfg.topology,
+            dead_ranks=self.dead_ranks or None)
 
     def _solve(self, w: np.ndarray) -> ReplicatedPlacement:
         """Full placement solve with this controller's policy and knobs."""
@@ -262,6 +285,12 @@ class ViBEController:
         Telemetry is tracked even for static controllers so static-vs-
         adaptive comparisons share drift statistics, mirroring ``observe``.
         """
+        if self.rescheduler is not None:
+            # BEFORE the perf-drift gate: measured latencies retune the
+            # dispatch-time steal trigger even when perf-drift monitoring
+            # (refits) is disabled — stealing reacts to hardware drift
+            # *between* refits, which is exactly its job
+            self.rescheduler.observe_latency(rank_loads, rank_latencies)
         if self.perf_detector is None:
             return None
         event = self.perf_detector.observe(rank_loads, rank_latencies)
@@ -271,6 +300,42 @@ class ViBEController:
         if not refit:
             return None                    # not enough samples to refresh
         return self._recalibrate(event, refit_ranks=refit)
+
+    # ------------------------------------------------------------------
+    def mask_ranks(self, dead: Sequence[int]) -> PlacementUpdate:
+        """Mark ranks dead and re-solve over the survivors (elastic fail
+        path — ``serving/elastic.py`` routes rank-loss events here).
+
+        ``dead`` is the *complete* dead set (replaces any previous mask;
+        pass ``()`` to restore a recovered fleet). The re-solve is always
+        full: dead ranks come back as all-phantom zero-share windows
+        (``SolveContext.dead_ranks``), so dispatch stops sending them
+        tokens while the slot-table geometry stays put.
+        """
+        dead_set = tuple(sorted(set(int(g) for g in dead)))
+        for g in dead_set:
+            if not 0 <= g < self.G:
+                raise ValueError(f"rank {g} outside [0, {self.G})")
+        if len(dead_set) >= self.G:
+            raise ValueError("cannot mask every rank — no survivors")
+        self.dead_ranks = dead_set
+        w = self.profiler.window_matrix()
+        old = self.placement
+        new = self._solve(w)
+        moved = new.moved_experts(old)
+        upd = PlacementUpdate(
+            step=self._step, event=FailEvent(dead_set), placement=new,
+            moved_experts=moved,
+            migration_bytes=moved * self.cfg.expert_bytes,
+            full_resolve=True)
+        self.placement = new
+        if self.rescheduler is not None:
+            self.rescheduler.reset(new)
+        self.detector.snapshot()
+        if self.perf_detector is not None:
+            self.perf_detector.snapshot()
+        self.updates.append(upd)
+        return upd
 
     # ------------------------------------------------------------------
     def _recalibrate(self, event: Union[DriftEvent, PerfDriftEvent],
@@ -285,6 +350,11 @@ class ViBEController:
             incremental = False
         else:
             incremental = self.policy.capabilities.supports_incremental
+        if self.dead_ranks:
+            # swap-based refinement is blind to the mask — it would happily
+            # move copies back onto a dead rank. Full re-solves go through
+            # the masked path in policy.solve.
+            incremental = False
         if incremental:
             res: IncrementalResult = self.policy.refine(old, self._context(w))
             new, moved = res.placement, res.moved_expert_count()

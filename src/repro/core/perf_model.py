@@ -316,14 +316,20 @@ def refit_from_samples(token_loads: np.ndarray, latencies: np.ndarray,
 
     Serving windows rarely look like an offline sweep, so a ``prior`` model
     (the one being replaced) disciplines the refit where the window is
-    uninformative — assuming the unseen region drifted *multiplicatively*,
-    which is physically exact for DVFS-style throttling (it slows the whole
-    kernel):
+    uninformative:
 
     * narrow window (max/min < ``min_span``, e.g. a saturated server seeing
-      the same full prefill chunk every step): the window identifies only a
-      scale, so the prior's whole curve is rescaled by the median
-      observed/predicted ratio;
+      the same full prefill chunk every step): the window identifies at
+      most a scale and a trend, so the unseen region is extrapolated from
+      the prior. Two physically distinct drifts are modelled separately —
+      **throttle** (DVFS-style power capping divides the whole kernel, so
+      the observed/predicted ratio is flat in load → rescale the prior's
+      entire curve by the median ratio) vs **deviation** (a stress-gated
+      shift, e.g. a replaced device with a weaker variability bin, inflates
+      only the load-dependent region → preserve the prior's zero-load
+      floor and rescale only the excess above it, so low-load predictions
+      are not dragged up by a drift that never touched them). The split is
+      decided by the ratio's trend across the window's load median.
     * diverse window: the shape is refit from the samples, and the prior's
       knots *above* the observed range ride along, rescaled to match at
       the seam — linear extrapolation from a low-load window would
@@ -336,9 +342,29 @@ def refit_from_samples(token_loads: np.ndarray, latencies: np.ndarray,
     span = (float(tc.max()) + 1.0) / (float(tc.min()) + 1.0)
     if prior is not None and span < min_span:
         pred = np.maximum(np.asarray(prior(tc), dtype=np.float64), 1e-12)
-        factor = float(np.median(lt / pred))
+        ratio = lt / pred
+        factor = float(np.median(ratio))
+        # throttle vs deviation: split the window at its median load and
+        # compare the ratio's halves. A flat trend (or a single-point
+        # window, where hi is empty) is the throttle signature.
+        n_med = float(np.median(tc))
+        lo, hi = ratio[tc <= n_med], ratio[tc > n_med]
+        trend = (float(np.median(hi)) - float(np.median(lo))
+                 if lo.size and hi.size else 0.0)
+        floor = float(prior.lat[0])
+        excess = np.maximum(pred - floor, 1e-12)
+        deviation = (trend > 0.25 * max(abs(factor - 1.0), 0.02)
+                     and float(np.median(pred - floor))
+                     > 0.25 * float(np.median(pred)))
+        if not deviation:
+            return PerfModel(prior.knots.copy(),
+                             np.maximum(prior.lat * factor, 1e-9), device_id)
+        # deviation: latency = floor + k * (prior - floor); monotone and
+        # floor-preserving by construction
+        k = max(float(np.median((lt - floor) / excess)), 0.0)
         return PerfModel(prior.knots.copy(),
-                         np.maximum(prior.lat * factor, 1e-9), device_id)
+                         np.maximum(floor + k * (prior.lat - floor), 1e-9),
+                         device_id)
     fitted = fit_perf_model(DeviceProfile(device_id, tc, lt),
                             n_knots=n_knots)
     if prior is None:

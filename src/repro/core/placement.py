@@ -71,6 +71,7 @@ __all__ = [
     "default_slots_per_rank",
     "normalize_slot_budget",
     "pad_phantom_column",
+    "inflate_placement",
 ]
 
 
@@ -282,9 +283,27 @@ class ReplicatedPlacement:
                                        self.slot_expert, axis=1) * self.share
         return slot_load.reshape(L, self.n_ranks, self.slots_per_rank).sum(2)
 
+    def _window_padded(self, spr: int) -> np.ndarray:
+        """slot_expert with each rank's window right-padded to ``spr``
+        slots with phantoms — aligns tables of different widths."""
+        L, _ = self.slot_expert.shape
+        se = self.slot_expert.reshape(L, self.n_ranks, self.slots_per_rank)
+        out = np.full((L, self.n_ranks, spr), self.n_experts,
+                      dtype=se.dtype)
+        out[:, :, :self.slots_per_rank] = se
+        return out.reshape(L, -1)
+
     def moved_experts(self, other: "ReplicatedPlacement") -> int:
         """(layer, slot) pairs whose resident expert differs vs ``other`` —
-        the weight-migration volume in expert-tensor units."""
+        the weight-migration volume in expert-tensor units. Tables of
+        different per-rank widths (an elastic re-solve can widen the
+        survivor budget) are aligned window-by-window: a slot that only
+        exists on one side counts as moved unless it is a phantom."""
+        if (other.n_ranks == self.n_ranks
+                and other.slots_per_rank != self.slots_per_rank):
+            spr = max(self.slots_per_rank, other.slots_per_rank)
+            return int(np.sum(self._window_padded(spr)
+                              != other._window_padded(spr)))
         return int(np.sum(self.slot_expert != other.slot_expert))
 
 
@@ -858,12 +877,45 @@ def reweight_shares_by_speed(
     return ReplicatedPlacement(se.copy(), share, placement.n_ranks, E)
 
 
+def inflate_placement(sub: ReplicatedPlacement, survivors: Sequence[int],
+                      n_ranks: int) -> ReplicatedPlacement:
+    """Re-inflate a placement solved over a survivor subset back to the
+    full ``n_ranks`` rank space.
+
+    ``sub`` was solved with ``sub.n_ranks == len(survivors)``;
+    ``survivors[j]`` is the global rank that sub-rank j maps to. Dead
+    ranks get all-phantom slot windows with zero share, so dispatch sends
+    them nothing and ``rank_loads`` reads 0 there — which is how a
+    topology-masked re-solve (``SolveContext.dead_ranks``) keeps the
+    global slot-table geometry the engine pinned at init.
+    """
+    surv = np.asarray(survivors, dtype=np.int64)
+    if surv.size != sub.n_ranks:
+        raise ValueError(f"{surv.size} survivors but sub-placement has "
+                         f"{sub.n_ranks} ranks")
+    if surv.size != np.unique(surv).size:
+        raise ValueError("duplicate survivor ranks")
+    if surv.size and (surv.min() < 0 or surv.max() >= n_ranks):
+        raise ValueError(f"survivor ranks outside [0, {n_ranks})")
+    L = sub.n_layers
+    spr = sub.slots_per_rank
+    E = sub.n_experts
+    slot_expert = np.full((L, n_ranks * spr), E, dtype=np.int32)
+    share = np.zeros((L, n_ranks * spr))
+    for j, g in enumerate(surv):
+        slot_expert[:, g * spr:(g + 1) * spr] = \
+            sub.slot_expert[:, j * spr:(j + 1) * spr]
+        share[:, g * spr:(g + 1) * spr] = sub.share[:, j * spr:(j + 1) * spr]
+    return ReplicatedPlacement(slot_expert, share, n_ranks, E)
+
+
 def solve_model_placement(
     policy: str,
     w: np.ndarray,
     n_ranks: int,
     perf_models: Optional[Sequence[PerfModel]] = None,
     slots_per_rank=None,
+    topology=None,
 ) -> AnyPlacement:
     """DEPRECATED string-dispatch entry point (use the policy registry).
 
@@ -874,7 +926,11 @@ def solve_model_placement(
     :class:`Placement`, replication-capable ones (``vibe_r``/``harmoeny``)
     a :class:`ReplicatedPlacement`. ``slots_per_rank`` is forwarded only to
     policies whose capabilities accept a slot budget (the old behaviour:
-    silently ignored elsewhere). New code should build a
+    silently ignored elsewhere). ``topology`` (a
+    :class:`~repro.core.topology.ClusterTopology`) is forwarded verbatim —
+    ``None`` or a flat topology keeps every pre-existing policy
+    bit-identical; only topology-aware policies (``vibe_h``) read it. New
+    code should build a
     :class:`~repro.core.policy.SolveContext` and call
     ``get_policy(name).solve(ctx)`` directly.
     """
@@ -890,7 +946,8 @@ def solve_model_placement(
     ctx = _policy.SolveContext(
         w=w, n_ranks=n_ranks,
         perf_models=perf_models if caps.needs_perf_models else None,
-        slot_budget=slots_per_rank if caps.accepts_slot_budget else None)
+        slot_budget=slots_per_rank if caps.accepts_slot_budget else None,
+        topology=topology)
     solved = pol.solve(ctx)
     return solved if caps.supports_replication else solved.to_singleton()
 

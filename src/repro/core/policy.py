@@ -48,8 +48,9 @@ from .incremental import IncrementalResult, incremental_update_replicated
 from .perf_model import PerfModel
 from .placement import (Placement, ReplicatedPlacement, contiguous_placement,
                         eplb_placement, gem_placement, harmoeny_placement,
-                        normalize_slot_budget, vibe_placement,
-                        vibe_r_placement)
+                        inflate_placement, normalize_slot_budget,
+                        vibe_placement, vibe_r_placement)
+from .topology import ClusterTopology, vibe_h_placement
 
 __all__ = [
     "PolicyCapabilities",
@@ -112,6 +113,18 @@ class SolveContext:
     ``epsilon``      — incremental-refinement convergence tolerance.
     ``reweight_shares`` — re-proportion copy shares to rank speeds after a
                        swap-based refinement (replicated policies only).
+    ``topology``     — optional :class:`~repro.core.topology.ClusterTopology`
+                       (node structure + ICI/DCN link asymmetry). ``None``
+                       and flat topologies are equivalent for every
+                       built-in policy; only topology-aware solvers
+                       (``vibe_h``) read the node structure.
+    ``dead_ranks``   — ranks currently lost to the fleet (elastic fail
+                       path). When set, the built-in policies solve over
+                       the survivors only (with a masked topology) and
+                       re-inflate the result so dead ranks hold
+                       all-phantom zero-share slot windows — dispatch
+                       sends them nothing while the global slot-table
+                       geometry stays put.
     """
 
     w: np.ndarray
@@ -121,6 +134,8 @@ class SolveContext:
     n_ref_mode: str = "rank"
     epsilon: float = 0.03
     reweight_shares: bool = False
+    topology: Optional[ClusterTopology] = None
+    dead_ranks: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
         w = np.atleast_2d(np.asarray(self.w, dtype=np.float64))
@@ -144,6 +159,18 @@ class SolveContext:
                 self, "slot_budget",
                 normalize_slot_budget(self.slot_budget, self.n_experts,
                                       self.n_ranks))
+        if self.topology is not None \
+                and self.topology.n_ranks != self.n_ranks:
+            raise ValueError(f"topology has {self.topology.n_ranks} ranks "
+                             f"but n_ranks={self.n_ranks}")
+        if self.dead_ranks is not None:
+            dead = tuple(sorted(set(int(g) for g in self.dead_ranks)))
+            if dead and (dead[0] < 0 or dead[-1] >= self.n_ranks):
+                raise ValueError(f"dead_ranks {dead} outside "
+                                 f"[0, {self.n_ranks})")
+            if len(dead) >= self.n_ranks:
+                raise ValueError("cannot mark every rank dead")
+            object.__setattr__(self, "dead_ranks", dead or None)
 
     @property
     def n_layers(self) -> int:
@@ -237,7 +264,45 @@ class _BuiltinPolicy:
 
     def solve(self, ctx: SolveContext) -> ReplicatedPlacement:
         self.validate(ctx)
+        if ctx.dead_ranks:
+            return self._solve_masked(ctx)
         return self._solve(ctx)
+
+    def _solve_masked(self, ctx: SolveContext) -> ReplicatedPlacement:
+        """Solve over the surviving ranks only and re-inflate: dead ranks
+        come back as all-phantom zero-share windows (dispatch sends them
+        nothing), so the global slot-table geometry the engine pinned at
+        init survives the failure whenever the per-rank budget does."""
+        from .placement import default_slots_per_rank
+        dead = set(ctx.dead_ranks)
+        survivors = [g for g in range(ctx.n_ranks) if g not in dead]
+        Gs, E = len(survivors), ctx.n_experts
+        if not self.capabilities.supports_replication and E % Gs:
+            raise ValueError(
+                f"policy {self.name!r} places one expert per slot and "
+                f"cannot spread E={E} experts over {Gs} surviving ranks "
+                f"(E % survivors != 0) — elastic fail-over needs a "
+                f"replication-capable policy (e.g. vibe_r / vibe_h)")
+        if ctx.slot_budget is not None:
+            budget = ctx.slot_budget[survivors]
+        else:
+            # per-rank memory budgets don't change because a peer died:
+            # keep the default budget of the *original* group size, bumped
+            # only if the survivors can no longer hold every expert
+            b = max(default_slots_per_rank(E, ctx.n_ranks),
+                    -(-E // Gs))
+            budget = np.full(Gs, min(b, E), dtype=np.int64)
+        sub = SolveContext(
+            w=ctx.w, n_ranks=Gs,
+            perf_models=(tuple(ctx.perf_models[g] for g in survivors)
+                         if ctx.perf_models is not None else None),
+            slot_budget=(budget if self.capabilities.accepts_slot_budget
+                         else None),
+            n_ref_mode=ctx.n_ref_mode, epsilon=ctx.epsilon,
+            reweight_shares=ctx.reweight_shares,
+            topology=(ctx.topology.mask(sorted(dead))
+                      if ctx.topology is not None else None))
+        return inflate_placement(self._solve(sub), survivors, ctx.n_ranks)
 
     def refine(self, placement: ReplicatedPlacement,
                ctx: SolveContext) -> IncrementalResult:
@@ -338,5 +403,27 @@ class VibeRPolicy(_BuiltinPolicy):
 
     def _solve(self, ctx: SolveContext) -> ReplicatedPlacement:
         return vibe_r_placement(ctx.w, ctx.perf_models,
+                                slots_per_rank=ctx.slot_budget,
+                                n_ref_mode=ctx.n_ref_mode)
+
+
+@register_policy
+class VibeHPolicy(_BuiltinPolicy):
+    """ViBE-H: two-level node-aware solve — experts binned across nodes to
+    minimize cross-node (DCN) token traffic, then the full ViBE-R
+    replication solve within each node against that node's per-rank perf
+    models (see :func:`repro.core.topology.vibe_h_placement`). Without a
+    (multi-node) ``SolveContext.topology`` it delegates to ``vibe_r``
+    exactly. No incremental refine: swap-based refinement is blind to node
+    boundaries, so routing drift triggers a full (cheap, vectorized)
+    re-solve instead."""
+
+    name = "vibe_h"
+    capabilities = PolicyCapabilities(needs_perf_models=True,
+                                      supports_replication=True,
+                                      accepts_slot_budget=True)
+
+    def _solve(self, ctx: SolveContext) -> ReplicatedPlacement:
+        return vibe_h_placement(ctx.w, ctx.perf_models, ctx.topology,
                                 slots_per_rank=ctx.slot_budget,
                                 n_ref_mode=ctx.n_ref_mode)

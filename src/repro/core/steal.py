@@ -109,6 +109,9 @@ class TokenRescheduler:
         self._share: Optional[np.ndarray] = None
         self._w: Optional[np.ndarray] = None
         self._ticks = 0
+        #: (G,) EMA of measured/predicted latency per rank, from
+        #: observe_latency telemetry; None until the first measurement
+        self._lat_bias: Optional[np.ndarray] = None
 
     # ------------------------------------------------------------------
     @property
@@ -132,6 +135,10 @@ class TokenRescheduler:
         self._share = placement.share.copy()
         self._w = None
         self._ticks = 0
+        # drop the measured-latency bias too: a recalibration usually means
+        # the perf models were just refit from the same telemetry, and
+        # keeping the bias would double-count the drift it already absorbed
+        self._lat_bias = None
         self.version += 1
 
     # ------------------------------------------------------------------
@@ -162,13 +169,44 @@ class TokenRescheduler:
         return True
 
     # ------------------------------------------------------------------
+    def observe_latency(self, rank_loads: np.ndarray,
+                        rank_latencies: np.ndarray) -> None:
+        """Blend measured per-rank latencies into the steal trigger.
+
+        ``rank_loads`` / ``rank_latencies`` are (G,) or (L, G) — the same
+        telemetry the virtual clocks feed ``ViBEController.observe_latency``
+        for perf-drift refits. The measured/predicted ratio is EMA-tracked
+        per rank and multiplies :meth:`predicted_latency`, so the trigger
+        (and recipient speed weights) see hardware drift *between* perf
+        refits — e.g. a thermal ramp that f_g, fitted minutes ago, knows
+        nothing about. :meth:`reset` clears the bias: the refit the
+        recalibration just ran absorbed the same drift.
+        """
+        if self._pl is None:
+            return
+        load = np.atleast_2d(np.asarray(rank_loads, dtype=np.float64))
+        lat = np.atleast_2d(np.asarray(rank_latencies, dtype=np.float64))
+        if load.shape != lat.shape or load.shape[-1] != self._pl.n_ranks:
+            raise ValueError(f"latency telemetry shapes {load.shape} / "
+                             f"{lat.shape} do not match G={self._pl.n_ranks}")
+        pred = np.empty_like(load)
+        for g, m in enumerate(self.perf_models):
+            pred[:, g] = m(load[:, g])
+        ratio = (lat / np.maximum(pred, 1e-12)).mean(axis=0)     # (G,)
+        a = self.cfg.smoothing
+        self._lat_bias = ratio if self._lat_bias is None \
+            else a * ratio + (1.0 - a) * self._lat_bias
+
     def predicted_latency(self, w: np.ndarray) -> np.ndarray:
         """(L, G) per-rank predicted latency f_g(load) under the current
-        responsive shares — the steal trigger's signal."""
+        responsive shares — the steal trigger's signal. Scaled by the
+        measured/predicted bias when latency telemetry has been observed."""
         load = self._pl_with(self._share).rank_loads(w)
         lat = np.empty_like(load)
         for g, m in enumerate(self.perf_models):
             lat[:, g] = m(load[:, g])
+        if self._lat_bias is not None:
+            lat = lat * self._lat_bias[None, :]
         return lat
 
     def _pl_with(self, share: np.ndarray) -> ReplicatedPlacement:

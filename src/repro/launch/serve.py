@@ -26,13 +26,13 @@ import numpy as np
 from repro.configs import get_smoke
 from repro.core import (DriftConfig, PerfDriftConfig, SCENARIOS, StealConfig,
                         ViBEConfig, ViBEController, default_slots_per_rank,
-                        get_policy, make_cluster, make_scenario,
+                        get_policy, make_cluster, make_scenario, parse_topology,
                         registered_policies)
 from repro.models import moe_perm_shape
 from repro.serving import (Engine, EngineConfig, KVCacheConfig,
                            SchedulerConfig, TRACES, WORKLOADS,
-                           registered_schedulers, sample_requests,
-                           sample_trace, summarize)
+                           registered_schedulers, run_with_failure,
+                           sample_requests, sample_trace, summarize)
 
 __all__ = ["serve", "derive_slot_budget", "main"]
 
@@ -92,7 +92,10 @@ def serve(arch: str, *, policy: str = "vibe", n_requests: int = 12,
           variability_scenario: str = "none",
           scenario_start: float = 0.0, scenario_duration: float = 2.0,
           perf_drift_delta: float = 0.0, steal: bool = False,
-          steal_headroom: float = 0.1, seed: int = 0):
+          steal_headroom: float = 0.1, topology: Optional[str] = None,
+          fail_rank: int = -1, fail_at_step: int = 5, seed: int = 0):
+    """Returns ``(engine, records, fail_report)``; ``fail_report`` is None
+    unless ``fail_rank >= 0`` ran the elasticity drill."""
     cfg = get_smoke(arch)
     if not cfg.is_moe:
         raise SystemExit(f"{arch} has no MoE layers — ViBE serving n/a")
@@ -109,6 +112,15 @@ def serve(arch: str, *, policy: str = "vibe", n_requests: int = 12,
                            experts_per_rank=max(n_slots // ranks, 1),
                            seed=seed, events=events)
     perf = cluster.fit_models()                    # Phase 1: profiling (t=0)
+    topo = None
+    if topology:
+        # fleet topology spec ("2x4" = 2 nodes x 4 devices, "8" = flat):
+        # threads into the solver (vibe_h node binning) and both pricing
+        # paths (migration / broadcast costs see the ICI/DCN asymmetry)
+        topo = parse_topology(topology, ici_bw=cluster.ici_bw)
+        if topo.n_ranks != ranks:
+            raise SystemExit(f"topology {topology!r} has {topo.n_ranks} "
+                             f"ranks but the engine runs {ranks}")
     expert_bytes = 3 * cfg.d_model * cfg.moe_d_ff * 2
     # replication-capable policies honour a per-rank physical slot budget
     # derived from device memory telemetry (paper §5.1's non-uniform
@@ -128,7 +140,8 @@ def serve(arch: str, *, policy: str = "vibe", n_requests: int = 12,
                    expert_bytes=expert_bytes,
                    slot_budget=budget,
                    steal=(StealConfig(headroom=steal_headroom)
-                          if steal else None)))
+                          if steal else None),
+                   topology=topo))
     # weighted_routing threads the vibe_r solver's per-copy traffic shares
     # into the dispatch tables (share-weighted replica routing); disabling
     # it keeps the legacy uniform split for A/B comparison.
@@ -138,7 +151,8 @@ def serve(arch: str, *, policy: str = "vibe", n_requests: int = 12,
         scheduler=SchedulerConfig(name=scheduler,
                                   prefill_chunk=prefill_chunk),
         kv=(KVCacheConfig(block_size=block_size, n_blocks=kv_blocks)
-            if kv_blocks else None))
+            if kv_blocks else None),
+        topology=topo)
     engine = Engine(cfg, econfig, controller=controller, cluster=cluster)
     if workload in TRACES:
         reqs = sample_trace(TRACES[workload], n_requests, qps=qps, seed=seed)
@@ -149,9 +163,14 @@ def serve(arch: str, *, policy: str = "vibe", n_requests: int = 12,
                                 output_len=min(r.output_len,
                                                max_seq // 2 - 1))
             for r in reqs]
+    if fail_rank >= 0:
+        # elasticity drill: kill a rank mid-traffic, serve through it
+        records, report = run_with_failure(engine, reqs, fail_rank,
+                                           at_step=fail_at_step)
+        return engine, records, report
     engine.submit(reqs)
     records = engine.run()
-    return engine, records
+    return engine, records, None
 
 
 def main() -> int:
@@ -221,6 +240,17 @@ def main() -> int:
                     help="steal only when the hottest rank's predicted "
                          "latency exceeds the fleet mean by this relative "
                          "margin (default 0.1)")
+    ap.add_argument("--topology", default=None,
+                    help="fleet topology spec: 'KxD' (K nodes x D devices, "
+                         "ICI within a node, ~8x-slower DCN between nodes) "
+                         "or 'G' (flat). Threads into the solver (vibe_h "
+                         "bins experts by node) and the virtual clock's "
+                         "migration/broadcast pricing")
+    ap.add_argument("--fail-rank", type=int, default=-1,
+                    help="elasticity drill: kill this EP rank after a few "
+                         "engine steps — drain its lanes, mask it out of "
+                         "the solve, remap onto the survivors, re-admit "
+                         "(-1 = no failure)")
     ap.add_argument("--perf-drift-delta", type=float, default=0.0,
                     help="enable online performance-drift recalibration: "
                          "refit f_g and re-solve when any rank's windowed "
@@ -228,7 +258,7 @@ def main() -> int:
                          "(0 = routing-only recalibration, the default)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    engine, records = serve(args.arch, policy=args.policy,
+    engine, records, report = serve(args.arch, policy=args.policy,
                             n_requests=args.requests, qps=args.qps,
                             workload=args.workload, regime=args.regime,
                             max_batch=args.max_batch, max_seq=args.max_seq,
@@ -246,6 +276,8 @@ def main() -> int:
                             perf_drift_delta=args.perf_drift_delta,
                             steal=args.steal,
                             steal_headroom=args.steal_headroom,
+                            topology=args.topology,
+                            fail_rank=args.fail_rank,
                             seed=args.seed)
     s = summarize(records)
     st = engine.stats
@@ -272,6 +304,20 @@ def main() -> int:
     print(f"[serve] recalibrations: {st.migrations}{by_kind}, migrated slots "
           f"{st.migrated_slots}, bytes {st.migration_bytes}, dropped "
           f"assignments {st.dropped_assignments:.0f}")
+    if report is not None:
+        finished = sum(1 for r in records if np.isfinite(r.finished_at))
+        print(f"[serve] failure drill: rank {report.rank} died at "
+              f"t={report.at_time:.3f}s — drained "
+              f"{report.drained_prefills} prefills / "
+              f"{report.drained_decodes} decodes, "
+              f"{report.redone_tokens} tokens redone, "
+              f"{report.moved_experts} expert slots remapped; "
+              f"{finished}/{len(records)} requests completed, "
+              f"KV blocks in use after drain: {engine.kv.used_blocks}")
+        if finished < len(records) or engine.kv.used_blocks != 0:
+            print("[serve] FAILURE DRILL FAILED: incomplete requests or "
+                  "leaked KV blocks")
+            return 1
     if args.steal:
         rs = engine.controller.rescheduler
         print(f"[serve] stealing: {st.steal_updates} share updates "

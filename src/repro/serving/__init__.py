@@ -5,10 +5,11 @@
 # by the paged KV cache (kvcache.py).
 from .config import (EngineConfig, KVCacheConfig, SchedulerConfig,
                      ServingConfig, SimConfig)
+from .elastic import FailureReport, fail_rank, run_with_failure
 from .engine import Engine, EngineStats
 from .kvcache import BlockAllocator, PagedKVCache
-from .metrics import PAPER_SLOS, SLO, RequestRecord, goodput, slo_frontier, \
-    summarize
+from .metrics import PAPER_SLOS, SLO, RequestRecord, goodput, per_tenant_ttft, \
+    slo_frontier, summarize
 from .scheduler import (Action, Chunk, RequestView, Scheduler,
                         SchedulerContext, UnknownSchedulerError,
                         get_scheduler, register_scheduler,
@@ -24,9 +25,10 @@ __all__ = [
     "EngineConfig", "KVCacheConfig", "SchedulerConfig", "ServingConfig",
     "SimConfig",
     "Engine", "EngineStats",
+    "FailureReport", "fail_rank", "run_with_failure",
     "BlockAllocator", "PagedKVCache",
-    "PAPER_SLOS", "SLO", "RequestRecord", "goodput", "slo_frontier",
-    "summarize",
+    "PAPER_SLOS", "SLO", "RequestRecord", "goodput", "per_tenant_ttft",
+    "slo_frontier", "summarize",
     "Action", "Chunk", "RequestView", "Scheduler", "SchedulerContext",
     "UnknownSchedulerError", "get_scheduler", "register_scheduler",
     "registered_schedulers",

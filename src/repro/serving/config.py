@@ -102,6 +102,11 @@ class ServingConfig:
     capacity_factor: float = 1.25    # bucket sizing for moe_impl="capacity"
     seed: int = 0
     scheduler: Optional[SchedulerConfig] = None   # None = legacy loop/fcfs
+    topology: Optional["ClusterTopology"] = None
+    # fleet topology (repro.core.topology): when set, both virtual clocks
+    # price a2a / migration / steal-broadcast traffic through the two-level
+    # ICI/DCN model instead of the flat ici_bw divide. None keeps the
+    # legacy flat pricing bit-identical.
 
     def __post_init__(self):
         if self.max_batch < 1:

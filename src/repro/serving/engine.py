@@ -170,6 +170,10 @@ class Engine:
                              "(ViBEConfig.steal) but weighted_routing is "
                              "False — stolen shares would never reach "
                              "dispatch")
+        if config.topology is not None and controller is not None \
+                and config.topology.n_ranks != controller.G:
+            raise ValueError(f"topology has {config.topology.n_ranks} ranks "
+                             f"but the controller has {controller.G}")
         self._steal_version = 0
         if controller is not None:
             self._apply_perm(self._controller_perm(), charge=False)
@@ -293,8 +297,16 @@ class Engine:
             if self.cluster is not None:
                 # the weight transfer stalls serving: charge it to the
                 # virtual clock so engine-measured TTFT/TPOT see the same
-                # migration stalls the simulator models (sim.migration_stalls)
-                self.stats.virtual_time += moved_bytes / self.cluster.ici_bw
+                # migration stalls the simulator models (sim.migration_stalls).
+                # A configured topology prices the cross-node fraction at
+                # DCN bandwidth (flat topology degenerates to the same
+                # divide); the engine serializes migrations on one link.
+                topo = self.config.topology
+                if topo is not None:
+                    self.stats.virtual_time += topo.migration_cost(moved_bytes)
+                else:
+                    self.stats.virtual_time += \
+                        moved_bytes / self.cluster.ici_bw
         return moved_total
 
     def _observe(self, tallies: np.ndarray, tokens: float) -> None:
@@ -331,8 +343,13 @@ class Engine:
         self._sync_steal_version()
         self.stats.steal_updates += 1
         if self.cluster is not None:
-            self.stats.virtual_time += \
-                rs.share_table_bytes / self.cluster.ici_bw
+            topo = self.config.topology
+            if topo is not None:
+                self.stats.virtual_time += \
+                    topo.broadcast_cost(rs.share_table_bytes)
+            else:
+                self.stats.virtual_time += \
+                    rs.share_table_bytes / self.cluster.ici_bw
 
     def _controller_tallies(self, tallies: np.ndarray) -> np.ndarray:
         """Pad router tallies (logical experts) to the controller's width.
@@ -476,7 +493,8 @@ class Engine:
                     f"pool admits at most {self.kv.config.n_blocks - floor}")
             self.waiting.append(r)
             self.records[r.req_id] = RequestRecord(
-                r.req_id, r.arrival, r.prompt_len, r.output_len)
+                r.req_id, r.arrival, r.prompt_len, r.output_len,
+                tenant=r.tenant)
 
     def _lane_free(self, b: int) -> bool:
         if self.slot_req[b] is not None:
@@ -622,7 +640,11 @@ class Engine:
         self.slot_req[st.lane] = r
         self.slot_left[st.lane] = r.output_len - 1
         rec = self.records[r.req_id]
-        rec.first_token_at = self.stats.virtual_time
+        if not np.isfinite(rec.first_token_at):
+            # a re-admitted request (rank failure re-prefilled it) keeps
+            # its original first-token time — TTFT measures the first
+            # byte the client saw, not the recovery replay
+            rec.first_token_at = self.stats.virtual_time
         if r.output_len <= 1:
             rec.finished_at = self.stats.virtual_time
             self._release(st.lane)

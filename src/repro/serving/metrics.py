@@ -13,7 +13,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 __all__ = ["SLO", "RequestRecord", "summarize", "goodput", "slo_frontier",
-           "PAPER_SLOS"]
+           "per_tenant_ttft", "PAPER_SLOS"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,6 +39,7 @@ class RequestRecord:
     output_len: int
     first_token_at: float = float("nan")
     finished_at: float = float("nan")
+    tenant: str = ""               # workload tenant tag ("" = untagged)
 
     @property
     def ttft(self) -> float:
@@ -69,6 +70,23 @@ def summarize(records: Sequence[RequestRecord]) -> Dict[str, float]:
         "tpot_p50": _pct(tpot, 50), "tpot_p90": _pct(tpot, 90),
         "tpot_p99": _pct(tpot, 99),
     }
+
+
+def per_tenant_ttft(records: Sequence[RequestRecord],
+                    percentile: float = 90.0) -> Dict[str, float]:
+    """Per-tenant TTFT percentile — the multi-tenant fairness view.
+
+    Groups records by their ``tenant`` tag and reports the requested TTFT
+    percentile per group (unfinished requests, NaN TTFT, are excluded the
+    same way :func:`summarize` excludes them). The aggregation is a pure
+    function of each tenant's TTFT *multiset*, so it is invariant to
+    record order — pinned by a property test."""
+    by_tenant: Dict[str, List[float]] = {}
+    for r in records:
+        if np.isfinite(r.ttft):
+            by_tenant.setdefault(r.tenant, []).append(r.ttft)
+    return {t: _pct(np.array(xs), percentile)
+            for t, xs in by_tenant.items()}
 
 
 def goodput(records: Sequence[RequestRecord], slo: SLO) -> float:

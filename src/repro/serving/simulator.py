@@ -222,6 +222,13 @@ class EPSimulator:
         self.dropped_assignments = 0.0   # capacity-bucket overflow (moe_impl)
         self.steps = 0
         self.migration_stalls: List[Tuple[float, float, int]] = []
+        # hierarchical a2a accounting (cfg.topology set + multi-node):
+        # cumulative dispatch+combine bytes by link class
+        self.ici_bytes = 0.0
+        self.dcn_bytes = 0.0
+        if sim.topology is not None and sim.topology.n_ranks != self.G:
+            raise ValueError(f"topology has {sim.topology.n_ranks} ranks "
+                             f"but ep_degree is {self.G}")
         self.expert_bytes = (3 * model.d_model * model.moe_d_ff * 2
                              if model.moe_d_ff else 0)
         # dispatch-time work stealing (controller.rescheduler): track the
@@ -284,6 +291,34 @@ class EPSimulator:
                           * (self.G - 1) / (self.G * self.G))
         return 2.0 * bytes_per_rank / bw + self.cluster.t_base
 
+    def _hier_a2a(self, pl, loads: np.ndarray) -> float:
+        """Topology-priced all-to-all across all L MoE layers.
+
+        Splits each rank's incoming tokens into intra-node (ICI) and
+        cross-node (DCN) components via
+        :meth:`ClusterTopology.node_split_loads` — the node-preferring
+        dispatch model — and prices each class at its own link bandwidth.
+        Per layer the exchange completes when the slowest rank does;
+        dispatch + combine doubles the traffic. Also accumulates the
+        cumulative byte split (``ici_bytes`` / ``dcn_bytes``) — the
+        fig15_hier gate's metric.
+        """
+        topo = self.cfg.topology
+        bpt = self.model.d_model * self.cfg.act_bytes   # bytes/routed token
+        local_in, cross_in = topo.node_split_loads(
+            pl, np.atleast_2d(np.asarray(loads, dtype=np.float64)))
+        D = topo.rank_node_sizes.astype(np.float64)[None, :]     # (1, G)
+        # incoming local tokens: (D-1)/D of them crossed an ICI link (the
+        # rest originated on the receiving rank itself); cross-node tokens
+        # all rode the DCN
+        ici_b = local_in * (D - 1.0) / D * bpt                   # (L, G)
+        dcn_b = cross_in * bpt
+        per_rank = ici_b / topo.ici_bw + dcn_b / topo.dcn_bw
+        self.ici_bytes += 2.0 * float(ici_b.sum())
+        self.dcn_bytes += 2.0 * float(dcn_b.sum())
+        hop = self.cluster.t_base + topo.dcn_latency
+        return float((2.0 * per_rank.max(axis=1) + hop).sum())
+
     def _capacity_rank_loads(self, pl, loads: np.ndarray,
                              tokens: int) -> np.ndarray:
         """Fixed-bucket (moe_impl="capacity") compute pricing.
@@ -342,7 +377,11 @@ class EPSimulator:
             self.layer_stats.append(LayerStats(rank_time, rank_load))
         self.steps += 1
 
-        t = moe_t + self.L * self._a2a_time(tokens)
+        topo = self.cfg.topology
+        if topo is not None and not topo.is_flat:
+            t = moe_t + self._hier_a2a(pl, loads)
+        else:
+            t = moe_t + self.L * self._a2a_time(tokens)
         t += self.model.n_layers * self._attn_time(tokens, ctx)
         t += self.cfg.step_overhead
 
@@ -379,8 +418,12 @@ class EPSimulator:
                 # share-only steal update: the fleet syncs just the new
                 # CDF table — no weights move (a recalibration's migration
                 # stall already covers its own table rebuild)
-                bw = self.cfg.ici_bw or self.cluster.ici_bw
-                stall += rs.share_table_bytes / bw
+                topo = self.cfg.topology
+                if topo is not None:
+                    stall += topo.broadcast_cost(rs.share_table_bytes)
+                else:
+                    bw = self.cfg.ici_bw or self.cluster.ici_bw
+                    stall += rs.share_table_bytes / bw
                 self.steal_updates += 1
             self._steal_version = rs.version
         return stall
@@ -390,9 +433,16 @@ class EPSimulator:
         recalibration, or 0.0 when none fired."""
         if upd is None:
             return 0.0
-        bw = self.cfg.ici_bw or self.cluster.ici_bw
-        stall = (self.cfg.migration_overhead
-                 + upd.moved_experts * self.expert_bytes / (self.G * bw))
+        moved_bytes = upd.moved_experts * self.expert_bytes
+        topo = self.cfg.topology
+        if topo is not None:
+            # G concurrent links; flat degenerate = bytes / (G * ici_bw),
+            # exactly the legacy divide below
+            xfer = topo.migration_cost(moved_bytes, parallel_links=self.G)
+        else:
+            bw = self.cfg.ici_bw or self.cluster.ici_bw
+            xfer = moved_bytes / (self.G * bw)
+        stall = self.cfg.migration_overhead + xfer
         self.migration_stalls.append((stall, float(tokens),
                                       upd.moved_experts))
         return stall
@@ -418,7 +468,8 @@ class EPSimulator:
             return self._run_scheduled(requests, phase, drift_profile,
                                        drift_at)
         recs = {r.req_id: RequestRecord(r.req_id, r.arrival, r.prompt_len,
-                                        r.output_len) for r in requests}
+                                        r.output_len, tenant=r.tenant)
+                for r in requests}
         arrivals = collections.deque(sorted(requests, key=lambda r: r.arrival))
         waiting: collections.deque = collections.deque()
         running: List[List] = []      # [req, tokens_left, ctx]
@@ -495,7 +546,8 @@ class EPSimulator:
         scheduler = get_scheduler(sched_cfg.name)
         kv = PagedKVCache(self.cfg.kv) if self.cfg.kv is not None else None
         recs = {r.req_id: RequestRecord(r.req_id, r.arrival, r.prompt_len,
-                                        r.output_len) for r in requests}
+                                        r.output_len, tenant=r.tenant)
+                for r in requests}
         by_id = {r.req_id: r for r in requests}
         arrivals = collections.deque(sorted(requests,
                                             key=lambda r: r.arrival))

@@ -171,7 +171,7 @@ class TestSloAcceptance:
         serving core on: slo_edf + chunked prefill + bursty trace +
         thermal-ramp hardware drift + perf-model refresh."""
         from repro.launch.serve import serve
-        engine, records = serve(
+        engine, records, _ = serve(
             ARCH, policy="vibe_r", n_requests=8, workload="bursty",
             scheduler="slo_edf", prefill_chunk=12, max_seq=96,
             variability_scenario="thermal-ramp", scenario_start=0.0,

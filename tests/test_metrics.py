@@ -1,0 +1,92 @@
+"""serving/metrics.py: summarize, goodput, and per-tenant TTFT
+aggregation (including the permutation-invariance property)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving import SLO, goodput, per_tenant_ttft, summarize
+from repro.serving.metrics import RequestRecord
+
+
+def _rec(i, ttft, tenant="", n_out=5, tpot=0.01):
+    r = RequestRecord(i, 0.0, 10, n_out, tenant=tenant)
+    r.first_token_at = ttft
+    r.finished_at = ttft + (n_out - 1) * tpot
+    return r
+
+
+class TestSummarize:
+    def test_percentiles_and_counts(self):
+        recs = [_rec(i, ttft=0.1 * (i + 1)) for i in range(10)]
+        s = summarize(recs)
+        assert s["n"] == 10
+        assert s["ttft_p50"] == pytest.approx(0.55)
+        assert s["ttft_p90"] == pytest.approx(np.percentile(
+            [0.1 * (i + 1) for i in range(10)], 90))
+        assert s["tpot_p50"] == pytest.approx(0.01)
+
+    def test_unfinished_requests_excluded_from_tails(self):
+        recs = [_rec(i, ttft=0.1) for i in range(4)]
+        recs.append(RequestRecord(99, 0.0, 10, 5))      # never started
+        s = summarize(recs)
+        assert s["n"] == 5
+        # the unstarted request's NaN must not poison the percentiles
+        assert np.isfinite(s["ttft_p90"])
+        assert s["ttft_p50"] == pytest.approx(0.1)
+
+
+class TestPerTenantTTFT:
+    def test_groups_by_tenant(self):
+        recs = ([_rec(i, 0.1, tenant="chat") for i in range(5)]
+                + [_rec(10 + i, 0.8, tenant="batch") for i in range(5)])
+        out = per_tenant_ttft(recs)
+        assert set(out) == {"chat", "batch"}
+        assert out["chat"] == pytest.approx(0.1)
+        assert out["batch"] == pytest.approx(0.8)
+
+    def test_unstarted_requests_excluded(self):
+        recs = [_rec(0, 0.2, tenant="a"), RequestRecord(1, 0.0, 10, 5,
+                                                        tenant="a")]
+        out = per_tenant_ttft(recs)
+        assert out["a"] == pytest.approx(0.2)
+
+    def test_tenant_with_no_finished_requests_absent(self):
+        recs = [_rec(0, 0.2, tenant="a"),
+                RequestRecord(1, 0.0, 10, 5, tenant="ghost")]
+        assert set(per_tenant_ttft(recs)) == {"a"}
+
+    def test_percentile_parameter(self):
+        recs = [_rec(i, float(i), tenant="t") for i in range(11)]
+        assert per_tenant_ttft(recs, percentile=50.0)["t"] \
+            == pytest.approx(5.0)
+
+    @settings(max_examples=30, deadline=None)
+    @given(ttfts=st.lists(st.floats(0.001, 10.0), min_size=1, max_size=24),
+           tenant_ids=st.lists(st.integers(0, 3), min_size=1, max_size=24),
+           seed=st.integers(0, 1000))
+    def test_permutation_invariant(self, ttfts, tenant_ids, seed):
+        """Aggregation must not depend on record arrival order: shuffling
+        the record list leaves every tenant's percentile unchanged."""
+        n = min(len(ttfts), len(tenant_ids))
+        recs = [_rec(i, ttfts[i], tenant=f"t{tenant_ids[i]}")
+                for i in range(n)]
+        base = per_tenant_ttft(recs)
+        rng = np.random.default_rng(seed)
+        shuffled = [recs[j] for j in rng.permutation(n)]
+        out = per_tenant_ttft(shuffled)
+        assert set(out) == set(base)
+        for t in base:
+            assert out[t] == pytest.approx(base[t], rel=1e-12)
+
+
+class TestGoodput:
+    def test_both_slo_arms_enforced(self):
+        recs = [_rec(0, 0.1, tpot=0.01), _rec(1, 0.9, tpot=0.01),
+                _rec(2, 0.1, tpot=0.5)]
+        assert goodput(recs, SLO(ttft=0.5, tpot=0.05)) \
+            == pytest.approx(1 / 3)
+        assert goodput(recs, SLO(ttft=1e9, tpot=1e9)) == 1.0
+
+    def test_empty_records(self):
+        assert goodput([], SLO(ttft=1.0, tpot=1.0)) == 0.0

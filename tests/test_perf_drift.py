@@ -167,6 +167,49 @@ class TestZeroKnotAnchor:
             or not np.allclose(m2.knots, prior.knots)
 
 
+class TestStressAwareRefit:
+    """Narrow-window refits distinguish the two physical drifts: a power
+    cap (DVFS) divides the whole kernel — flat observed/predicted ratio →
+    multiplicative rescale — while a stress-gated deviation inflates only
+    the load-dependent region → floor-preserving shape refit."""
+
+    def _prior(self):
+        return fit_perf_model(DeviceProfile(
+            0, np.array([64.0, 1024, 4096, 16384]),
+            np.array([1e-3, 2e-3, 6e-3, 2.2e-2])))
+
+    def test_power_cap_rescales_whole_curve(self):
+        """Regression (power-cap): a capped rank under near-saturated
+        load must come back as prior * factor — knots untouched, and the
+        decode-scale floor scaled too, because the cap slows the whole
+        kernel, not just the high-load region."""
+        prior = self._prior()
+        rng = np.random.default_rng(0)
+        n = rng.uniform(12_000, 16_000, 16)      # span < min_span
+        m = refit_from_samples(n, np.asarray(prior(n)) * 1.4, prior=prior)
+        np.testing.assert_allclose(m.knots, prior.knots)
+        np.testing.assert_allclose(m.lat, prior.lat * 1.4, rtol=1e-9)
+        assert float(m(0)) == pytest.approx(float(prior(0)) * 1.4,
+                                            rel=1e-6)
+
+    def test_deviation_preserves_floor(self):
+        """A load-dependent inflation (ratio rising with load) must NOT
+        drag the memory-bound floor up: lat' = floor + k*(prior - floor)."""
+        prior = self._prior()
+        floor = float(prior.lat[0])
+        rng = np.random.default_rng(1)
+        n = rng.uniform(520, 2040, 24)           # span ~3.9 < min_span,
+        pred = np.asarray(prior(n))              # floor is ~1/2 of pred
+        m = refit_from_samples(n, floor + (pred - floor) * 1.8,
+                               prior=prior)
+        np.testing.assert_allclose(m.knots, prior.knots)
+        np.testing.assert_allclose(m.lat, floor + 1.8 * (prior.lat - floor),
+                                   rtol=1e-9)
+        # low-load predictions untouched by a drift that never hit them
+        assert float(m(0)) == pytest.approx(floor, rel=1e-9)
+        assert float(m(64)) == pytest.approx(float(prior(64)), rel=1e-9)
+
+
 class TestPerfDriftDetector:
     def _setup(self, **cfg):
         cl = _throttled_cluster(magnitude=0.35, t0=0.0, duration=0.5)

@@ -214,6 +214,91 @@ def test_steal_moves_share_toward_faster_ranks():
 
 
 # ---------------------------------------------------------------------------
+# measured-latency telemetry (thermal ramp between refits)
+# ---------------------------------------------------------------------------
+
+class TestLatencyTelemetry:
+    """Measured per-rank latencies blended into the steal trigger: a rank
+    running hot shows up as bias > 1 even when the (stale) f_g models say
+    the fleet is uniform, so stealing reacts between perf refits."""
+
+    def _fixture(self):
+        # stale models: uniform fleet. slots_per_rank=8 doubles every
+        # expert, so share can always leave a hot rank
+        perf = affine_perf([2e-8] * 4)
+        w0 = np.full((2, 16), 1000.0)
+        rp = vibe_r_placement(w0, perf, slots_per_rank=8)
+        rs = TokenRescheduler(StealConfig(headroom=0.05, smoothing=1.0),
+                              perf)
+        rs.reset(rp)
+        return perf, w0, rp, rs
+
+    def test_thermal_ramp_bias_triggers_steal(self):
+        perf, w0, rp, rs = self._fixture()
+        # control: balanced load + models in agreement → no trigger
+        assert not rs.observe(w0)
+        # thermal ramp the models know nothing about: rank 3 measures
+        # 2.5x its prediction
+        loads = rp.rank_loads(w0)[0]
+        meas = np.array([float(m(l)) for m, l in zip(perf, loads)])
+        meas[3] *= 2.5
+        rs.observe_latency(loads, meas)
+        assert rs._lat_bias is not None
+        assert rs._lat_bias[3] == pytest.approx(2.5, rel=1e-6)
+        np.testing.assert_allclose(rs._lat_bias[:3], 1.0, rtol=1e-6)
+        # the same balanced load now looks like a straggler → steal fires
+        # and share leaves the hot rank
+        assert rs.observe(w0)
+        assert rs.steals == 1 and rs.share_moved > 0.0
+        rank_of = np.arange(rp.n_slots) // rp.slots_per_rank
+        d = rs.placement.share - rp.share
+        assert d[:, rank_of == 3].sum() < 0.0
+        # without telemetry the identical sequence never fires (control)
+        _, _, _, rs2 = self._fixture()
+        assert not rs2.observe(w0) and not rs2.observe(w0)
+
+    def test_ema_smoothing_and_reset(self):
+        perf, w0, rp, _ = self._fixture()
+        rs = TokenRescheduler(StealConfig(headroom=0.05, smoothing=0.5),
+                              perf)
+        rs.reset(rp)
+        loads = rp.rank_loads(w0)[0]
+        meas = np.array([float(m(l)) for m, l in zip(perf, loads)])
+        rs.observe_latency(loads, meas * 2.0)
+        rs.observe_latency(loads, meas)            # ratio 1 EMAs back down
+        np.testing.assert_allclose(rs._lat_bias, 1.5, rtol=1e-6)
+        # reset clears the bias — the recalibration's refit absorbed the
+        # same drift; keeping it would double-count
+        rs.reset(rp)
+        assert rs._lat_bias is None
+
+    def test_shape_mismatch_raises(self):
+        perf, w0, rp, rs = self._fixture()
+        with pytest.raises(ValueError, match="telemetry shapes"):
+            rs.observe_latency(np.ones(3), np.ones(3))
+        with pytest.raises(ValueError, match="telemetry shapes"):
+            rs.observe_latency(np.ones(4), np.ones((2, 4)))
+
+    def test_controller_feeds_rescheduler_without_perf_drift(self):
+        """observe_latency retunes the steal trigger even when perf-drift
+        refits are disabled — stealing covers the gap between refits."""
+        L, E, G = 2, 16, 4
+        perf = affine_perf([2e-8] * G)
+        ctl = ViBEController(
+            L, E, G, perf,
+            ViBEConfig(policy="vibe_r", adaptive=False,
+                       steal=StealConfig(headroom=0.05, smoothing=1.0),
+                       drift=DriftConfig(window=8, interval=4, cooldown=4)),
+            initial_w=np.full((L, E), 1000.0))
+        loads = ctl.placement.rank_loads(np.full((L, E), 1000.0))[0]
+        meas = np.array([float(m(l)) for m, l in zip(perf, loads)])
+        meas[1] *= 3.0
+        assert ctl.observe_latency(loads, meas) is None   # no refit path
+        assert ctl.rescheduler._lat_bias is not None
+        assert ctl.rescheduler._lat_bias[1] > 2.0
+
+
+# ---------------------------------------------------------------------------
 # controller lifecycle
 # ---------------------------------------------------------------------------
 

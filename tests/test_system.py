@@ -102,7 +102,7 @@ def test_hlo_parser_trip_count_exact():
 
 def test_serve_driver_end_to_end():
     from repro.launch.serve import serve
-    engine, records = serve("qwen3-moe-235b-a22b", policy="vibe",
+    engine, records, _ = serve("qwen3-moe-235b-a22b", policy="vibe",
                             n_requests=3, qps=100.0, max_batch=2,
                             max_seq=48)
     done = [r for r in records if np.isfinite(r.finished_at)]
