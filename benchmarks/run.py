@@ -33,7 +33,8 @@ import traceback
 from . import (bench_fig1_imbalance, bench_fig3_breakdown,
                bench_fig4_tokendist, bench_fig6_assignment, bench_fig8_slo,
                bench_fig10_gap, bench_fig11_drift, bench_fig13_sensitivity,
-               bench_fig15_scaling, bench_kernels, bench_placement_solve)
+               bench_fig15_scaling, bench_fig_chaos, bench_kernels,
+               bench_placement_solve)
 
 HARNESSES = {
     "fig1": bench_fig1_imbalance.run,
@@ -47,6 +48,7 @@ HARNESSES = {
     "fig13": bench_fig13_sensitivity.run,
     "fig15": bench_fig15_scaling.run,
     "fig15_hier": bench_fig15_scaling.run_hier,
+    "fig_chaos": bench_fig_chaos.run,
     "placement": bench_placement_solve.run,
     "kernels": bench_kernels.run,
 }
@@ -68,6 +70,11 @@ CHECK_SPECS = {
     # 2-level topology without regressing simulated P90 TTFT (ratios > 1)
     "fig15_hier": ("fig15_hier", ("dcn_reduction_x", "ttft_ratio"),
                    "quality"),
+    # chaos drill: degraded-mode goodput under the seeded
+    # fail/stall/dcn/recover schedule must stay above the committed
+    # baseline (recovery keeps restoring service); the healthy arm's
+    # paper-SLO goodput pins the no-fault cost of the injection machinery
+    "fig_chaos": ("fig_chaos", ("goodput", "goodput_degraded"), "quality"),
 }
 #: fail --check when fresh wall-clock exceeds baseline by more than this;
 #: override with BENCH_CHECK_TOL (e.g. a noisy shared CI runner may need

@@ -8,7 +8,7 @@ from .incremental import (IncrementalResult, SlotSwap, Swap,
                           incremental_update, incremental_update_replicated)
 from .perf_model import (DeviceProfile, PerfModel, TelemetryBuffer,
                          fit_perf_model, profile_device, refit_from_samples)
-from .placement import (Placement, ReplicatedPlacement,
+from .placement import (Placement, ReplicatedPlacement, compact_placement,
                         contiguous_placement, default_slots_per_rank,
                         eplb_placement, gem_placement, harmoeny_placement,
                         inflate_placement, layer_latency_span,
@@ -35,7 +35,8 @@ __all__ = [
     "incremental_update_replicated",
     "DeviceProfile", "PerfModel", "TelemetryBuffer", "fit_perf_model",
     "profile_device", "refit_from_samples",
-    "Placement", "ReplicatedPlacement", "contiguous_placement",
+    "Placement", "ReplicatedPlacement", "compact_placement",
+    "contiguous_placement",
     "default_slots_per_rank", "eplb_placement", "gem_placement",
     "harmoeny_placement", "inflate_placement", "layer_latency_span",
     "normalize_slot_budget",

@@ -318,13 +318,45 @@ class ViBEController:
                 raise ValueError(f"rank {g} outside [0, {self.G})")
         if len(dead_set) >= self.G:
             raise ValueError("cannot mask every rank — no survivors")
+        return self._set_dead(dead_set, FailEvent(dead_set, kind="fail"))
+
+    def unmask_ranks(self, ranks: Sequence[int]) -> PlacementUpdate:
+        """Bring recovered ranks back into the fleet (elastic *grow*, the
+        inverse of :meth:`mask_ranks` — ``serving/elastic.recover_rank``
+        routes rank-recovery events here).
+
+        ``ranks`` are the ranks to unmask; each must currently be dead.
+        The re-solve is full over the enlarged survivor set, so traffic
+        shares flow back onto the recovered ranks and the weight
+        rehydration shows up as ``moved_experts``/``migration_bytes`` on
+        the returned update (event kind ``"recover"``). A fail→recover
+        round trip with no interleaved observations restores the healthy
+        placement bit-identically (pinned by property test).
+        """
+        up_set = tuple(sorted(set(int(g) for g in ranks)))
+        if not up_set:
+            raise ValueError("no ranks to unmask")
+        dead = set(self.dead_ranks)
+        for g in up_set:
+            if not 0 <= g < self.G:
+                raise ValueError(f"rank {g} outside [0, {self.G})")
+            if g not in dead:
+                raise ValueError(f"rank {g} is not dead — nothing to unmask")
+        new_dead = tuple(sorted(dead - set(up_set)))
+        return self._set_dead(new_dead, FailEvent(up_set, kind="recover"))
+
+    def _set_dead(self, dead_set: Tuple[int, ...],
+                  event: FailEvent) -> PlacementUpdate:
+        """Shared rank-lifecycle transition: install the new dead set,
+        full re-solve over the survivors, account the migration, reset the
+        rescheduler and cool down both drift monitors."""
         self.dead_ranks = dead_set
         w = self.profiler.window_matrix()
         old = self.placement
         new = self._solve(w)
         moved = new.moved_experts(old)
         upd = PlacementUpdate(
-            step=self._step, event=FailEvent(dead_set), placement=new,
+            step=self._step, event=event, placement=new,
             moved_experts=moved,
             migration_bytes=moved * self.cfg.expert_bytes,
             full_resolve=True)

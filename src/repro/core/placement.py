@@ -72,6 +72,7 @@ __all__ = [
     "normalize_slot_budget",
     "pad_phantom_column",
     "inflate_placement",
+    "compact_placement",
 ]
 
 
@@ -907,6 +908,40 @@ def inflate_placement(sub: ReplicatedPlacement, survivors: Sequence[int],
             sub.slot_expert[:, j * spr:(j + 1) * spr]
         share[:, g * spr:(g + 1) * spr] = sub.share[:, j * spr:(j + 1) * spr]
     return ReplicatedPlacement(slot_expert, share, n_ranks, E)
+
+
+def compact_placement(full: ReplicatedPlacement, survivors: Sequence[int],
+                      ) -> ReplicatedPlacement:
+    """Inverse of :func:`inflate_placement`: slice the survivor rank
+    windows out of a full-G masked placement.
+
+    A topology-masked solve (``SolveContext.dead_ranks``) keeps the
+    original G-rank geometry with all-phantom zero-share windows on the
+    dead ranks — right for a serving engine whose compiled step functions
+    pinned that geometry. A *training* relaunch instead rebuilds the mesh
+    over the survivors, so it wants the survivor-only geometry back:
+    ``compact_placement(masked_solve, survivors)``. Refuses to drop a
+    rank window still carrying share (that would silently lose experts).
+    """
+    surv = np.asarray(survivors, dtype=np.int64)
+    if surv.size < 1:
+        raise ValueError("need at least one survivor")
+    if surv.size != np.unique(surv).size:
+        raise ValueError("duplicate survivor ranks")
+    if surv.min() < 0 or surv.max() >= full.n_ranks:
+        raise ValueError(f"survivor ranks outside [0, {full.n_ranks})")
+    spr = full.slots_per_rank
+    dropped = np.setdiff1d(np.arange(full.n_ranks), surv)
+    if dropped.size:
+        cols = (dropped[:, None] * spr + np.arange(spr)).ravel()
+        if np.any(full.share[:, cols] != 0.0):
+            raise ValueError(
+                f"ranks {dropped.tolist()} still carry dispatch share — "
+                "compacting them away would lose experts")
+    keep = (surv[:, None] * spr + np.arange(spr)).ravel()
+    return ReplicatedPlacement(full.slot_expert[:, keep].copy(),
+                               full.share[:, keep].copy(),
+                               int(surv.size), full.n_experts)
 
 
 def solve_model_placement(

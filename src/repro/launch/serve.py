@@ -29,10 +29,11 @@ from repro.core import (DriftConfig, PerfDriftConfig, SCENARIOS, StealConfig,
                         get_policy, make_cluster, make_scenario, parse_topology,
                         registered_policies)
 from repro.models import moe_perm_shape
-from repro.serving import (Engine, EngineConfig, KVCacheConfig,
-                           SchedulerConfig, TRACES, WORKLOADS,
-                           registered_schedulers, run_with_failure,
-                           sample_requests, sample_trace, summarize)
+from repro.serving import (ChaosReport, Engine, EngineConfig, FaultSchedule,
+                           KVCacheConfig, SchedulerConfig, TRACES, WORKLOADS,
+                           registered_schedulers, run_chaos,
+                           run_with_failure, sample_requests, sample_trace,
+                           summarize)
 
 __all__ = ["serve", "derive_slot_budget", "main"]
 
@@ -93,9 +94,15 @@ def serve(arch: str, *, policy: str = "vibe", n_requests: int = 12,
           scenario_start: float = 0.0, scenario_duration: float = 2.0,
           perf_drift_delta: float = 0.0, steal: bool = False,
           steal_headroom: float = 0.1, topology: Optional[str] = None,
-          fail_rank: int = -1, fail_at_step: int = 5, seed: int = 0):
-    """Returns ``(engine, records, fail_report)``; ``fail_report`` is None
-    unless ``fail_rank >= 0`` ran the elasticity drill."""
+          fail_rank: int = -1, fail_at_step: int = 5,
+          chaos: Optional[str] = None, shed_watermark: float = 0.0,
+          preempt: bool = False, seed: int = 0):
+    """Returns ``(engine, records, report)``; ``report`` is None unless
+    ``fail_rank >= 0`` ran the elasticity drill (:class:`FailureReport`)
+    or ``chaos`` ran the chaos drill (:class:`ChaosReport`)."""
+    if chaos and fail_rank >= 0:
+        raise SystemExit("--chaos and --fail-rank are mutually exclusive "
+                         "(a chaos schedule already includes rank faults)")
     cfg = get_smoke(arch)
     if not cfg.is_moe:
         raise SystemExit(f"{arch} has no MoE layers — ViBE serving n/a")
@@ -149,7 +156,9 @@ def serve(arch: str, *, policy: str = "vibe", n_requests: int = 12,
         max_batch=max_batch, max_seq=max_seq, moe_impl=moe_impl, seed=seed,
         weighted_routing=weighted_routing,
         scheduler=SchedulerConfig(name=scheduler,
-                                  prefill_chunk=prefill_chunk),
+                                  prefill_chunk=prefill_chunk,
+                                  shed_watermark=shed_watermark,
+                                  preempt_decodes=preempt),
         kv=(KVCacheConfig(block_size=block_size, n_blocks=kv_blocks)
             if kv_blocks else None),
         topology=topo)
@@ -163,6 +172,12 @@ def serve(arch: str, *, policy: str = "vibe", n_requests: int = 12,
                                 output_len=min(r.output_len,
                                                max_seq // 2 - 1))
             for r in reqs]
+    if chaos:
+        # chaos drill: serve under a declarative fault schedule, then
+        # audit the invariants (leaks, completion-or-reject, token ledger)
+        schedule = FaultSchedule.parse(chaos, ranks)
+        report = run_chaos(engine, reqs, schedule)
+        return engine, report.records, report
     if fail_rank >= 0:
         # elasticity drill: kill a rank mid-traffic, serve through it
         records, report = run_with_failure(engine, reqs, fail_rank,
@@ -251,6 +266,23 @@ def main() -> int:
                          "engine steps — drain its lanes, mask it out of "
                          "the solve, remap onto the survivors, re-admit "
                          "(-1 = no failure)")
+    ap.add_argument("--chaos", default=None,
+                    help="chaos drill: serve under a declarative fault "
+                         "schedule and audit the invariants (no leaked KV, "
+                         "complete-or-typed-reject, token conservation). "
+                         "'default' / 'default:SEED' draws a randomized "
+                         "fail+stall+dcn+recover drill; or a comma list "
+                         "like 'fail@4:1,stall@6:2x0.4+0.5,recover@9:1'")
+    ap.add_argument("--shed-watermark", type=float, default=0.0,
+                    help="overload protection: once KV-pool utilization "
+                         "reaches this fraction, shed waiting requests "
+                         "whose TTFT deadline already lapsed (typed "
+                         "rejection; 0 = never shed)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="overload protection: under KV starvation, evict "
+                         "the youngest decode lane (free its KV, requeue "
+                         "the request, bounded retries) so waiting work "
+                         "can admit")
     ap.add_argument("--perf-drift-delta", type=float, default=0.0,
                     help="enable online performance-drift recalibration: "
                          "refit f_g and re-solve when any rank's windowed "
@@ -278,6 +310,9 @@ def main() -> int:
                             steal_headroom=args.steal_headroom,
                             topology=args.topology,
                             fail_rank=args.fail_rank,
+                            chaos=args.chaos,
+                            shed_watermark=args.shed_watermark,
+                            preempt=args.preempt,
                             seed=args.seed)
     s = summarize(records)
     st = engine.stats
@@ -304,7 +339,25 @@ def main() -> int:
     print(f"[serve] recalibrations: {st.migrations}{by_kind}, migrated slots "
           f"{st.migrated_slots}, bytes {st.migration_bytes}, dropped "
           f"assignments {st.dropped_assignments:.0f}")
-    if report is not None:
+    if st.rejected or st.preemptions:
+        by_r = ", ".join(f"{k}: {v}" for k, v in sorted(st.rejected.items()))
+        print(f"[serve] overload: rejected {sum(st.rejected.values())}"
+              + (f" ({by_r})" if by_r else "")
+              + f", preemptions {st.preemptions}")
+    if isinstance(report, ChaosReport):
+        print(f"[serve] {report.summary()}")
+        for spec, why in report.skipped:
+            print(f"[serve]   skipped {spec.kind}@{spec.at_step}: {why}")
+        finished = sum(1 for r in records if np.isfinite(r.finished_at))
+        print(f"[serve] chaos drill: {finished}/{len(records)} finished, "
+              f"token ledger prefill+decode="
+              f"{st.prefill_tokens + st.decode_tokens} vs useful+lost="
+              f"{st.useful_tokens + st.lost_tokens}")
+        if not report.ok:
+            for v in report.violations:
+                print(f"[serve] CHAOS VIOLATION: {v}")
+            return 1
+    elif report is not None:
         finished = sum(1 for r in records if np.isfinite(r.finished_at))
         print(f"[serve] failure drill: rank {report.rank} died at "
               f"t={report.at_time:.3f}s — drained "

@@ -2,18 +2,23 @@
 # multi-device EP simulator, and the JAX continuous-batching engine —
 # configured through the unified ServingConfig hierarchy (config.py),
 # scheduled by the pluggable scheduler registry (scheduler.py), admitted
-# by the paged KV cache (kvcache.py).
+# by the paged KV cache (kvcache.py), hardened by the fault-injection /
+# chaos-drill harness (faults.py) + the elastic shrink/grow path
+# (elastic.py).
 from .config import (EngineConfig, KVCacheConfig, SchedulerConfig,
                      ServingConfig, SimConfig)
-from .elastic import FailureReport, fail_rank, run_with_failure
+from .elastic import (FailureReport, RecoveryReport, fail_rank,
+                      recover_rank, run_with_failure)
 from .engine import Engine, EngineStats
+from .faults import (FAULT_KINDS, ChaosReport, FaultInjector, FaultSchedule,
+                     FaultSpec, chaos_invariants, run_chaos)
 from .kvcache import BlockAllocator, PagedKVCache
-from .metrics import PAPER_SLOS, SLO, RequestRecord, goodput, per_tenant_ttft, \
-    slo_frontier, summarize
+from .metrics import PAPER_SLOS, SLO, RejectReason, RequestRecord, goodput, \
+    per_tenant_ttft, slo_frontier, summarize
 from .scheduler import (Action, Chunk, RequestView, Scheduler,
                         SchedulerContext, UnknownSchedulerError,
                         get_scheduler, register_scheduler,
-                        registered_schedulers)
+                        registered_schedulers, shed_victims)
 from .simulator import (EPSimulator, LayerStats, rank_latency_matrix,
                         realized_rank_loads)
 from .workload import (TRACES, WORKLOADS, ArrivalSpec, Request, TenantSpec,
@@ -25,13 +30,16 @@ __all__ = [
     "EngineConfig", "KVCacheConfig", "SchedulerConfig", "ServingConfig",
     "SimConfig",
     "Engine", "EngineStats",
-    "FailureReport", "fail_rank", "run_with_failure",
+    "FailureReport", "RecoveryReport", "fail_rank", "recover_rank",
+    "run_with_failure",
+    "FAULT_KINDS", "ChaosReport", "FaultInjector", "FaultSchedule",
+    "FaultSpec", "chaos_invariants", "run_chaos",
     "BlockAllocator", "PagedKVCache",
-    "PAPER_SLOS", "SLO", "RequestRecord", "goodput", "per_tenant_ttft",
-    "slo_frontier", "summarize",
+    "PAPER_SLOS", "SLO", "RejectReason", "RequestRecord", "goodput",
+    "per_tenant_ttft", "slo_frontier", "summarize",
     "Action", "Chunk", "RequestView", "Scheduler", "SchedulerContext",
     "UnknownSchedulerError", "get_scheduler", "register_scheduler",
-    "registered_schedulers",
+    "registered_schedulers", "shed_victims",
     "EPSimulator", "LayerStats", "rank_latency_matrix",
     "realized_rank_loads",
     "TRACES", "WORKLOADS", "ArrivalSpec", "Request", "TenantSpec",

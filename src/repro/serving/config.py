@@ -72,6 +72,17 @@ class SchedulerConfig:
     decodes are pending (enforced by the SLO-aware policies; pinned by a
     property test). ``ttft_slo``/``tpot_slo`` are the default per-request
     deadlines (a request's own ``ttft_slo`` field overrides).
+
+    Overload protection (off by default — legacy behaviour unchanged):
+    ``shed_watermark > 0`` enables watermark load shedding — when KV-pool
+    utilization reaches the watermark, waiting requests whose TTFT
+    deadline has already lapsed (lowest SLO headroom first) are rejected
+    with ``RejectReason.SHED`` instead of queuing forever.
+    ``preempt_decodes`` lets the engine evict a running decode lane (free
+    its KV, requeue the request) when waiting work is starved by KV
+    pressure; each request is preempted at most ``max_preemptions`` times
+    (the bounded-retry guard — beyond that it is immune, which also rules
+    out preemption livelock).
     """
 
     name: str = "fcfs"
@@ -80,6 +91,10 @@ class SchedulerConfig:
     decode_starvation_bound: int = 4
     ttft_slo: float = 0.35
     tpot_slo: float = 0.125
+    shed_watermark: float = 0.0      # KV utilization triggering shedding;
+    #                                  0 disables (legacy)
+    preempt_decodes: bool = False    # evict decodes under KV pressure
+    max_preemptions: int = 2         # per-request preemption cap (backoff)
 
     def __post_init__(self):
         if self.prefill_chunk < 0:
@@ -91,6 +106,12 @@ class SchedulerConfig:
         if self.decode_starvation_bound < 1:
             raise ValueError(f"decode_starvation_bound must be >= 1, "
                              f"got {self.decode_starvation_bound}")
+        if not 0.0 <= self.shed_watermark <= 1.0:
+            raise ValueError(f"shed_watermark must be in [0, 1], "
+                             f"got {self.shed_watermark}")
+        if self.max_preemptions < 0:
+            raise ValueError(f"max_preemptions must be >= 0, "
+                             f"got {self.max_preemptions}")
 
 
 @dataclasses.dataclass(frozen=True)

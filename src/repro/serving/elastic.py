@@ -38,7 +38,8 @@ from .engine import Engine
 from .metrics import RequestRecord
 from .workload import Request
 
-__all__ = ["FailureReport", "fail_rank", "run_with_failure"]
+__all__ = ["FailureReport", "RecoveryReport", "fail_rank", "recover_rank",
+           "run_with_failure"]
 
 
 @dataclasses.dataclass
@@ -79,6 +80,7 @@ def fail_rank(engine: Engine, rank: int) -> FailureReport:
         del engine._prefilling[req_id]
         engine.kv.free_seq(req_id)
         redone += st.prefilled
+        engine.records[req_id].requeues += 1
         engine.waiting.appendleft(st.req)
         drained_p += 1
     # drain decode lanes: the produced-so-far tokens are lost with the KV
@@ -96,8 +98,12 @@ def fail_rank(engine: Engine, rank: int) -> FailureReport:
         # re-queue the original Request, bypassing submit(): the record
         # already exists and must persist (TTFT measures the first byte
         # the client saw, not the recovery replay)
+        engine.records[r.req_id].requeues += 1
         engine.waiting.appendleft(r)
         drained_d += 1
+    # drained work feeds the token-conservation ledger: those processed
+    # tokens are no longer attributable to any finished request
+    engine.stats.lost_tokens += redone
 
     upd = ctl.mask_ranks(tuple(set(ctl.dead_ranks) | {rank}))
     # the masked solve keeps the original G-rank geometry whenever the
@@ -112,6 +118,50 @@ def fail_rank(engine: Engine, rank: int) -> FailureReport:
                          drained_decodes=drained_d, redone_tokens=redone,
                          moved_experts=upd.moved_experts,
                          migration_bytes=upd.migration_bytes)
+
+
+@dataclasses.dataclass
+class RecoveryReport:
+    """What re-adding a recovered rank cost (and restored)."""
+
+    rank: int                        # the rank that came back
+    at_time: float                   # virtual-clock time of the recovery
+    moved_experts: int               # slots migrated by the grow re-solve
+    migration_bytes: int             # weight bytes rehydrated onto the fleet
+    dead_after: Tuple[int, ...]      # remaining dead set ((), when healthy)
+
+
+def recover_rank(engine: Engine, rank: int) -> RecoveryReport:
+    """Elastic *grow*: bring a previously failed ``rank`` back into the
+    serving fleet — the inverse of :func:`fail_rank`.
+
+    :meth:`ViBEController.unmask_ranks` re-solves over the enlarged
+    survivor set, so traffic shares flow back onto the recovered rank; the
+    engine re-expands slot geometry if the solve asks for it and applies
+    the placement through the normal migration path, so the weight
+    *rehydration* (shipping the recovered rank its expert shards) is
+    priced on the virtual clock exactly like any recalibration. No lanes
+    are drained — recovery only adds capacity. A fail→recover round trip
+    with no interleaved traffic restores the healthy placement
+    bit-identically (property-tested at the controller level).
+    """
+    ctl = engine.controller
+    if ctl is None:
+        raise ValueError("recover_rank needs a controller-driven engine")
+    if not 0 <= rank < ctl.G:
+        raise ValueError(f"rank {rank} outside [0, {ctl.G})")
+    if rank not in ctl.dead_ranks:
+        raise ValueError(f"rank {rank} is not dead — nothing to recover")
+    upd = ctl.unmask_ranks((rank,))
+    want = ctl.placement.perm.shape[1]
+    if want > engine.n_slots:
+        engine._expand_slots(want)
+        engine._r_max = min(ctl.G, engine.n_slots - ctl.E + 1)
+    engine._apply_perm(engine._controller_perm())
+    return RecoveryReport(rank=rank, at_time=engine.stats.virtual_time,
+                          moved_experts=upd.moved_experts,
+                          migration_bytes=upd.migration_bytes,
+                          dead_after=ctl.dead_ranks)
 
 
 def run_with_failure(engine: Engine, requests: Sequence[Request], rank: int,

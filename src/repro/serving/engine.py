@@ -50,8 +50,9 @@ from repro.models.model import block_layout
 from repro.models.moe import apply_placement
 from .config import EngineConfig
 from .kvcache import PagedKVCache
-from .metrics import RequestRecord
-from .scheduler import RequestView, SchedulerContext, get_scheduler
+from .metrics import RejectReason, RequestRecord
+from .scheduler import (RequestView, SchedulerContext, get_scheduler,
+                        shed_victims)
 from .simulator import (capacity_bucket_rows, rank_latency_matrix,
                         realized_rank_loads)
 from .workload import Request
@@ -71,6 +72,19 @@ class EngineStats:
     steal_updates: int = 0           # share-only table refreshes (stealing)
     dropped_assignments: float = 0.0  # capacity-overflow drops (all layers)
     virtual_time: float = 0.0
+    # token-conservation ledger (chaos-drill invariant): every token the
+    # model processed is either useful (belongs to a finished request's
+    # prompt + decode stream) or lost (thrown away by a rank-failure drain
+    # or a preemption and replayed later) — when the engine is idle,
+    # prefill_tokens + decode_tokens == useful_tokens + lost_tokens.
+    prefill_tokens: int = 0          # prompt tokens run through prefill
+    decode_tokens: int = 0           # decode-lane participations run
+    useful_tokens: int = 0           # processed tokens of finished requests
+    lost_tokens: int = 0             # processed tokens discarded by
+    #                                  drains/preemptions (replayed later)
+    preemptions: int = 0             # decode lanes evicted under KV pressure
+    rejected: Dict[str, int] = dataclasses.field(default_factory=dict)
+    #                                  RejectReason.value → count
 
 
 @dataclasses.dataclass
@@ -477,24 +491,40 @@ class Engine:
 
     # -- request lifecycle ----------------------------------------------------
 
-    def submit(self, reqs: List[Request]) -> None:
+    def submit(self, reqs: List[Request]) -> List[RequestRecord]:
+        """Submit requests; returns the records of the ones REJECTED.
+
+        Rejection is typed, not an exception: an infeasible request (prompt
+        beyond ``max_seq``, or a worst-case KV reservation the pool can
+        never satisfy) gets a :class:`RequestRecord` carrying its
+        :class:`RejectReason` — it never enters the waiting queue, and
+        ``stats.rejected`` tallies the reason for the serve summary line.
+        Feasible requests queue as before.
+        """
+        out = []
         for r in reqs:
-            if r.prompt_len > self.max_seq:
-                raise ValueError(f"request {r.req_id} prompt_len "
-                                 f"{r.prompt_len} exceeds max_seq "
-                                 f"{self.max_seq}")
+            rec = RequestRecord(r.req_id, r.arrival, r.prompt_len,
+                                r.output_len, tenant=r.tenant)
+            self.records[r.req_id] = rec
             total = min(r.prompt_len + r.output_len, self.max_seq)
             floor = int(self.kv.config.n_blocks * self.kv.config.watermark)
-            if self.kv.config.blocks_for(total) > \
+            if r.prompt_len > self.max_seq:
+                self._reject(rec, RejectReason.TOO_LONG)
+            elif self.kv.config.blocks_for(total) > \
                     self.kv.config.n_blocks - floor:
-                raise ValueError(
-                    f"request {r.req_id} needs "
-                    f"{self.kv.config.blocks_for(total)} KV blocks but the "
-                    f"pool admits at most {self.kv.config.n_blocks - floor}")
-            self.waiting.append(r)
-            self.records[r.req_id] = RequestRecord(
-                r.req_id, r.arrival, r.prompt_len, r.output_len,
-                tenant=r.tenant)
+                # needs more KV blocks than admission can ever hand out:
+                # queueing it would wait forever behind the watermark
+                self._reject(rec, RejectReason.NEVER_FITS)
+            else:
+                self.waiting.append(r)
+                continue
+            out.append(rec)
+        return out
+
+    def _reject(self, rec: RequestRecord, reason: RejectReason) -> None:
+        rec.reject_reason = reason
+        self.stats.rejected[reason.value] = \
+            self.stats.rejected.get(reason.value, 0) + 1
 
     def _lane_free(self, b: int) -> bool:
         if self.slot_req[b] is not None:
@@ -529,26 +559,102 @@ class Engine:
                                   p.req.prompt_len, p.req.output_len,
                                   p.prefilled, p.req.ttft_slo)
                       for p in self._prefilling.values()]
-        waiting = []
+        waiting, blocked = [], []
         for r in self.waiting:
             total = min(r.prompt_len + r.output_len, self.max_seq)
-            if self.kv.can_admit(total):
-                waiting.append(RequestView(r.req_id, r.arrival, r.prompt_len,
-                                           r.output_len, 0, r.ttft_slo))
+            view = RequestView(r.req_id, r.arrival, r.prompt_len,
+                               r.output_len, 0, r.ttft_slo)
+            (waiting if self.kv.can_admit(total) else blocked).append(view)
         n_free = sum(1 for b in range(self.max_batch) if self._lane_free(b))
         n_running = sum(1 for s in self.slot_req if s is not None)
         return SchedulerContext(
             now=self.stats.virtual_time, config=self._sched_cfg,
             waiting=waiting, prefilling=prefilling, n_running=n_running,
             prefill_streak=self._prefill_streak, can_start=n_free,
-            chunk_budget=self._chunk if self._chunk > 0 else self.max_seq)
+            chunk_budget=self._chunk if self._chunk > 0 else self.max_seq,
+            blocked=blocked, kv_utilization=self.kv.utilization())
+
+    # -- overload protection -------------------------------------------------
+
+    def _shed_overload(self) -> None:
+        """Watermark load shedding (``SchedulerConfig.shed_watermark``).
+
+        The policy lives in the scheduler module (:func:`shed_victims` —
+        under KV pressure, reject waiting requests whose TTFT deadline has
+        lapsed, lowest headroom first); the engine applies it: victims
+        leave the queue and their records carry ``RejectReason.SHED``.
+        """
+        if self._sched_cfg.shed_watermark <= 0.0 or not self.waiting:
+            return
+        victims = set(shed_victims(self._build_context()))
+        if not victims:
+            return
+        keep: collections.deque = collections.deque()
+        for r in self.waiting:
+            if r.req_id in victims:
+                self._reject(self.records[r.req_id], RejectReason.SHED)
+            else:
+                keep.append(r)
+        self.waiting = keep
+
+    def _maybe_preempt(self) -> None:
+        """Preempt one decode lane when KV pressure starves admission.
+
+        Fires only when ``SchedulerConfig.preempt_decodes`` is set, some
+        request is waiting, and *none* of the waiting requests fits the
+        free KV pool — the committing-admission deadlock a shrunken pool
+        (or a rank-failure re-admission wave) can produce. The victim is
+        the decode lane with the fewest produced tokens (least work lost);
+        its KV is freed and the request requeued at the *tail* (backoff —
+        drains use the head). A request preempted ``max_preemptions``
+        times becomes immune, which bounds per-request retries and rules
+        out preemption livelock.
+        """
+        cfgp = self._sched_cfg
+        if not cfgp.preempt_decodes or not self.waiting:
+            return
+        if any(self.kv.can_admit(min(r.prompt_len + r.output_len,
+                                     self.max_seq))
+               for r in self.waiting):
+            return
+        victims = []
+        for b in range(self.max_batch):
+            r = self.slot_req[b]
+            if r is None:
+                continue
+            if self.records[r.req_id].preemptions >= cfgp.max_preemptions:
+                continue
+            decoded = int(r.output_len - 1 - self.slot_left[b])
+            victims.append((max(decoded, 0), b))
+        if not victims:
+            return
+        decoded, b = min(victims)
+        r = self.slot_req[b]
+        self.slot_req[b] = None
+        self.slot_left[b] = 0
+        self.pos[b] = 0
+        self.kv.free_seq(r.req_id)
+        rec = self.records[r.req_id]
+        rec.preemptions += 1
+        rec.requeues += 1
+        self.stats.preemptions += 1
+        # the prompt and the produced-so-far tokens die with the KV shard
+        self.stats.lost_tokens += r.prompt_len + decoded
+        self.waiting.append(r)
 
     def step(self) -> bool:
         """One engine step, as directed by the configured scheduler:
         one prefill chunk (or whole prompt), or one batched decode.
 
+        Overload protection runs first (both off by default): watermark
+        load shedding rejects hopeless waiting requests under KV-pool
+        pressure, and decode preemption evicts a running lane when KV
+        starvation blocks every waiting request.
+
         Returns False when idle (no waiting or running requests).
         """
+        self._shed_overload()
+        self._maybe_preempt()
         action = self.scheduler.schedule(self._build_context())
         if action.kind == "prefill":
             # the engine runs one chunk per step so the virtual clock
@@ -598,6 +704,7 @@ class Engine:
         self.tokens = self.tokens.at[st.lane, 0].set(nxt[0])
         st.prefilled = r.prompt_len
         self.kv.advance(r.req_id, min(r.prompt_len, self.max_seq))
+        self.stats.prefill_tokens += r.prompt_len
         tall = np.asarray(tallies)
         if self.cfg.is_moe and tall.size:
             self.stats.dropped_assignments += float(tall[:, -1].sum())
@@ -618,6 +725,7 @@ class Engine:
             st.lane, off, n_valid, self.moe_tables)
         st.prefilled += n_valid
         self.kv.advance(r.req_id, n_valid)
+        self.stats.prefill_tokens += n_valid
         # interleaved decode steps write a garbage row at pos[lane] for
         # reserved lanes; parking pos at the next chunk offset makes the
         # next chunk's first (always-valid) row overwrite it
@@ -647,6 +755,7 @@ class Engine:
             rec.first_token_at = self.stats.virtual_time
         if r.output_len <= 1:
             rec.finished_at = self.stats.virtual_time
+            self.stats.useful_tokens += r.prompt_len
             self._release(st.lane)
 
     def _exec_decode(self) -> None:
@@ -661,6 +770,7 @@ class Engine:
         if self.cfg.is_moe and tall.size:
             self.stats.dropped_assignments += float(tall[:, -1].sum())
         self.observe_step(tall, float(len(active)))
+        self.stats.decode_tokens += len(active)
         for b in active:
             if self.pos[b] < self.max_seq:
                 # the new token occupied a fresh cache row (beyond
@@ -669,8 +779,13 @@ class Engine:
             self.pos[b] += 1
             self.slot_left[b] -= 1
             if self.slot_left[b] <= 0 or self.pos[b] >= self.max_seq - 1:
-                rec = self.records[self.slot_req[b].req_id]
+                r = self.slot_req[b]
+                rec = self.records[r.req_id]
                 rec.finished_at = self.stats.virtual_time
+                # decode participations so far = (output_len-1) - slot_left
+                # (exact even for the early max_seq-clamp finish)
+                self.stats.useful_tokens += r.prompt_len + max(
+                    int(r.output_len - 1 - self.slot_left[b]), 0)
                 self._release(b)
         self.stats.decode_steps += 1
 

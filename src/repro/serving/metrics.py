@@ -8,12 +8,28 @@ compliance target defining the sustainable-QPS frontier.
 from __future__ import annotations
 
 import dataclasses
+import enum
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-__all__ = ["SLO", "RequestRecord", "summarize", "goodput", "slo_frontier",
-           "per_tenant_ttft", "PAPER_SLOS"]
+__all__ = ["SLO", "RejectReason", "RequestRecord", "summarize", "goodput",
+           "slo_frontier", "per_tenant_ttft", "PAPER_SLOS"]
+
+
+class RejectReason(enum.Enum):
+    """Typed admission/overload rejection causes (engine ``submit`` + the
+    shedding path). A rejected request is *not* an engine bug: it carries
+    its reason on the :class:`RequestRecord` so the chaos-drill invariant
+    "every submitted request completes **or** is rejected with a typed
+    reason" is checkable, and ``EngineStats.rejected`` tallies by reason
+    for the ``serve`` summary line."""
+
+    TOO_LONG = "too_long"        # prompt_len exceeds the engine's max_seq
+    NEVER_FITS = "never_fits"    # worst-case KV reservation exceeds the
+    #                              admissible pool (would wait forever)
+    SHED = "shed"                # overload: load-shedding dropped it under
+    #                              KV-pool pressure (watermark breach)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,6 +56,15 @@ class RequestRecord:
     first_token_at: float = float("nan")
     finished_at: float = float("nan")
     tenant: str = ""               # workload tenant tag ("" = untagged)
+    reject_reason: Optional[RejectReason] = None   # None = never rejected
+    preemptions: int = 0           # decode evictions under KV pressure
+    requeues: int = 0              # total trips back to the waiting queue
+    #                                (rank-failure drains + preemptions) —
+    #                                the bounded-retry/backoff ledger
+
+    @property
+    def rejected(self) -> bool:
+        return self.reject_reason is not None
 
     @property
     def ttft(self) -> float:
@@ -47,6 +72,9 @@ class RequestRecord:
 
     @property
     def tpot(self) -> float:
+        # output_len == 1 means the prefill's argmax IS the full response:
+        # zero decode steps, so the per-output-token latency is 0 by
+        # definition (a division by output_len - 1 would be 0/0 here)
         if self.output_len <= 1:
             return 0.0
         return (self.finished_at - self.first_token_at) / (self.output_len - 1)
@@ -65,6 +93,7 @@ def summarize(records: Sequence[RequestRecord]) -> Dict[str, float]:
     tpot = np.array([r.tpot for r in records if np.isfinite(r.tpot)])
     return {
         "n": len(records),
+        "n_rejected": sum(1 for r in records if r.rejected),
         "ttft_p50": _pct(ttft, 50), "ttft_p90": _pct(ttft, 90),
         "ttft_p99": _pct(ttft, 99),
         "tpot_p50": _pct(tpot, 50), "tpot_p90": _pct(tpot, 90),

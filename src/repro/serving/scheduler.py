@@ -43,7 +43,7 @@ from .config import SchedulerConfig
 __all__ = [
     "RequestView", "Chunk", "Action", "SchedulerContext", "Scheduler",
     "UnknownSchedulerError", "register_scheduler", "get_scheduler",
-    "registered_schedulers",
+    "registered_schedulers", "shed_victims",
 ]
 
 
@@ -65,6 +65,11 @@ class RequestView:
     def deadline(self, default_slo: float) -> float:
         return self.arrival + (self.ttft_slo if self.ttft_slo is not None
                                else default_slo)
+
+    def headroom(self, now: float, default_slo: float) -> float:
+        """Seconds until (negative: since) this request's TTFT deadline —
+        the load-shedding priority key (lowest headroom sheds first)."""
+        return self.deadline(default_slo) - now
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +104,10 @@ class SchedulerContext:
     prefill_streak: int              # consecutive prefill steps so far
     can_start: int                   # new admissions allowed (lanes + KV)
     chunk_budget: int                # prefill tokens allowed this step
+    blocked: List[RequestView] = dataclasses.field(default_factory=list)
+    #                                  waiting but NOT KV-admissible right
+    #                                  now (the shed/preempt candidates)
+    kv_utilization: float = 0.0      # used / total KV blocks this step
 
     def build_chunks(self, ordered: List[RequestView]) -> Tuple[Chunk, ...]:
         """Greedy chunk packing over ``ordered`` candidates.
@@ -223,6 +232,31 @@ class SloEdfScheduler:
         if ctx.n_running > 0:
             return Action("decode")
         return Action("idle")
+
+
+# ---------------------------------------------------------------------------
+# overload protection: watermark load shedding
+# ---------------------------------------------------------------------------
+
+def shed_victims(ctx: SchedulerContext) -> Tuple[int, ...]:
+    """Watermark-based load-shedding policy: req_ids to reject this step.
+
+    Fires only when ``config.shed_watermark > 0`` and KV-pool utilization
+    has reached it. Victims are the not-yet-admitted requests (admissible
+    and KV-blocked alike) whose TTFT deadline has already lapsed — they
+    cannot meet their SLO even if admitted immediately, so under memory
+    pressure completing them only delays requests that still can. Ordered
+    lowest-SLO-headroom first, so the engine rejects the most hopeless
+    work first when it caps how much to shed. Mid-prefill requests are
+    never shed here (their KV investment is the engine's preemption
+    problem, not admission's).
+    """
+    wm = ctx.config.shed_watermark
+    if wm <= 0.0 or ctx.kv_utilization < wm:
+        return ()
+    cand = [(v.headroom(ctx.now, ctx.config.ttft_slo), v.req_id)
+            for v in list(ctx.waiting) + list(ctx.blocked)]
+    return tuple(req_id for h, req_id in sorted(cand) if h <= 0.0)
 
 
 @register_scheduler

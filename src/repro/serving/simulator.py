@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import (ClusterVariability, PerfModel, Placement,
-                        ViBEController)
+                        VariabilityEvent, ViBEController)
 from repro.core.placement import copy_enumeration, pad_phantom_column
 from .config import SimConfig
 from .kvcache import PagedKVCache
@@ -237,6 +237,12 @@ class EPSimulator:
         self.steal_updates = 0
         rs = getattr(controller, "rescheduler", None)
         self._steal_version = rs.version if rs is not None else 0
+        # fault injection (inject_faults): pending specs by at_step, the
+        # applied/skipped audit log, and any open dcn_degrade window
+        # (virtual-time expiry, healthy cfg to restore)
+        self._fault_queue: List = []
+        self.fault_log: List[Tuple] = []
+        self._dcn_restore: Optional[Tuple[float, SimConfig]] = None
 
     # -- placement ---------------------------------------------------------
 
@@ -447,6 +453,94 @@ class EPSimulator:
                                       upd.moved_experts))
         return stall
 
+    # -- fault injection ----------------------------------------------------
+
+    def inject_faults(self, schedule) -> None:
+        """Arm a :class:`~repro.serving.faults.FaultSchedule`: the next
+        ``run`` applies each spec once ``self.steps`` reaches its
+        ``at_step``. Rank faults route through the controller's
+        mask/unmask re-solve (migration stall charged like a
+        recalibration); ``transient_stall`` composes with the live
+        variability scenario; ``dcn_degrade`` shrinks ``cfg.topology``'s
+        cross-node bandwidth for its duration. Infeasible specs are
+        logged in ``fault_log``, never raised."""
+        self._fault_queue = list(schedule.faults)
+        self.fault_log = []
+        self._dcn_restore = None
+
+    def _poll_faults(self, t: float) -> float:
+        """Apply due faults at step granularity; returns stall seconds."""
+        if self._dcn_restore is not None and t >= self._dcn_restore[0]:
+            self.cfg = self._dcn_restore[1]
+            self._dcn_restore = None
+        stall = 0.0
+        while self._fault_queue and self._fault_queue[0].at_step <= self.steps:
+            stall += self._apply_fault(self._fault_queue.pop(0), t)
+        return stall
+
+    def _flush_faults(self, t: float) -> None:
+        """Drain the fault queue when traffic ends before the schedule
+        does (same contract as the engine drill's flush): every fault is
+        still exercised — a late ``rank_recover`` must restore the fleet
+        even if the last request finished first — and any open DCN
+        window is closed."""
+        while self._fault_queue:
+            self._apply_fault(self._fault_queue.pop(0), t)
+        if self._dcn_restore is not None:
+            self.cfg = self._dcn_restore[1]
+            self._dcn_restore = None
+
+    def _apply_fault(self, spec, t: float) -> float:
+        ctl = self.controller
+        if spec.kind in ("rank_fail", "rank_recover"):
+            if ctl is None:
+                self.fault_log.append((spec, "skipped: no controller"))
+                return 0.0
+            try:
+                if spec.kind == "rank_fail":
+                    if spec.rank in ctl.dead_ranks:
+                        self.fault_log.append(
+                            (spec, f"skipped: rank {spec.rank} already dead"))
+                        return 0.0
+                    if len(ctl.dead_ranks) + 1 >= ctl.G:
+                        self.fault_log.append(
+                            (spec, "skipped: would kill the last survivor"))
+                        return 0.0
+                    upd = ctl.mask_ranks(
+                        tuple(set(ctl.dead_ranks) | {spec.rank}))
+                else:
+                    if spec.rank not in ctl.dead_ranks:
+                        self.fault_log.append(
+                            (spec, f"skipped: rank {spec.rank} is not dead"))
+                        return 0.0
+                    upd = ctl.unmask_ranks((spec.rank,))
+            except ValueError as e:
+                # e.g. a singleton policy that cannot tile the survivors
+                self.fault_log.append((spec, f"skipped: {e}"))
+                return 0.0
+            self.fault_log.append((spec, "applied"))
+            return self._account_update(upd, 0)
+        if spec.kind == "transient_stall":
+            self.cluster.events.append(VariabilityEvent(
+                "transient", t_start=t, magnitude=spec.magnitude,
+                device=spec.rank if spec.rank >= 0 else None,
+                duration=spec.duration))
+            self.fault_log.append((spec, "applied"))
+            return 0.0
+        # dcn_degrade
+        topo = self.cfg.topology
+        if topo is None:
+            self.fault_log.append(
+                (spec, "skipped: no fleet topology (flat pricing)"))
+            return 0.0
+        healthy = self.cfg if self._dcn_restore is None \
+            else self._dcn_restore[1]
+        self.cfg = dataclasses.replace(self.cfg, topology=dataclasses.replace(
+            topo, dcn_bw=topo.dcn_bw * (1.0 - spec.magnitude)))
+        self._dcn_restore = (t + spec.duration, healthy)
+        self.fault_log.append((spec, "applied"))
+        return 0.0
+
     # -- event loop (continuous batching, prefill-priority) ----------------
 
     def run(self, requests: Sequence[Request], phase: str = "mixed",
@@ -478,6 +572,8 @@ class EPSimulator:
 
         while arrivals or waiting or running:
             self.now = t                      # drift events key off this
+            t += self._poll_faults(t)         # injected faults (chaos)
+            self.now = t
             if drift_at is not None and not switched and t >= drift_at:
                 self.profile = drift_profile
                 switched = True
@@ -526,6 +622,7 @@ class EPSimulator:
                     done.append(b)
             for b in done:
                 running.remove(b)
+        self._flush_faults(t)
         return list(recs.values())
 
     # -- event loop (scheduler-driven: chunked prefill, SLO ordering) -------
@@ -559,6 +656,8 @@ class EPSimulator:
         switched = False
 
         while arrivals or waiting or prefilling or running:
+            self.now = t
+            t += self._poll_faults(t)         # injected faults (chaos)
             self.now = t
             if drift_at is not None and not switched and t >= drift_at:
                 self.profile = drift_profile
@@ -663,6 +762,7 @@ class EPSimulator:
                 t = arrivals[0].arrival
                 continue
             break
+        self._flush_faults(t)
         return list(recs.values())
 
     # -- summary helpers ----------------------------------------------------

@@ -24,7 +24,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import (PerfModel, ReplicatedPlacement, SolveContext,
-                        get_policy)
+                        compact_placement, get_policy)
 
 __all__ = ["StragglerDetector", "replan_after_loss", "elastic_targets"]
 
@@ -67,24 +67,35 @@ def replan_after_loss(
 ) -> Tuple[ReplicatedPlacement, np.ndarray]:
     """Re-solve placement over surviving ranks with any registered policy.
 
-    Resolved through the :mod:`repro.core.policy` registry — perf models
-    are forwarded exactly when the policy's capabilities ask for them, so a
-    newly registered policy works here without edits. Returns (unified
-    placement over G' survivors — singleton policies give the r_max = 1
-    degenerate — and rank_map (G',) giving each new rank index its original
-    physical rank id; the launcher uses it to rebuild the mesh and the
-    migration plan).
+    Routes through the registry's *masked-solve* path
+    (``SolveContext.dead_ranks``) — the same code the serving
+    controller's ``mask_ranks`` / ``unmask_ranks`` elastic shrink/grow
+    uses — so training relaunch and live serving cannot disagree about
+    what a survivor solve means (survivor budgets, masked topology,
+    replication-capability guards). The full-G masked result (dead ranks
+    hold all-phantom zero-share windows) is then compacted to the
+    survivor-only geometry with
+    :func:`~repro.core.placement.compact_placement`, because a training
+    relaunch rebuilds the mesh over the survivors rather than pinning the
+    old geometry. Returns (unified placement over G' survivors —
+    singleton policies give the r_max = 1 degenerate — and rank_map (G',)
+    giving each new rank index its original physical rank id; the
+    launcher uses it to rebuild the mesh and the migration plan).
     """
     G = len(perf_models)
-    survivors = [g for g in range(G) if g not in set(lost_ranks)]
+    dead = tuple(sorted(set(int(g) for g in lost_ranks)))
+    survivors = [g for g in range(G) if g not in set(dead)]
     if not survivors:
         raise ValueError("no surviving ranks")
     pol = get_policy(policy)
-    models = [perf_models[g] for g in survivors]
     ctx = SolveContext(
-        w=w, n_ranks=len(survivors),
-        perf_models=models if pol.capabilities.needs_perf_models else None)
-    return pol.solve(ctx), np.asarray(survivors, dtype=np.int32)
+        w=w, n_ranks=G,
+        perf_models=(tuple(perf_models)
+                     if pol.capabilities.needs_perf_models else None),
+        dead_ranks=dead)
+    full = pol.solve(ctx)
+    return (compact_placement(full, survivors),
+            np.asarray(survivors, dtype=np.int32))
 
 
 def elastic_targets(perf_models: Sequence[PerfModel],

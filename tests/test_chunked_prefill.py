@@ -19,8 +19,9 @@ from repro.core import (DriftConfig, ViBEConfig, ViBEController,
                         make_cluster)
 from repro.models import (init_cache, init_params, make_moe_tables,
                           moe_perm_shape, prefill_chunk_fn, prefill_fn)
-from repro.serving import (Engine, EngineConfig, SchedulerConfig,
-                           WORKLOADS, Request, sample_requests, summarize)
+from repro.serving import (Engine, EngineConfig, RejectReason,
+                           SchedulerConfig, WORKLOADS, Request,
+                           sample_requests, summarize)
 
 ARCH = "qwen3-moe-235b-a22b"
 
@@ -128,9 +129,18 @@ class TestEngineChunked:
         assert eng.kv.peak_blocks > 0
 
     def test_oversized_prompt_rejected_at_submit(self):
+        # typed rejection, not an exception: submit returns the rejected
+        # records and tags them TOO_LONG (chaos invariant: every request
+        # finishes or carries a typed RejectReason)
         eng = _engine(EngineConfig(max_batch=2, max_seq=48, seed=0))
-        with pytest.raises(ValueError, match="max_seq"):
-            eng.submit([Request(0, 0.0, 100, 4)])
+        rejected = eng.submit([Request(0, 0.0, 100, 4)])
+        assert len(rejected) == 1
+        assert rejected[0].reject_reason is RejectReason.TOO_LONG
+        assert eng.records[0].rejected
+        assert eng.stats.rejected == {"too_long": 1}
+        assert not eng.waiting                    # never queued
+        records = eng.run(max_steps=10)
+        assert summarize(records)["n_rejected"] == 1
 
 
 @pytest.mark.slow

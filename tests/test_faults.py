@@ -1,0 +1,468 @@
+"""Fault injection, chaos drill, overload protection, elastic grow.
+
+Pins the PR's robustness invariants:
+
+* the fault DSL / default schedule are validated and seed-deterministic;
+* a full chaos drill (fail → stall → DCN brownout → recover) on a live
+  engine holds the four chaos invariants and ends with a healthy fleet;
+* elastic grow (``recover_rank``) restores the full rank set, and a
+  mask→unmask round trip is bit-identical to the healthy solve for every
+  replication-capable policy (hypothesis property);
+* overload protection is typed: watermark shedding rejects with
+  ``RejectReason.SHED``, decode preemption is bounded per request, and
+  admission-infeasible requests carry ``NEVER_FITS`` — none of it raises;
+* the token-conservation ledger holds on clean and chaotic runs alike;
+* the simulator's injection path applies the same schedule vocabulary.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_smoke
+from repro.core import (ClusterTopology, DriftConfig, ViBEConfig,
+                        ViBEController, get_policy, make_cluster,
+                        registered_policies)
+from repro.serving import (Engine, EngineConfig, EPSimulator, FaultInjector,
+                           FaultSchedule, FaultSpec, KVCacheConfig,
+                           RejectReason, SchedulerConfig, SimConfig, SLO,
+                           WORKLOADS, fail_rank, goodput, recover_rank,
+                           run_chaos, sample_requests, summarize)
+from repro.serving.workload import Request
+
+
+# ---------------------------------------------------------------------------
+# FaultSpec / FaultSchedule: validation, DSL, determinism
+# ---------------------------------------------------------------------------
+
+class TestFaultSpecValidation:
+    def test_unknown_kind_raises(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultSpec("power_surge", 3)
+
+    def test_fail_without_rank_raises(self):
+        with pytest.raises(ValueError, match="needs a target rank"):
+            FaultSpec("rank_fail", 3)
+
+    def test_recover_without_rank_raises(self):
+        with pytest.raises(ValueError, match="needs a target rank"):
+            FaultSpec("rank_recover", 3)
+
+    def test_negative_step_raises(self):
+        with pytest.raises(ValueError, match="at_step"):
+            FaultSpec("rank_fail", -1, rank=0)
+
+    def test_stall_magnitude_bounds(self):
+        with pytest.raises(ValueError, match="magnitude"):
+            FaultSpec("transient_stall", 3, magnitude=1.5)
+        with pytest.raises(ValueError, match="magnitude"):
+            FaultSpec("dcn_degrade", 3, magnitude=0.0)
+
+    def test_stall_duration_positive(self):
+        with pytest.raises(ValueError, match="duration"):
+            FaultSpec("transient_stall", 3, duration=0.0)
+
+
+class TestScheduleParse:
+    def test_dsl_round_trip(self):
+        sched = FaultSchedule.parse(
+            "fail@4:1,stall@6:2x0.4+0.5,dcn@7x0.5+0.8,recover@9:1",
+            n_ranks=4)
+        kinds = [f.kind for f in sched.faults]
+        assert kinds == ["rank_fail", "transient_stall", "dcn_degrade",
+                         "rank_recover"]
+        stall = sched.faults[1]
+        assert (stall.at_step, stall.rank) == (6, 2)
+        assert stall.magnitude == pytest.approx(0.4)
+        assert stall.duration == pytest.approx(0.5)
+
+    def test_schedule_sorted_by_step(self):
+        sched = FaultSchedule.parse("recover@9:1,fail@4:1", n_ranks=4)
+        assert [f.at_step for f in sched.faults] == [4, 9]
+
+    def test_bad_item_raises(self):
+        with pytest.raises(ValueError, match="bad fault spec"):
+            FaultSchedule.parse("fail@4:1,bogus", n_ranks=4)
+
+    def test_empty_raises(self):
+        with pytest.raises(ValueError, match="empty"):
+            FaultSchedule.parse(" , ", n_ranks=4)
+
+    def test_default_is_seed_deterministic(self):
+        a = FaultSchedule.default(8, seed=3)
+        b = FaultSchedule.default(8, seed=3)
+        assert a.faults == b.faults
+        assert FaultSchedule.parse("default:3", 8).faults == a.faults
+        assert FaultSchedule.default(8, seed=4).faults != a.faults
+
+    def test_default_shape(self):
+        """Fail early, recover the same victim later, stall elsewhere."""
+        for seed in range(8):
+            s = FaultSchedule.default(4, seed=seed)
+            by_kind = {f.kind: f for f in s.faults}
+            assert set(by_kind) == {"rank_fail", "rank_recover",
+                                    "transient_stall", "dcn_degrade"}
+            assert by_kind["rank_recover"].rank == by_kind["rank_fail"].rank
+            assert by_kind["rank_recover"].at_step \
+                > by_kind["rank_fail"].at_step
+            assert by_kind["transient_stall"].rank != by_kind["rank_fail"].rank
+
+    def test_default_needs_two_ranks(self):
+        with pytest.raises(ValueError, match=">= 2 ranks"):
+            FaultSchedule.default(1)
+
+
+# ---------------------------------------------------------------------------
+# engine chaos drill (module-scoped: construction jits the smoke model)
+# ---------------------------------------------------------------------------
+
+TOPO = ClusterTopology.uniform(2, 2, 50e9)   # 4 ranks on 2 nodes
+
+
+def _engine(policy="vibe_r", topology=None, **cfg_kw):
+    cfg = get_smoke("qwen3-moe-235b-a22b")
+    from repro.models import moe_perm_shape
+    n_moe, n_slots = moe_perm_shape(cfg, None, "train")
+    cluster = make_cluster(4, "mi325x", d_model=cfg.d_model,
+                           d_ff=cfg.moe_d_ff, experts_per_rank=n_slots // 4)
+    ctl = ViBEController(
+        n_moe, n_slots, 4, cluster.fit_models(),
+        ViBEConfig(policy=policy, adaptive=False,
+                   expert_bytes=3 * cfg.d_model * cfg.moe_d_ff * 2,
+                   topology=topology))
+    eng = Engine(cfg, EngineConfig(max_batch=2, max_seq=48, seed=0,
+                                   topology=topology, **cfg_kw),
+                 controller=ctl, cluster=cluster)
+    return eng
+
+
+def _short_requests(n, start_id=0, seed=0):
+    reqs = sample_requests(WORKLOADS["sharegpt"], n, qps=100.0, seed=seed)
+    return [Request(start_id + i, r.arrival, 8, 6)
+            for i, r in enumerate(reqs)]
+
+
+@pytest.fixture(scope="module")
+def chaos():
+    """One full drill — every fault kind fires mid-traffic on a 2-node
+    topology (dcn_degrade needs ``EngineConfig.topology``)."""
+    eng = _engine(topology=TOPO)
+    sched = FaultSchedule.parse(
+        "fail@3:1,stall@5:0x0.4+0.5,dcn@6x0.5+0.3,recover@8:1", n_ranks=4)
+    report = run_chaos(eng, _short_requests(8), sched)
+    return eng, report
+
+
+class TestChaosDrill:
+    def test_invariants_hold(self, chaos):
+        _, report = chaos
+        assert report.ok, report.violations
+
+    def test_every_fault_applied(self, chaos):
+        _, report = chaos
+        assert not report.skipped
+        assert [s.kind for s, _ in report.applied] == [
+            "rank_fail", "transient_stall", "dcn_degrade", "rank_recover"]
+
+    def test_fleet_healthy_after_drill(self, chaos):
+        eng, _ = chaos
+        assert eng.controller.dead_ranks == ()
+        assert eng.kv.used_blocks == 0 and eng.kv.n_seqs == 0
+
+    def test_dcn_bandwidth_restored(self, chaos):
+        eng, _ = chaos
+        assert eng.config.topology.dcn_bw == pytest.approx(TOPO.dcn_bw)
+
+    def test_stall_composed_into_variability(self, chaos):
+        eng, _ = chaos
+        injected = [e for e in eng.cluster.events if e.kind == "transient"
+                    and e.magnitude == pytest.approx(0.4)]
+        assert len(injected) == 1 and injected[0].device == 0
+
+    def test_all_requests_complete(self, chaos):
+        _, report = chaos
+        assert len(report.records) == 8
+        assert all(np.isfinite(r.finished_at) for r in report.records)
+        assert goodput(report.records, SLO(ttft=1e9, tpot=1e9)) == 1.0
+
+    def test_fail_and_recover_recorded_on_controller(self, chaos):
+        eng, _ = chaos
+        kinds = [u.kind for u in eng.controller.updates]
+        assert kinds.count("fail") == 1 and kinds.count("recover") == 1
+
+    def test_infeasible_faults_skipped_not_raised(self, chaos):
+        """Re-running a schedule the fleet state makes infeasible logs
+        skips; chaos never crashes the system it stresses. (Runs last on
+        the shared engine; leaves it healthy.)"""
+        eng, _ = chaos
+        cur = eng.stats.steps
+        sched = FaultSchedule((
+            FaultSpec("rank_recover", cur + 1, rank=2),     # not dead
+            FaultSpec("rank_fail", cur + 2, rank=0),
+            FaultSpec("rank_fail", cur + 3, rank=0),        # already dead
+            FaultSpec("rank_recover", cur + 4, rank=0),
+        ))
+        report = run_chaos(eng, _short_requests(4, start_id=100), sched)
+        assert report.ok, report.violations
+        reasons = {s.kind: why for s, why in report.skipped}
+        assert "not dead" in reasons["rank_recover"]
+        assert "already dead" in reasons["rank_fail"]
+        assert [s.kind for s, _ in report.applied] == ["rank_fail",
+                                                       "rank_recover"]
+        assert eng.controller.dead_ranks == ()
+
+    def test_flush_applies_late_faults_on_drain(self, chaos):
+        """A recover scheduled past the last step must still fire — the
+        drill flushes pending faults when the queue drains, so a drill
+        never strands the fleet degraded."""
+        eng, _ = chaos
+        cur = eng.stats.steps
+        sched = FaultSchedule((
+            FaultSpec("rank_fail", cur + 2, rank=3),
+            FaultSpec("rank_recover", cur + 10_000, rank=3),
+        ))
+        report = run_chaos(eng, _short_requests(4, start_id=200), sched)
+        assert report.ok, report.violations
+        assert not report.skipped
+        assert eng.controller.dead_ranks == ()
+
+
+class TestInjectorGuards:
+    def test_last_survivor_never_killed(self):
+        """FaultInjector refuses to take down the whole fleet even when
+        the schedule asks for it."""
+        eng = _engine()
+        sched = FaultSchedule(tuple(
+            FaultSpec("rank_fail", 2 + g, rank=g) for g in range(4)))
+        report = run_chaos(eng, _short_requests(4), sched)
+        assert report.ok, report.violations
+        assert len(eng.controller.dead_ranks) == 3
+        assert [why for _, why in report.skipped] \
+            == ["would kill the last survivor"]
+
+    def test_controllerless_engine_skips_rank_faults(self):
+        cfg = get_smoke("qwen3-moe-235b-a22b")
+        eng = Engine(cfg, EngineConfig(max_batch=2, max_seq=48, seed=0))
+        sched = FaultSchedule.parse("fail@1:0,recover@2:0", n_ranks=4)
+        report = run_chaos(eng, _short_requests(2), sched)
+        assert report.ok, report.violations
+        assert not report.applied
+        assert all(why == "no controller" for _, why in report.skipped)
+
+    def test_dcn_without_topology_skipped(self):
+        inj = FaultInjector(FaultSchedule.parse("dcn@0x0.5+0.5", 4))
+        eng = _engine()                       # no topology configured
+        inj.poll(eng)
+        assert [why for _, why in inj.skipped] \
+            == ["no fleet topology (flat pricing)"]
+
+
+# ---------------------------------------------------------------------------
+# elastic grow: fail → recover round trip on a live engine
+# ---------------------------------------------------------------------------
+
+class TestRecoverRank:
+    @pytest.fixture(scope="class")
+    def roundtrip(self):
+        eng = _engine()
+        eng.submit(_short_requests(6))
+        for _ in range(3):
+            eng.step()
+        fail = fail_rank(eng, 2)
+        rec = recover_rank(eng, 2)
+        records = eng.run(max_steps=400)
+        return eng, fail, rec, records
+
+    def test_reports(self, roundtrip):
+        _, fail, rec, _ = roundtrip
+        assert fail.rank == rec.rank == 2
+        assert rec.dead_after == ()
+        assert rec.migration_bytes >= 0
+
+    def test_all_requests_complete_after_grow(self, roundtrip):
+        eng, _, _, records = roundtrip
+        assert all(np.isfinite(r.finished_at) for r in records)
+        assert eng.kv.used_blocks == 0
+
+    def test_recovered_rank_carries_traffic_again(self, roundtrip):
+        eng, _, _, _ = roundtrip
+        pl = eng.controller.placement
+        loads = pl.rank_loads(np.ones((eng.controller.L, eng.controller.E)))
+        assert loads[:, 2].sum() > 0.0
+
+    def test_token_ledger_balances_through_fail_recover(self, roundtrip):
+        eng, _, _, _ = roundtrip
+        st = eng.stats
+        assert st.prefill_tokens + st.decode_tokens \
+            == st.useful_tokens + st.lost_tokens
+
+    def test_recover_live_rank_raises(self, roundtrip):
+        eng, _, _, _ = roundtrip
+        with pytest.raises(ValueError, match="not dead"):
+            recover_rank(eng, 1)
+
+    def test_recover_out_of_range_raises(self, roundtrip):
+        eng, _, _, _ = roundtrip
+        with pytest.raises(ValueError, match="outside"):
+            recover_rank(eng, 9)
+
+
+# mask→unmask must restore the healthy placement bit-identically for every
+# replication-capable policy (the elastic-grow correctness property: a
+# recovered fleet serves exactly the placement a never-failed fleet would)
+REPLICATION_POLICIES = sorted(
+    p for p in registered_policies()
+    if get_policy(p).capabilities.supports_replication)
+
+
+def test_replication_policy_roster():
+    assert REPLICATION_POLICIES == ["harmoeny", "vibe_h", "vibe_r"]
+
+
+@settings(max_examples=12, deadline=None)
+@given(policy=st.sampled_from(REPLICATION_POLICIES),
+       rank=st.integers(min_value=0, max_value=3))
+def test_mask_unmask_restores_healthy_placement(policy, rank):
+    cluster = make_cluster(4, "mi325x", seed=0)
+    ctl = ViBEController(2, 8, 4, cluster.fit_models(),
+                         ViBEConfig(policy=policy, adaptive=False,
+                                    topology=TOPO))
+    healthy = ctl.placement
+    ctl.mask_ranks((rank,))
+    masked = ctl.placement
+    spr = masked.slots_per_rank
+    np.testing.assert_allclose(
+        masked.share[:, rank * spr:(rank + 1) * spr], 0.0)
+    ctl.unmask_ranks((rank,))
+    assert ctl.dead_ranks == ()
+    np.testing.assert_array_equal(ctl.placement.slot_expert,
+                                  healthy.slot_expert)
+    np.testing.assert_array_equal(ctl.placement.share, healthy.share)
+
+
+# ---------------------------------------------------------------------------
+# overload protection: typed rejection, shedding, bounded preemption
+# ---------------------------------------------------------------------------
+
+def _tiny_engine(n_blocks, **sched_kw):
+    """Controllerless engine with a deliberately starved KV pool (the
+    virtual clock still advances via the trivial-fallback pricing)."""
+    cfg = get_smoke("qwen3-moe-235b-a22b")
+    return Engine(cfg, EngineConfig(
+        max_batch=2, max_seq=48, seed=0,
+        kv=KVCacheConfig(block_size=16, n_blocks=n_blocks),
+        scheduler=SchedulerConfig(**sched_kw)))
+
+
+class TestTypedRejection:
+    def test_never_fits_at_submit(self):
+        eng = _tiny_engine(2)
+        rejected = eng.submit([Request(0, 0.0, 16, 31),     # 3 blocks > 2
+                               Request(1, 0.0, 8, 4)])
+        assert [r.req_id for r in rejected] == [0]
+        assert rejected[0].reject_reason is RejectReason.NEVER_FITS
+        assert eng.stats.rejected == {"never_fits": 1}
+        records = eng.run(max_steps=200)
+        assert summarize(records)["n_rejected"] == 1
+        assert np.isfinite(eng.records[1].finished_at)
+
+    def test_shed_rejects_lapsed_waiters_under_pressure(self):
+        eng = _tiny_engine(4, shed_watermark=0.5)
+        # A occupies 3/4 blocks (utilization 0.75 >= watermark); B can't
+        # admit behind it and its TTFT deadline lapses immediately
+        eng.submit([Request(0, 0.0, 16, 31),
+                    Request(1, 0.0, 16, 4, ttft_slo=1e-6)])
+        records = eng.run(max_steps=400)
+        shed = eng.records[1]
+        assert shed.reject_reason is RejectReason.SHED
+        assert not np.isfinite(shed.finished_at)
+        assert eng.stats.rejected == {"shed": 1}
+        assert np.isfinite(eng.records[0].finished_at)
+        assert summarize(records)["n_rejected"] == 1
+        assert eng.kv.used_blocks == 0
+
+    def test_no_shedding_below_watermark(self):
+        """Identical traffic with an un-breached watermark sheds nothing —
+        the protection is load-gated, not deadline-gated."""
+        eng = _tiny_engine(8, shed_watermark=0.99)
+        eng.submit([Request(0, 0.0, 16, 31),
+                    Request(1, 0.0, 16, 4, ttft_slo=1e-6)])
+        eng.run(max_steps=400)
+        assert eng.stats.rejected == {}
+        assert all(np.isfinite(r.finished_at)
+                   for r in eng.records.values())
+
+
+class TestPreemption:
+    def test_preemption_breaks_kv_deadlock(self):
+        """Two requests that can never coexist in the pool: without
+        preemption the waiter starves; with it both complete, each evicted
+        at most ``max_preemptions`` times."""
+        eng = _tiny_engine(4, preempt_decodes=True, max_preemptions=2)
+        eng.submit([Request(0, 0.0, 16, 31), Request(1, 0.0, 16, 31)])
+        records = eng.run(max_steps=2_000)
+        assert all(np.isfinite(r.finished_at) for r in records)
+        assert eng.stats.preemptions >= 1
+        for r in records:
+            assert r.preemptions <= 2
+        st = eng.stats
+        assert st.preemptions == sum(r.preemptions for r in records)
+        assert st.lost_tokens > 0
+        assert st.prefill_tokens + st.decode_tokens \
+            == st.useful_tokens + st.lost_tokens
+        assert eng.kv.used_blocks == 0
+
+    def test_preemption_off_by_default(self):
+        eng = _tiny_engine(8)
+        eng.submit([Request(0, 0.0, 16, 15), Request(1, 0.0, 16, 15)])
+        eng.run(max_steps=400)
+        assert eng.stats.preemptions == 0
+
+
+class TestTokenLedger:
+    def test_clean_run_conserves_tokens(self):
+        eng = _tiny_engine(8)
+        eng.submit([Request(0, 0.0, 16, 8), Request(1, 0.0, 8, 4)])
+        eng.run(max_steps=400)
+        st = eng.stats
+        assert st.lost_tokens == 0
+        assert st.prefill_tokens + st.decode_tokens == st.useful_tokens
+        assert st.useful_tokens > 0
+
+
+# ---------------------------------------------------------------------------
+# simulator fault injection (same schedule vocabulary, discrete-event side)
+# ---------------------------------------------------------------------------
+
+class TestSimulatorFaults:
+    def test_full_drill_applies_and_recovers(self):
+        cfg = get_smoke("qwen3-moe-235b-a22b")
+        from repro.models import moe_perm_shape
+        n_moe, n_slots = moe_perm_shape(cfg, None, "train")
+        cluster = make_cluster(4, "mi325x", d_model=cfg.d_model,
+                               d_ff=cfg.moe_d_ff,
+                               experts_per_rank=n_slots // 4, seed=0)
+        ctl = ViBEController(
+            n_moe, n_slots, 4, cluster.fit_models(),
+            ViBEConfig(policy="vibe_r", adaptive=False,
+                       expert_bytes=3 * cfg.d_model * cfg.moe_d_ff * 2))
+        sim = EPSimulator(cfg, cluster, WORKLOADS["sharegpt"],
+                          SimConfig(ep_degree=4, seed=1, topology=TOPO),
+                          controller=ctl)
+        sim.inject_faults(FaultSchedule.parse(
+            "fail@2:1,stall@3:0x0.4+0.3,dcn@4x0.5+0.3,recover@6:1",
+            n_ranks=4))
+        reqs = sample_requests(WORKLOADS["sharegpt"], 20, qps=50.0, seed=3)
+        recs = sim.run(reqs, phase="prefill")
+        applied = [s.kind for s, why in sim.fault_log if why == "applied"]
+        assert applied == ["rank_fail", "transient_stall", "dcn_degrade",
+                           "rank_recover"]
+        assert sim.controller.dead_ranks == ()
+        assert sim.cfg.topology.dcn_bw == pytest.approx(TOPO.dcn_bw)
+        assert all(np.isfinite(r.finished_at) for r in recs)
+        fails = [u for u in ctl.updates if u.kind == "fail"]
+        recovers = [u for u in ctl.updates if u.kind == "recover"]
+        assert len(fails) == 1 and len(recovers) == 1

@@ -90,3 +90,21 @@ class TestGoodput:
 
     def test_empty_records(self):
         assert goodput([], SLO(ttft=1.0, tpot=1.0)) == 0.0
+
+class TestSingleTokenTpot:
+    """output_len == 1: zero decode steps, so tpot is 0 by definition —
+    never a 0/0. Regression guard for the prefill-only request shape."""
+
+    def test_tpot_zero_not_nan(self):
+        r = _rec(0, ttft=0.1, n_out=1)
+        assert r.tpot == 0.0
+        assert np.isfinite(r.tpot)
+
+    def test_meets_and_goodput_count_it(self):
+        r = _rec(0, ttft=0.1, n_out=1)
+        assert r.meets(SLO(ttft=0.5, tpot=1e-9))   # tpot arm trivially met
+        assert goodput([r], SLO(ttft=0.5, tpot=0.01)) == 1.0
+
+    def test_summarize_stays_finite(self):
+        s = summarize([_rec(0, ttft=0.1, n_out=1)])
+        assert s["tpot_p50"] == 0.0 and np.isfinite(s["tpot_p99"])
