@@ -64,7 +64,6 @@ def _sim(model, profile_wl, serve_wl, policy, adaptive, cluster, perf,
 
 
 def run(model="deepseek-v3-671b", quick=True):
-    m = get(model)
     rows = []
     n_req = 200 if quick else 500
     cases = [("sonnet", "sonnet", 20.0), ("sharegpt", "sonnet", 20.0),

@@ -21,12 +21,12 @@ cost of carrying the injection machinery (zero, by construction).
 import numpy as np
 
 from repro.configs import get
-from repro.core import (ClusterTopology, DriftConfig, ViBEConfig,
-                        ViBEController, make_cluster)
+from repro.core import (ClusterTopology, ViBEConfig, ViBEController,
+                        make_cluster)
 from repro.serving import (EPSimulator, FaultSchedule, PAPER_SLOS, SLO,
                            SimConfig, TRACES, WORKLOADS, goodput,
                            sample_trace)
-from .common import PROFILE_TOKENS, emit, profile_W
+from .common import emit, profile_W
 
 EP = 8
 CHAOS_SEED = 7

@@ -18,9 +18,8 @@ from repro.configs import get
 from repro.core import (ClusterTopology, ClusterVariability, DriftConfig,
                         SolveContext, StealConfig, ViBEConfig, ViBEController,
                         get_policy, make_cluster)
-from repro.serving import (EPSimulator, PAPER_SLOS, SimConfig, WORKLOADS,
-                           goodput, routing_profile, sample_requests,
-                           slo_frontier, summarize)
+from repro.serving import (EPSimulator, SimConfig, WORKLOADS,
+                           routing_profile)
 
 MODELS = ("deepseek-v3-671b", "qwen3-moe-235b-a22b")
 PROFILE_TOKENS = 16_384            # paper's stressed operating point

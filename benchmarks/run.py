@@ -125,8 +125,43 @@ def _compare(name, fresh, base, keys, direction, verbose=True):
     return failures
 
 
-def check_regressions() -> int:
+def check_lint() -> list:
+    """``lint_clean`` gate: the in-repo analyzer must exit clean against
+    the committed baseline, and neither the inline-suppression count nor
+    the baseline's grandfathered findings may grow past what is committed
+    — a "fix" that silently adds a suppression or fattens the baseline is
+    a regression with extra steps."""
+    from repro.analysis import Baseline, analyze
+
+    bl_path = ".viblint-baseline.json"
+    baseline = Baseline.load(bl_path) if os.path.exists(bl_path) \
+        else Baseline()
+    rep = analyze(["src"], baseline=baseline)
     failures = []
+    print(f"# --- check lint_clean (vs {bl_path}) ---", flush=True)
+    for f in rep.active:
+        print(f"# {f.render()}", flush=True)
+    if rep.active:
+        failures.append(("lint_clean", "findings",
+                         f"{len(rep.active)} unsuppressed", 0.0))
+    if rep.suppression_count > baseline.suppression_budget:
+        failures.append((
+            "lint_clean", "suppressions",
+            f"{rep.suppression_count} inline > budget "
+            f"{baseline.suppression_budget}", 0.0))
+    if rep.stale_baseline:
+        failures.append(("lint_clean", "baseline",
+                         f"{len(rep.stale_baseline)} stale entr(ies) — "
+                         "prune fixed findings", 0.0))
+    print(f"# lint_clean: {len(rep.active)} finding(s), "
+          f"{rep.suppression_count}/{baseline.suppression_budget} "
+          f"suppressions, {len(rep.baselined)} baselined"
+          f"{' FAILED' if failures else ' ok'}", flush=True)
+    return failures
+
+
+def check_regressions() -> int:
+    failures = check_lint()
     for name, (stem, keys, direction) in CHECK_SPECS.items():
         path = os.path.join("results", "bench", f"{stem}.json")
         if not os.path.exists(path):
@@ -148,8 +183,8 @@ def check_regressions() -> int:
             # genuine code regression stays bad on both runs; transient
             # noise does not.
             print(f"# {name}: {len(harness_failures)} metric(s) over "
-                  f"tolerance — re-running once to rule out scheduler "
-                  f"noise", flush=True)
+                  "tolerance — re-running once to rule out scheduler "
+                  "noise", flush=True)
             retry = {r["label"]: r
                      for r in _run_restoring_baseline(name, path,
                                                       baseline_raw)}
@@ -166,10 +201,10 @@ def check_regressions() -> int:
     if failures:
         print("# --check FAILED:", file=sys.stderr)
         for name, label, k, ratio in failures:
-            print(f"#   {name}/{label}/{k}: {ratio:.2f}x over baseline",
-                  file=sys.stderr)
+            detail = f"{k}: {ratio:.2f}x over baseline" if ratio else k
+            print(f"#   {name}/{label}/{detail}", file=sys.stderr)
         return 1
-    print(f"# --check passed: no wall-clock regression "
+    print("# --check passed: no wall-clock regression "
           f"> {REGRESSION_TOL:.2f}x, no quality regression "
           f"> {QUALITY_TOL:.2f}x", flush=True)
     return 0

@@ -8,7 +8,6 @@ import argparse
 import dataclasses
 import tempfile
 
-import numpy as np
 
 from repro.configs import get_smoke
 import repro.configs.qwen3_moe_235b as q3
@@ -41,7 +40,7 @@ if __name__ == "__main__":
     print(f"loss: {losses[0]:.3f} → {losses[-1]:.3f} over {args.steps} steps")
     if tallies is not None:
         per_expert = tallies.sum(0)
-        print(f"router specialization: expert load max/min = "
+        print("router specialization: expert load max/min = "
               f"{per_expert.max() / max(per_expert.min(), 1):.2f} "
-              f"(this matrix seeds ViBE's Phase 2 placement)")
+              "(this matrix seeds ViBE's Phase 2 placement)")
     print(f"checkpoints in {ckpt} (restartable: rerun with --ckpt-dir)")

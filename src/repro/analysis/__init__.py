@@ -1,0 +1,52 @@
+"""repro.analysis — repo-invariant static analysis (stdlib-only).
+
+The conventions that make this repo's A/B claims trustworthy are not
+enforceable by generic linters: honest pricing on *both* virtual clocks,
+no recompiles across recalibrations/share refreshes/chunked prefill, and
+bit-identical seeded replays. This package encodes them as AST rules over
+a pluggable registry (the placement-policy registry pattern):
+
+* ``trace``   — recompile/concretization hazards in jit-reachable code
+* ``det``     — seed-determinism hygiene in ``repro.core``/``repro.serving``
+* ``parity``  — clock-pricing parity across engine and simulator
+* ``frozen``  — frozen-config + registry-singleton mutation hygiene
+* ``imports`` — unused imports (in-repo F401 for ruff-less containers)
+
+CLI::
+
+    python -m repro.analysis src/ [--select trace,parity] [--ignore det]
+        [--format github] [--baseline .viblint-baseline.json]
+
+Suppress one finding with a justified inline marker (the justification is
+mandatory)::
+
+    x = int(n_valid)   # viblint: ignore[trace.concretize] -- host-side
+                       #   scalar: this branch runs outside the jit
+
+Deliberately stdlib-only: the CI lint lane runs it without installing
+jax/numpy.
+"""
+
+from .findings import Finding
+from .project import (AnalysisReport, Baseline, ParsedFile, Project, analyze,
+                      load_project)
+from .registry import (AnalysisRule, UnknownRuleError, get_rule,
+                       register_rule, registered_rules)
+from . import rules as _rules        # registers the built-in families
+
+__all__ = [
+    "Finding",
+    "AnalysisReport",
+    "Baseline",
+    "ParsedFile",
+    "Project",
+    "analyze",
+    "load_project",
+    "AnalysisRule",
+    "UnknownRuleError",
+    "get_rule",
+    "register_rule",
+    "registered_rules",
+]
+
+del _rules

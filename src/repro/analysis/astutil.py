@@ -1,0 +1,81 @@
+"""Small AST helpers shared by the rule modules (stdlib-only)."""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Tuple
+
+__all__ = ["dotted_name", "FunctionIndex", "iter_functions",
+           "imported_modules", "from_imports"]
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for Name/Attribute chains, else None (calls, subscripts
+    and other dynamic bases yield None — we only match static spellings)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def iter_functions(tree: ast.AST) -> Iterator[Tuple[ast.AST, str]]:
+    """Every (FunctionDef | AsyncFunctionDef, qualname) in the tree."""
+
+    def visit(node: ast.AST, prefix: str) -> Iterator[Tuple[ast.AST, str]]:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{prefix}{child.name}"
+                yield child, q
+                yield from visit(child, f"{q}.<locals>.")
+            elif isinstance(child, ast.ClassDef):
+                yield from visit(child, f"{prefix}{child.name}.")
+            else:
+                yield from visit(child, prefix)
+
+    yield from visit(tree, "")
+
+
+class FunctionIndex:
+    """Line-span index: which function encloses a given line."""
+
+    def __init__(self, tree: ast.AST):
+        #: innermost-last spans: (start, end, qualname, node)
+        self.spans: List[Tuple[int, int, str, ast.AST]] = sorted(
+            (f.lineno, f.end_lineno or f.lineno, q, f)
+            for f, q in iter_functions(tree))
+
+    def enclosing(self, line: int) -> Optional[str]:
+        """Qualname of the innermost function containing ``line``."""
+        best = None
+        for start, end, q, _ in self.spans:
+            if start <= line <= end:
+                if best is None or start >= best[0]:
+                    best = (start, q)
+        return best[1] if best else None
+
+
+def imported_modules(tree: ast.AST) -> Dict[str, str]:
+    """Local name → module for plain ``import x [as y]`` statements."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = a.name
+    return out
+
+
+def from_imports(tree: ast.AST) -> Dict[str, Tuple[str, str, int]]:
+    """Local name → (module, original name, relative level) for
+    ``from m import n [as k]`` statements (``level`` counts leading dots)."""
+    out: Dict[str, Tuple[str, str, int]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            for a in node.names:
+                if a.name != "*":
+                    out[a.asname or a.name] = (node.module or "", a.name,
+                                               node.level)
+    return out

@@ -1,0 +1,79 @@
+"""``python -m repro.analysis`` — the static-analysis CLI.
+
+Exit status 0 means zero unsuppressed, unbaselined findings; anything
+else is 1. ``--format github`` emits workflow commands so CI annotates
+the offending lines directly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from .project import Baseline, analyze
+from .registry import registered_rules
+
+__all__ = ["main"]
+
+DEFAULT_BASELINE = ".viblint-baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-invariant static analysis "
+                    f"(rule families: {', '.join(registered_rules())})")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to analyze (default: src)")
+    ap.add_argument("--select", default="",
+                    help="comma-separated rule ids/families to run "
+                         "(default: all)")
+    ap.add_argument("--ignore", default="",
+                    help="comma-separated rule ids/families to skip")
+    ap.add_argument("--format", choices=("text", "github"), default="text")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON grandfathering known findings "
+                         f"(default: {DEFAULT_BASELINE} when present)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write the active findings to the baseline file "
+                         "and exit 0 (deliberate grandfathering only)")
+    ap.add_argument("--root", default=None,
+                    help="path findings are reported relative to "
+                         "(default: cwd)")
+    args = ap.parse_args(argv)
+
+    baseline_path = Path(args.baseline) if args.baseline else \
+        Path(DEFAULT_BASELINE)
+    baseline = None
+    if baseline_path.exists():
+        baseline = Baseline.load(baseline_path)
+
+    report = analyze(
+        [Path(p) for p in args.paths],
+        root=Path(args.root) if args.root else None,
+        select=[s for s in args.select.split(",") if s],
+        ignore=[s for s in args.ignore.split(",") if s],
+        baseline=baseline)
+
+    if args.write_baseline:
+        bl = baseline or Baseline()
+        bl.suppression_budget = max(bl.suppression_budget,
+                                    report.suppression_count)
+        bl.dump(baseline_path, report.active)
+        print(f"wrote {len(report.active)} finding(s) + suppression budget "
+              f"{bl.suppression_budget} to {baseline_path}")
+        return 0
+
+    for f in report.active:
+        print(f.render_github() if args.format == "github" else f.render())
+    summary = (f"{len(report.active)} finding(s), "
+               f"{len(report.suppressed)} suppressed, "
+               f"{len(report.baselined)} baselined, "
+               f"{report.suppression_count} inline suppression(s)")
+    if report.stale_baseline:
+        summary += (f"; {len(report.stale_baseline)} stale baseline "
+                    "entr(ies) — fixed findings, prune them")
+    print(("# " if args.format == "text" else "") + summary,
+          file=sys.stderr)
+    return 1 if report.active else 0

@@ -1,0 +1,60 @@
+"""Finding: one static-analysis diagnostic, pinned to file:line.
+
+Mirrors the shape every consumer needs — the CLI renders them as
+``path:line: severity rule message``, the GitHub formatter as workflow
+commands, and the baseline matcher compares the ``(path, rule, message)``
+identity (line numbers churn under unrelated edits, so they are display
+metadata, not identity).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["Finding", "SEVERITIES"]
+
+#: ordered weakest → strongest; the CLI exits non-zero on ANY unsuppressed
+#: finding regardless of severity (a warning you disagree with gets an
+#: inline justified suppression, not a free pass)
+SEVERITIES = ("warning", "error")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One diagnostic: where, which rule, what went wrong.
+
+    ``rule`` is a dotted id ``family.check`` (e.g. ``trace.concretize``);
+    ``--select``/``--ignore`` and inline suppressions match by exact id or
+    by family prefix.
+    """
+
+    path: str                    # repo-relative, forward slashes
+    line: int
+    rule: str
+    message: str
+    severity: str = "error"
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"severity must be one of {SEVERITIES}, "
+                             f"got {self.severity!r}")
+        if "." not in self.rule:
+            raise ValueError("rule id must be 'family.check', "
+                             f"got {self.rule!r}")
+
+    @property
+    def family(self) -> str:
+        return self.rule.split(".", 1)[0]
+
+    def key(self) -> tuple:
+        """Baseline identity: stable across pure line-number churn."""
+        return (self.path, self.rule, self.message)
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}: {self.severity} "
+                f"[{self.rule}] {self.message}")
+
+    def render_github(self) -> str:
+        kind = "error" if self.severity == "error" else "warning"
+        return (f"::{kind} file={self.path},line={self.line},"
+                f"title={self.rule}::{self.message}")

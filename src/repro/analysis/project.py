@@ -1,0 +1,260 @@
+"""Parsed-source model + analysis driver: files, suppressions, baseline.
+
+``# viblint: ignore[rule-id, ...] -- justification`` on a line suppresses
+matching findings *on that line only*; the justification after ``--`` is
+mandatory (an unexplained suppression is itself a finding —
+``suppress.unjustified`` — so exceptions stay auditable). Rule ids match
+exactly or by family prefix (``ignore[trace]`` covers every trace check).
+
+The baseline file grandfathers known findings so a new rule can land
+before every historical violation is fixed: a JSON object with a
+``findings`` list (matched by ``(path, rule, message)`` — line numbers are
+display metadata, not identity) and a ``suppression_budget`` int. The
+``benchmarks/run.py --check`` lint gate fails when either the active
+finding count or the number of inline suppressions grows past what the
+committed baseline admits, so neither can creep in silently.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import json
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from .findings import Finding
+from .registry import get_rule, registered_rules
+
+__all__ = ["ParsedFile", "Project", "Baseline", "AnalysisReport", "analyze",
+           "load_project"]
+
+#: marker grammar: ``viblint: ignore[trace.concretize, det] -- reason``
+_SUPPRESS_RE = re.compile(
+    r"#\s*viblint:\s*ignore\[([^\]]*)\]\s*(?:--\s*(.*\S))?\s*$")
+#: anything that *looks* like a marker attempt — used to flag typos
+#: (``viblint ignore[...]``, ``viblint: ignore x``) as suppress.malformed
+#: without tripping on prose comments that merely mention the tool
+_MARKER_ATTEMPT_RE = re.compile(r"#\s*viblint\b")
+
+
+@dataclasses.dataclass
+class ParsedFile:
+    """One source file: text, AST, and per-line suppressions."""
+
+    path: Path                       # absolute
+    rel: str                         # project-relative, forward slashes
+    source: str
+    tree: Optional[ast.AST]          # None when the file failed to parse
+    #: line → rule ids / family prefixes suppressed on that line
+    suppressions: Dict[int, Set[str]] = dataclasses.field(
+        default_factory=dict)
+    #: lines carrying an ignore[...] with no `-- justification`
+    unjustified: List[int] = dataclasses.field(default_factory=list)
+
+    def walk(self) -> Iterator[ast.AST]:
+        return iter(()) if self.tree is None else ast.walk(self.tree)
+
+    def suppressed(self, finding: Finding) -> bool:
+        ids = self.suppressions.get(finding.line)
+        return bool(ids) and (finding.rule in ids or finding.family in ids)
+
+
+def _comments(source: str) -> Iterator[Tuple[int, str]]:
+    """(line, text) of every comment token — suppression markers live in
+    real comments only, so docstrings *describing* the syntax are inert."""
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type == tokenize.COMMENT:
+                yield tok.start[0], tok.string
+    except tokenize.TokenError:      # unterminated string etc. — the AST
+        return                       # parse already reported it
+
+
+def _parse_file(path: Path, rel: str) -> Tuple[ParsedFile, List[Finding]]:
+    source = path.read_text(encoding="utf-8")
+    findings: List[Finding] = []
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as e:
+        tree = None
+        findings.append(Finding(rel, e.lineno or 1, "parse.syntax-error",
+                                f"file does not parse: {e.msg}"))
+    pf = ParsedFile(path, rel, source, tree)
+    for lineno, text in _comments(source):
+        m = _SUPPRESS_RE.search(text)
+        if m is None:
+            if _MARKER_ATTEMPT_RE.search(text):
+                # a malformed marker would otherwise silently suppress
+                # nothing while the author believes it does
+                findings.append(Finding(
+                    rel, lineno, "suppress.malformed",
+                    "unparseable viblint marker — expected "
+                    "`# viblint: ignore[rule-id] -- justification`"))
+            continue
+        ids = {s.strip() for s in m.group(1).split(",") if s.strip()}
+        if not ids:
+            findings.append(Finding(rel, lineno, "suppress.malformed",
+                                    "viblint ignore[] lists no rule ids"))
+            continue
+        if not m.group(2):
+            pf.unjustified.append(lineno)
+            findings.append(Finding(
+                rel, lineno, "suppress.unjustified",
+                "suppression without a justification — append "
+                "`-- <why this exception is sound>`"))
+            continue                 # unjustified markers suppress nothing
+        pf.suppressions[lineno] = ids
+    return pf, findings
+
+
+@dataclasses.dataclass
+class Project:
+    """Every parsed file under the analyzed paths, root-relative."""
+
+    root: Path
+    files: List[ParsedFile]
+
+    def file(self, suffix: str) -> Optional[ParsedFile]:
+        """Look a file up by relative-path suffix (e.g.
+        ``repro/serving/engine.py``); None when absent from the scan."""
+        for pf in self.files:
+            if pf.rel.endswith(suffix):
+                return pf
+        return None
+
+    @property
+    def suppression_count(self) -> int:
+        return sum(len(pf.suppressions) for pf in self.files)
+
+
+def load_project(paths: Sequence[Path], root: Optional[Path] = None,
+                 ) -> Tuple[Project, List[Finding]]:
+    """Collect and parse ``*.py`` under ``paths`` (files or directories).
+
+    ``root`` anchors the relative paths findings report; defaults to the
+    common parent so ``repro.analysis src/`` and ``repro.analysis
+    src/repro/core`` emit comparable paths.
+    """
+    seen: Set[Path] = set()
+    py_files: List[Path] = []
+    for p in paths:
+        p = Path(p).resolve()
+        candidates = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for c in candidates:
+            if c not in seen and c.suffix == ".py":
+                seen.add(c)
+                py_files.append(c)
+    if root is None:
+        root = Path(".").resolve()
+    root = Path(root).resolve()
+    files, findings = [], []
+    for p in py_files:
+        try:
+            rel = p.relative_to(root).as_posix()
+        except ValueError:
+            rel = p.as_posix()
+        pf, f = _parse_file(p, rel)
+        files.append(pf)
+        findings.extend(f)
+    return Project(root, files), findings
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Baseline:
+    """Grandfathered findings + the inline-suppression budget."""
+
+    findings: List[Tuple[str, str, str]] = dataclasses.field(
+        default_factory=list)            # (path, rule, message) keys
+    suppression_budget: int = 0
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        raw = json.loads(Path(path).read_text(encoding="utf-8"))
+        return cls(
+            findings=[(f["path"], f["rule"], f["message"])
+                      for f in raw.get("findings", [])],
+            suppression_budget=int(raw.get("suppression_budget", 0)))
+
+    def dump(self, path: Path, findings: Sequence[Finding] = ()) -> None:
+        payload = {
+            "findings": [{"path": f.path, "rule": f.rule,
+                          "message": f.message}
+                         for f in sorted(findings)],
+            "suppression_budget": self.suppression_budget,
+        }
+        Path(path).write_text(json.dumps(payload, indent=2) + "\n",
+                              encoding="utf-8")
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AnalysisReport:
+    """Everything one analysis run produced, pre-partitioned."""
+
+    active: List[Finding]            # unsuppressed, unbaselined — failures
+    suppressed: List[Finding]        # silenced by a justified inline marker
+    baselined: List[Finding]         # grandfathered by the baseline file
+    suppression_count: int           # justified inline markers in the scan
+    stale_baseline: List[Tuple[str, str, str]]  # baseline entries nothing
+    #                                  matched — fixed findings to prune
+
+    @property
+    def ok(self) -> bool:
+        return not self.active
+
+
+def analyze(paths: Sequence[Path], *, root: Optional[Path] = None,
+            select: Sequence[str] = (), ignore: Sequence[str] = (),
+            baseline: Optional[Baseline] = None) -> AnalysisReport:
+    """Run every registered rule over ``paths`` and partition the findings.
+
+    ``select``/``ignore`` filter by exact rule id or family prefix
+    (select wins first, then ignore removes). The driver-level findings
+    (parse errors, malformed/unjustified suppressions) are always active —
+    they are defects of the suppression machinery itself.
+    """
+    project, findings = load_project(paths, root=root)
+    for family in registered_rules():
+        rule = get_rule(family)
+        if rule.scope == "project":
+            findings.extend(rule.check(project))
+        else:
+            for pf in project.files:
+                findings.extend(rule.check(pf))
+
+    def matches(f: Finding, pats: Sequence[str]) -> bool:
+        return any(f.rule == p or f.family == p for p in pats)
+
+    if select:
+        findings = [f for f in findings
+                    if matches(f, select) or f.family in ("parse", "suppress")]
+    if ignore:
+        findings = [f for f in findings if not matches(f, ignore)]
+
+    by_rel = {pf.rel: pf for pf in project.files}
+    active, suppressed, baselined = [], [], []
+    remaining = list(baseline.findings) if baseline is not None else []
+    for f in sorted(set(findings)):
+        pf = by_rel.get(f.path)
+        if pf is not None and pf.suppressed(f):
+            suppressed.append(f)
+        elif f.key() in remaining:
+            remaining.remove(f.key())
+            baselined.append(f)
+        else:
+            active.append(f)
+    return AnalysisReport(active=active, suppressed=suppressed,
+                          baselined=baselined,
+                          suppression_count=project.suppression_count,
+                          stale_baseline=remaining)

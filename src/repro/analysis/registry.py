@@ -1,0 +1,98 @@
+"""Pluggable analysis-rule registry (the placement-policy registry pattern).
+
+A rule is any object satisfying :class:`AnalysisRule`:
+
+* ``family``  — the registry key and finding-id prefix (``trace``, ``det``,
+  ``parity``, ``frozen``, ``imports``). Every finding a rule emits must
+  carry a ``family.<check>`` rule id under its own family.
+* ``scope``   — ``"file"`` (checked one :class:`~repro.analysis.project.
+  ParsedFile` at a time) or ``"project"`` (sees the whole
+  :class:`~repro.analysis.project.Project` at once — cross-file rules like
+  clock-pricing parity need both virtual clocks in view).
+* ``check(target)`` — yields :class:`~repro.analysis.findings.Finding`s.
+
+Registering a rule (one module, no driver edits) exposes it to the CLI's
+``--select``/``--ignore``, inline ``# viblint: ignore[...]`` suppressions,
+and the baseline machinery at once::
+
+    from repro.analysis import Finding, register_rule
+
+    @register_rule
+    class NoPrintRule:
+        family = "style"
+        scope = "file"
+        def check(self, pf):
+            for node in pf.walk():
+                ...
+                yield Finding(pf.rel, node.lineno, "style.print", "...")
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, Protocol, Tuple, runtime_checkable
+
+from .findings import Finding
+
+__all__ = ["AnalysisRule", "UnknownRuleError", "register_rule", "get_rule",
+           "registered_rules"]
+
+SCOPES = ("file", "project")
+
+
+@runtime_checkable
+class AnalysisRule(Protocol):
+    """Protocol every registered analysis rule satisfies."""
+
+    family: str
+    scope: str
+
+    def check(self, target) -> Iterable[Finding]:
+        """Yield findings for one file (scope="file") or the whole
+        project (scope="project")."""
+        ...
+
+
+class UnknownRuleError(ValueError):
+    """Raised for a rule family absent from the registry."""
+
+
+_REGISTRY: Dict[str, AnalysisRule] = {}
+
+
+def register_rule(rule, *, replace: bool = False):
+    """Add a rule to the registry; usable as a class decorator.
+
+    Accepts an :class:`AnalysisRule` instance or a zero-arg class (which is
+    instantiated). Duplicate families raise unless ``replace=True``.
+    Returns the argument unchanged so decorated classes stay usable.
+    """
+    inst = rule() if isinstance(rule, type) else rule
+    family = getattr(inst, "family", "")
+    if not family or not isinstance(family, str):
+        raise ValueError("analysis rule needs a non-empty string .family")
+    if not isinstance(inst, AnalysisRule):
+        raise TypeError(f"{family!r} does not satisfy the AnalysisRule "
+                        "protocol (family/scope/check)")
+    if inst.scope not in SCOPES:
+        raise ValueError(f"rule {family!r} scope must be one of {SCOPES}, "
+                         f"got {inst.scope!r}")
+    if family in _REGISTRY and not replace:
+        raise ValueError(f"analysis rule family {family!r} already "
+                         "registered (pass replace=True to override)")
+    _REGISTRY[family] = inst
+    return rule
+
+
+def get_rule(family: str) -> AnalysisRule:
+    """Registry lookup; unknown families list what *is* registered."""
+    try:
+        return _REGISTRY[family]
+    except KeyError:
+        raise UnknownRuleError(
+            f"unknown analysis rule family {family!r}; registered: "
+            f"{', '.join(registered_rules())}") from None
+
+
+def registered_rules() -> Tuple[str, ...]:
+    """Sorted families of all registered rules (drives the CLI listing)."""
+    return tuple(sorted(_REGISTRY))

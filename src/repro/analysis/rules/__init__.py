@@ -1,0 +1,12 @@
+"""Built-in rule families. Importing this package registers them all.
+
+Third-party rules register the same way: import
+:func:`repro.analysis.register_rule`, decorate a class with
+``family``/``scope``/``check``, and the CLI/driver pick it up.
+"""
+
+from . import (clock_parity, config_hygiene, determinism, imports,
+               trace_safety)
+
+__all__ = ["clock_parity", "config_hygiene", "determinism", "imports",
+           "trace_safety"]

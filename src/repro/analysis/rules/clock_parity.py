@@ -1,0 +1,165 @@
+"""``parity`` — the honest-pricing invariant, statically enforced.
+
+ROADMAP: *"engine and simulator virtual clocks price the active routing
+mode, moe impl, per-rank slot budgets, migration stalls, and time-varying
+hardware — so every A/B knob is visible in TTFT/TPOT/goodput."* The whole
+A/B methodology (and the GEM/HarMoEny baseline comparisons) rests on both
+clocks pricing the same knobs: a config field the engine prices but the
+simulator ignores makes every sweep that mixes the two silently
+incomparable.
+
+The rule cross-references the *shared* config surfaces — the
+``ServingConfig`` base fields, ``StealConfig``, and the
+``ClusterTopology`` link model — against attribute reads in each clock's
+module set:
+
+* engine clock    — ``serving/engine.py`` (+ the shared pricing helpers),
+* simulator clock — ``serving/simulator.py`` (+ the same helpers).
+
+Shared helpers (``core/steal.py``, ``core/topology.py``,
+``serving/scheduler.py``, ``serving/kvcache.py``) count for *both* clocks
+— a knob priced inside ``ClusterTopology.migration_cost`` is priced
+wherever that method is called from. Reads of ``self.<field>`` inside the
+config class's own body (``__post_init__`` validation) are excluded: a
+knob is not "priced" by validating its own range.
+
+Engine-only (``max_seq``, ``weighted_routing``, ``kv``) and simulator-only
+(``ep_degree``, ``ici_bw``, ...) subclass fields are single-surface by
+design and out of scope: only fields *declared on the shared classes* are
+checked.
+
+Findings anchor to the field's declaration line in the config file —
+that's where the fix (price it in the other clock, or move the field down
+to the single-surface subclass) starts.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Sequence, Set, Tuple
+
+from ..findings import Finding
+from ..project import ParsedFile, Project
+from ..registry import register_rule
+
+__all__ = ["ClockParityRule", "SHARED_CONFIGS", "ENGINE_FILES", "SIM_FILES",
+           "SHARED_PRICING_FILES"]
+
+#: shared-knob config classes → the file (suffix) declaring them
+SHARED_CONFIGS: Tuple[Tuple[str, str], ...] = (
+    ("ServingConfig", "repro/serving/config.py"),
+    ("StealConfig", "repro/core/steal.py"),
+    ("ClusterTopology", "repro/core/topology.py"),
+)
+ENGINE_FILES: Tuple[str, ...] = ("repro/serving/engine.py",)
+SIM_FILES: Tuple[str, ...] = ("repro/serving/simulator.py",)
+#: pricing helpers both clocks call — reads here count for both sides
+SHARED_PRICING_FILES: Tuple[str, ...] = (
+    "repro/core/steal.py", "repro/core/topology.py",
+    "repro/serving/scheduler.py", "repro/serving/kvcache.py",
+)
+
+
+def _class_fields(pf: ParsedFile, cls_name: str,
+                  ) -> List[Tuple[str, int, Tuple[int, int]]]:
+    """(field, line, __post_init__ span) for annotated fields declared
+    directly on ``cls_name`` (dataclass style); private and ClassVar fields
+    skipped. Only the ``__post_init__`` span is excluded from pricing reads
+    — a config class may legitimately price its own knobs in ordinary
+    methods (``ClusterTopology.migration_cost`` reads ``self.dcn_bw``), but
+    validating a field's range in ``__post_init__`` is not pricing."""
+    for node in pf.walk():
+        if isinstance(node, ast.ClassDef) and node.name == cls_name:
+            span = (0, 0)            # empty span: nothing excluded
+            for stmt in node.body:
+                if isinstance(stmt, ast.FunctionDef) \
+                        and stmt.name == "__post_init__":
+                    span = (stmt.lineno, stmt.end_lineno or stmt.lineno)
+            out = []
+            for stmt in node.body:
+                if isinstance(stmt, ast.AnnAssign) \
+                        and isinstance(stmt.target, ast.Name) \
+                        and not stmt.target.id.startswith("_"):
+                    ann = ast.unparse(stmt.annotation)
+                    if "ClassVar" in ann:
+                        continue
+                    out.append((stmt.target.id, stmt.lineno, span))
+            return out
+    return []
+
+
+def _attribute_reads(pf: ParsedFile,
+                     exclude_self_spans: Sequence[Tuple[int, int]],
+                     ) -> Set[str]:
+    """Attribute names read (Load context) in the file, minus
+    ``self.<attr>`` reads inside the excluded class spans (a config's own
+    ``__post_init__`` validation must not count as pricing)."""
+    reads: Set[str] = set()
+    for node in pf.walk():
+        if not (isinstance(node, ast.Attribute)
+                and isinstance(node.ctx, ast.Load)):
+            continue
+        if isinstance(node.value, ast.Name) and node.value.id == "self" \
+                and any(a <= node.lineno <= b for a, b in exclude_self_spans):
+            continue
+        reads.add(node.attr)
+    return reads
+
+
+@register_rule
+class ClockParityRule:
+    family = "parity"
+    scope = "project"
+
+    def __init__(self, shared_configs=SHARED_CONFIGS,
+                 engine_files=ENGINE_FILES, sim_files=SIM_FILES,
+                 shared_files=SHARED_PRICING_FILES):
+        self.shared_configs = tuple(shared_configs)
+        self.engine_files = tuple(engine_files)
+        self.sim_files = tuple(sim_files)
+        self.shared_files = tuple(shared_files)
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        engine_pfs = [project.file(s) for s in self.engine_files]
+        sim_pfs = [project.file(s) for s in self.sim_files]
+        if not any(engine_pfs) or not any(sim_pfs):
+            return                   # partial scan: no clocks in view
+        shared_pfs = [pf for s in self.shared_files
+                      if (pf := project.file(s)) is not None]
+
+        # class spans to exclude self-reads from, per file
+        spans: Dict[str, List[Tuple[int, int]]] = {}
+        fields: List[Tuple[str, str, str, int]] = []  # (cls, field, rel, ln)
+        for cls_name, suffix in self.shared_configs:
+            pf = project.file(suffix)
+            if pf is None or pf.tree is None:
+                continue
+            for field, line, span in _class_fields(pf, cls_name):
+                fields.append((cls_name, field, pf.rel, line))
+                spans.setdefault(pf.rel, []).append(span)
+
+        def reads(pfs: Sequence[ParsedFile]) -> Set[str]:
+            out: Set[str] = set()
+            for pf in pfs:
+                if pf is not None and pf.tree is not None:
+                    out |= _attribute_reads(pf, spans.get(pf.rel, ()))
+            return out
+
+        shared_reads = reads(shared_pfs)
+        engine_reads = reads([pf for pf in engine_pfs if pf]) | shared_reads
+        sim_reads = reads([pf for pf in sim_pfs if pf]) | shared_reads
+
+        for cls_name, field, rel, line in fields:
+            in_engine = field in engine_reads
+            in_sim = field in sim_reads
+            if in_engine == in_sim:
+                continue             # priced in both — or a dead knob,
+                #                      which is the unused-field lint's job
+            priced, missing = (("engine", "simulator") if in_engine
+                               else ("simulator", "engine"))
+            yield Finding(
+                rel, line, "parity.one-clock",
+                f"{cls_name}.{field} is read by the {priced} clock but "
+                f"never by the {missing} — every shared knob must be "
+                "priced on both virtual clocks (honest-pricing "
+                "invariant), or moved to a single-surface subclass")

@@ -1,0 +1,98 @@
+"""``frozen`` — frozen-config and registry-singleton hygiene.
+
+Every config in this repo is a frozen dataclass, and both registries
+(placement policies, schedulers, analysis rules) hand out long-lived
+singletons. Two mutation patterns defeat those guarantees while running
+fine on the happy path:
+
+* ``frozen.setattr-outside-post-init`` — ``object.__setattr__`` is the
+  sanctioned escape hatch *only* inside ``__post_init__`` (normalizing a
+  field during construction). Anywhere else it mutates an object every
+  holder believes is immutable — configs are shared across engine,
+  simulator, controller and benchmark sweeps, so a mutation in one
+  consumer corrupts the others' view.
+* ``frozen.registry-mutation`` — assigning attributes on an object
+  returned by ``get_policy`` / ``get_scheduler`` / ``get_rule`` mutates
+  the registry's shared singleton: every later lookup (other tests, other
+  engines in the same process) sees the edit.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from ..astutil import FunctionIndex, dotted_name
+from ..findings import Finding
+from ..project import ParsedFile
+from ..registry import register_rule
+
+__all__ = ["FrozenConfigRule", "REGISTRY_GETTERS"]
+
+REGISTRY_GETTERS = ("get_policy", "get_scheduler", "get_rule")
+
+
+def _is_registry_call(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and (dotted_name(node.func) or "").split(".")[-1]
+            in REGISTRY_GETTERS)
+
+
+@register_rule
+class FrozenConfigRule:
+    family = "frozen"
+    scope = "file"
+
+    def check(self, pf: ParsedFile) -> Iterator[Finding]:
+        if pf.tree is None:
+            return
+        index = FunctionIndex(pf.tree)
+        singleton_names = self._singleton_bindings(pf)
+        for node in pf.walk():
+            if isinstance(node, ast.Call):
+                name = dotted_name(node.func)
+                if name is not None and name.endswith("__setattr__"):
+                    enclosing = index.enclosing(node.lineno) or "<module>"
+                    if enclosing.split(".")[-1] != "__post_init__":
+                        yield Finding(
+                            pf.rel, node.lineno,
+                            "frozen.setattr-outside-post-init",
+                            f"object.__setattr__ in {enclosing}() mutates "
+                            "a frozen object after construction — the "
+                            "escape hatch is for __post_init__ "
+                            "normalization only")
+                # setattr(get_policy(...), ...) — same mutation, spelled
+                # through the builtin
+                elif name == "setattr" and node.args \
+                        and self._is_singleton(node.args[0],
+                                               singleton_names):
+                    yield Finding(
+                        pf.rel, node.lineno, "frozen.registry-mutation",
+                        "setattr on a registry-returned singleton — every "
+                        "later lookup shares this object")
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    if isinstance(t, ast.Attribute) and self._is_singleton(
+                            t.value, singleton_names):
+                        yield Finding(
+                            pf.rel, node.lineno, "frozen.registry-mutation",
+                            "attribute assignment on a registry-returned "
+                            f"singleton (.{t.attr} = ...) — every later "
+                            "lookup shares this object")
+
+    def _is_singleton(self, node: ast.AST, names: Set[str]) -> bool:
+        if _is_registry_call(node):
+            return True
+        return isinstance(node, ast.Name) and node.id in names
+
+    def _singleton_bindings(self, pf: ParsedFile) -> Set[str]:
+        """Names ever assigned from a registry getter (flow-insensitive)."""
+        out: Set[str] = set()
+        for node in pf.walk():
+            if isinstance(node, ast.Assign) and _is_registry_call(node.value):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        out.add(t.id)
+        return out

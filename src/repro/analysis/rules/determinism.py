@@ -1,0 +1,164 @@
+"""``det`` — seed-determinism hygiene for ``repro.core`` / ``repro.serving``.
+
+Both virtual clocks, the golden-placement suite and the seed-determinism
+battery assume bit-identical replays: same seed, same trace, same
+placement, same virtual timeline. Three things silently break that
+contract and are invisible at review time:
+
+* ``det.unseeded-rng``   — module-level ``np.random.*`` / stdlib
+  ``random.*`` sampling draws from hidden global state;
+  ``np.random.default_rng()`` with no seed is entropy-seeded. Every draw
+  must come from an explicitly seeded ``Generator`` (or a threaded-through
+  ``rng`` argument).
+* ``det.wall-clock``     — ``time.time()`` & friends leak host wall-clock
+  into code whose only clock is supposed to be virtual.
+* ``det.set-iteration``  — iterating a ``set``/``frozenset`` yields
+  hash-order, which varies across processes (PYTHONHASHSEED) for str
+  keys; wrap in ``sorted(...)`` before iterating. Membership tests are
+  fine — only iteration order is nondeterministic.
+
+The rule only fires inside ``repro/core/`` and ``repro/serving/`` — the
+deterministic replay core. Benchmarks and launch scripts may time and
+sample freely.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from ..astutil import FunctionIndex, dotted_name, imported_modules
+from ..findings import Finding
+from ..project import ParsedFile
+from ..registry import register_rule
+
+__all__ = ["DeterminismRule", "SCOPED_DIRS"]
+
+SCOPED_DIRS = ("repro/core/", "repro/serving/")
+
+#: np.random attributes that are fine: explicit-seed constructors and
+#: non-sampling plumbing (Generator is a type annotation / isinstance
+#: target; default_rng is checked separately for a missing seed argument)
+_NP_RANDOM_OK = {"default_rng", "Generator", "SeedSequence", "BitGenerator",
+                 "PCG64", "Philox"}
+
+_WALL_CLOCK = {"time.time", "time.time_ns", "time.perf_counter",
+               "time.perf_counter_ns", "time.monotonic",
+               "time.monotonic_ns", "time.process_time",
+               "datetime.datetime.now", "datetime.datetime.utcnow",
+               "datetime.date.today"}
+
+#: stdlib random's module-level samplers (all draw from the hidden global
+#: Mersenne Twister); random.Random(seed)/SystemRandom instances are fine
+_STDLIB_SAMPLERS = {"random", "randint", "randrange", "uniform", "choice",
+                    "choices", "shuffle", "sample", "gauss", "normalvariate",
+                    "betavariate", "expovariate", "seed", "getrandbits"}
+
+
+def _numpy_aliases(pf: ParsedFile) -> Set[str]:
+    return {local for local, mod in imported_modules(pf.tree).items()
+            if mod == "numpy"}
+
+
+@register_rule
+class DeterminismRule:
+    family = "det"
+    scope = "file"
+
+    def check(self, pf: ParsedFile) -> Iterator[Finding]:
+        if pf.tree is None or not any(d in pf.rel for d in SCOPED_DIRS):
+            return
+        np_names = _numpy_aliases(pf)
+        mods = imported_modules(pf.tree)
+        has_random = any(m == "random" for m in mods.values())
+        has_time = any(m in ("time", "datetime") for m in mods.values())
+        index = FunctionIndex(pf.tree)
+        bindings = self._set_bindings(pf, index)
+        for node in pf.walk():
+            if isinstance(node, ast.Call):
+                yield from self._check_call(pf, node, np_names,
+                                            has_random, has_time)
+            elif isinstance(node, (ast.For, ast.comprehension)):
+                it = node.iter
+                line = getattr(node, "lineno", it.lineno)
+                scope = index.enclosing(line)
+                local = bindings.get(scope, set()) | bindings.get(None, set())
+                if self._is_set_expr(it, local):
+                    yield Finding(
+                        pf.rel, line, "det.set-iteration",
+                        "iteration over an unordered set — hash order "
+                        "varies across processes; iterate sorted(...) "
+                        "instead")
+
+    def _check_call(self, pf: ParsedFile, node: ast.Call,
+                    np_names: Set[str], has_random: bool,
+                    has_time: bool) -> Iterator[Finding]:
+        name = dotted_name(node.func)
+        if name is None:
+            return
+        parts = name.split(".")
+        # numpy global-state samplers: np.random.<fn>(...)
+        if len(parts) >= 3 and parts[0] in np_names \
+                and parts[1] == "random" and parts[2] not in _NP_RANDOM_OK:
+            yield Finding(pf.rel, node.lineno, "det.unseeded-rng",
+                          f"{name}() draws from numpy's hidden global RNG "
+                          "state — use a seeded np.random.default_rng")
+        # entropy-seeded generator: np.random.default_rng() with no args
+        elif len(parts) >= 3 and parts[0] in np_names \
+                and parts[1] == "random" and parts[2] == "default_rng" \
+                and not node.args and not node.keywords:
+            yield Finding(pf.rel, node.lineno, "det.unseeded-rng",
+                          "np.random.default_rng() without a seed is "
+                          "entropy-seeded — pass an explicit seed")
+        # stdlib random module samplers
+        elif has_random and len(parts) == 2 and parts[0] == "random" \
+                and parts[1] in _STDLIB_SAMPLERS:
+            yield Finding(pf.rel, node.lineno, "det.unseeded-rng",
+                          f"{name}() uses the stdlib global RNG — use a "
+                          "seeded np.random.default_rng (or "
+                          "random.Random(seed))")
+        elif has_time and name in _WALL_CLOCK:
+            yield Finding(pf.rel, node.lineno, "det.wall-clock",
+                          f"{name}() reads host wall-clock inside the "
+                          "deterministic core — thread virtual time "
+                          "through instead")
+
+    def _is_set_expr(self, node: ast.AST, bound: Set[str]) -> bool:
+        """Is ``node`` (a loop's iterable) statically a set?"""
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Call):
+            fname = dotted_name(node.func)
+            if fname in ("set", "frozenset"):
+                return True
+            # set-returning set methods: a.union(b), a.difference(b), ...
+            if isinstance(node.func, ast.Attribute) and node.func.attr in (
+                    "union", "intersection", "difference",
+                    "symmetric_difference") \
+                    and self._is_set_expr(node.func.value, bound):
+                return True
+        if isinstance(node, ast.BinOp) and isinstance(
+                node.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)):
+            return self._is_set_expr(node.left, bound) \
+                or self._is_set_expr(node.right, bound)
+        if isinstance(node, ast.Name):
+            return node.id in bound
+        return False
+
+    def _set_bindings(self, pf: ParsedFile, index: FunctionIndex):
+        """Names assigned from a literal/constructor set, keyed by the
+        enclosing function's qualname (None = module level). Scoping per
+        function keeps a set-typed local in one method from tainting a
+        same-named parameter of another."""
+        out: dict = {}
+        for node in pf.walk():
+            if isinstance(node, ast.Assign):
+                v = node.value
+                if isinstance(v, (ast.Set, ast.SetComp)) or (
+                        isinstance(v, ast.Call)
+                        and dotted_name(v.func) in ("set", "frozenset")):
+                    scope = index.enclosing(node.lineno)
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            out.setdefault(scope, set()).add(t.id)
+        return out

@@ -1,0 +1,91 @@
+"""``imports`` — unused-import detection (the in-repo F401).
+
+CI's ruff lane catches these too, but ruff is not installed in every dev
+container this repo runs in; this rule keeps the check available wherever
+``python -m repro.analysis`` runs, with the same suppression/baseline
+machinery as the repo-invariant rules.
+
+``__init__.py`` files are exempt (their imports *are* the re-export
+surface), as are names listed in ``__all__``, ``from __future__``
+imports, and explicit re-export aliases (``import x as x``).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Set, Tuple
+
+from ..findings import Finding
+from ..project import ParsedFile
+from ..registry import register_rule
+
+__all__ = ["UnusedImportRule"]
+
+
+def _exported_names(tree: ast.AST) -> Set[str]:
+    """Names in ``__all__`` (string-literal lists/tuples only)."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "__all__"
+                for t in node.targets):
+            if isinstance(node.value, (ast.List, ast.Tuple)):
+                for elt in node.value.elts:
+                    if isinstance(elt, ast.Constant) \
+                            and isinstance(elt.value, str):
+                        out.add(elt.value)
+    return out
+
+
+@register_rule
+class UnusedImportRule:
+    family = "imports"
+    scope = "file"
+
+    def check(self, pf: ParsedFile) -> Iterator[Finding]:
+        if pf.tree is None or pf.rel.endswith("__init__.py"):
+            return
+        imported: List[Tuple[str, int, str]] = []   # (name, line, spelled)
+        for node in ast.walk(pf.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    local = a.asname or a.name.split(".")[0]
+                    if a.asname == a.name:
+                        continue                    # explicit re-export
+                    imported.append((local, node.lineno, a.name))
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "__future__":
+                    continue
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    if a.asname == a.name:
+                        continue                    # explicit re-export
+                    local = a.asname or a.name
+                    imported.append((local, node.lineno,
+                                     f"{node.module or '.'}.{a.name}"))
+        if not imported:
+            return
+        used: Set[str] = set()
+        for node in ast.walk(pf.tree):
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                used.add(node.id)
+            elif isinstance(node, ast.Attribute):
+                # the base Name is already collected; nothing extra needed
+                pass
+        # names referenced in string annotations ("ClusterTopology") count
+        for node in ast.walk(pf.tree):
+            if isinstance(node, ast.Constant) and isinstance(node.value, str):
+                txt = node.value
+                # plausible annotation strings only — a docstring that
+                # *mentions* a class must not mark its import as used
+                if txt.isidentifier() or (
+                        " " not in txt and ("[" in txt or "." in txt)):
+                    for name, _, _ in imported:
+                        if name in txt:
+                            used.add(name)
+        used |= _exported_names(pf.tree)
+        for name, line, spelled in imported:
+            if name not in used:
+                yield Finding(pf.rel, line, "imports.unused",
+                              f"{spelled!r} imported but unused")

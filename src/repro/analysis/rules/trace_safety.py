@@ -1,0 +1,525 @@
+"""``trace`` — recompile/concretization hazards in jit-traced code.
+
+The engine's contract (PRs 4-7) is that recalibration, share-table
+refreshes and chunked prefill never recompile: every step function is
+``jax.jit``-compiled once per shape signature, and placement/share
+changes ride through as plain array inputs. The hazards that silently
+break this are all *Python-level* operations on traced values:
+
+* ``trace.python-branch`` — ``if``/``while``/``assert`` on a traced value
+  raises ``TracerBoolConversionError`` at trace time, or — worse, when the
+  value happens to be weakly typed — bakes one branch into the compiled
+  program. Use ``jnp.where`` / ``lax.cond``/``lax.select``.
+* ``trace.concretize``    — ``int()``/``float()``/``bool()`` casts,
+  ``.item()``/``.tolist()``, and ``np.*`` calls on traced values force a
+  host round-trip: a trace-time error under jit, a silent device sync
+  (and a recompile per value for shape-affecting uses) elsewhere.
+* ``trace.shape-branch``  — branching on a traced operand's ``.shape`` /
+  ``.ndim`` / ``.size`` is legal (shapes are static) but compiles one
+  program per distinct shape; flagged as a *warning* so intentional
+  specialization (e.g. one compile per chunk width) carries a justified
+  inline suppression instead of hiding.
+
+Reachability: a function is traced when it is (a) decorated with / passed
+to ``jit``/``shard_map``/``pallas_call``/``vmap``/``grad``/``lax.*``
+control-flow, (b) returned by a factory whose *result* is jitted
+(``jax.jit(prefill_fn(cfg))`` — the repo's dominant pattern), or (c)
+called from a traced function. Taint is interprocedural with per-call
+argument masks: a helper called with only static (closure/config) args
+stays untainted, so ``if cfg.is_moe:`` branching never false-positives.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from ..astutil import dotted_name, from_imports, imported_modules
+from ..findings import Finding
+from ..project import ParsedFile, Project
+from ..registry import register_rule
+
+__all__ = ["TraceSafetyRule", "TRACING_ENTRYPOINTS"]
+
+#: call/decorator names (last dotted segment) whose function-valued
+#: arguments are traced by JAX
+TRACING_ENTRYPOINTS = {
+    "jit", "pjit", "shard_map", "pallas_call", "vmap", "pmap", "grad",
+    "value_and_grad", "remat", "checkpoint", "scan", "cond", "while_loop",
+    "fori_loop", "switch", "associated_scan", "custom_vjp", "custom_jvp",
+}
+
+#: attribute reads that stay static under tracing (abstract-value metadata)
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "aval",
+                 "weak_type"}
+_SHAPE_ATTRS = {"shape", "ndim", "size"}
+
+#: calls whose result is always a static Python value
+_STATIC_FUNCS = {"len", "isinstance", "issubclass", "hasattr", "callable",
+                 "type", "id", "repr", "str", "format"}
+
+_CAST_FUNCS = {"int", "float", "bool", "complex"}
+
+_CONCRETIZING_METHODS = {"item", "tolist", "__array__"}
+
+
+def _module_of(rel: str) -> Optional[str]:
+    """Dotted module for a repo-relative path (anchored at ``repro``)."""
+    parts = rel.split("/")
+    if "repro" not in parts or not rel.endswith(".py"):
+        return None
+    parts = parts[parts.index("repro"):]
+    parts[-1] = parts[-1][:-3]
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+@dataclasses.dataclass
+class _Func:
+    """One project function with everything taint analysis needs."""
+
+    node: ast.AST                    # FunctionDef / AsyncFunctionDef
+    qualname: str
+    module: str
+    pf: ParsedFile
+    #: param names currently known tainted (grows monotonically)
+    tainted: Set[str] = dataclasses.field(default_factory=set)
+    traced: bool = False
+
+    @property
+    def params(self) -> List[str]:
+        a = self.node.args
+        names = [p.arg for p in (a.posonlyargs + a.args + a.kwonlyargs)]
+        if a.vararg:
+            names.append(a.vararg.arg)
+        if a.kwarg:
+            names.append(a.kwarg.arg)
+        return [n for n in names if n not in ("self", "cls")]
+
+
+class _ModuleView:
+    """Name-resolution view of one module: defs, imports, nested map."""
+
+    def __init__(self, pf: ParsedFile, module: str):
+        self.pf = pf
+        self.module = module
+        self.defs: Dict[str, ast.AST] = {}
+        if pf.tree is not None:
+            for node in pf.tree.body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    self.defs[node.name] = node
+            self.imports = imported_modules(pf.tree)
+            self.froms = from_imports(pf.tree)
+        else:
+            self.imports, self.froms = {}, {}
+
+    def resolve_from(self, name: str) -> Optional[Tuple[str, str]]:
+        """(module, original name) a from-imported local name refers to."""
+        if name not in self.froms:
+            return None
+        mod, orig, level = self.froms[name]
+        if level == 0:
+            return mod, orig
+        base = self.module.split(".")
+        # `from . import x` in a module drops the leaf; in a package
+        # (__init__) the module dotted name *is* the package already —
+        # both arrive here as the module name of the importing file
+        if not self.pf.rel.endswith("__init__.py"):
+            base = base[:-1]
+        base = base[:len(base) - (level - 1)] if level > 1 else base
+        return ".".join(base + (mod.split(".") if mod else [])).strip("."), \
+            orig
+
+
+class TraceSafetyRule:
+    family = "trace"
+    scope = "project"
+
+    # -- project model ------------------------------------------------------
+
+    def _build(self, project: Project):
+        views: Dict[str, _ModuleView] = {}
+        funcs: Dict[Tuple[str, str], _Func] = {}
+        parents: Dict[Tuple[str, str], Optional[str]] = {}
+        for pf in project.files:
+            mod = _module_of(pf.rel)
+            if mod is None or pf.tree is None:
+                continue
+            views[mod] = _ModuleView(pf, mod)
+
+            def visit(node: ast.AST, prefix: str, parent: Optional[str]):
+                for child in ast.iter_child_nodes(node):
+                    if isinstance(child, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef)):
+                        q = f"{prefix}{child.name}"
+                        funcs[(mod, q)] = _Func(child, q, mod, pf)
+                        parents[(mod, q)] = parent
+                        visit(child, f"{q}.<locals>.", q)
+                    elif isinstance(child, ast.ClassDef):
+                        visit(child, f"{prefix}{child.name}.", parent)
+                    else:
+                        visit(child, prefix, parent)
+
+            visit(pf.tree, "", None)
+        return views, funcs, parents
+
+    def _lookup(self, views, funcs, module: str, name: str, depth: int = 0,
+                ) -> Optional[Tuple[str, str]]:
+        """Resolve a bare name in ``module`` to a project function key,
+        chasing package-__init__ re-exports."""
+        if depth > 6 or module not in views:
+            return None
+        view = views[module]
+        if (module, name) in funcs:
+            return (module, name)
+        target = view.resolve_from(name)
+        if target is not None:
+            tmod, tname = target
+            if (tmod, tname) in funcs:
+                return (tmod, tname)
+            return self._lookup(views, funcs, tmod, tname, depth + 1)
+        return None
+
+    def _resolve_callee(self, views, funcs, module: str, call: ast.Call,
+                        ) -> Optional[Tuple[str, str]]:
+        """Project-function key a call's callee statically refers to."""
+        name = dotted_name(call.func)
+        if name is None:
+            return None
+        parts = name.split(".")
+        if len(parts) == 1:
+            return self._lookup(views, funcs, module, parts[0])
+        if len(parts) == 2 and module in views:
+            imod = views[module].imports.get(parts[0])
+            if imod is not None:
+                return self._lookup(views, funcs, imod, parts[1])
+        return None
+
+    def _callable_arg_targets(self, views, funcs, module: str,
+                              arg: ast.AST) -> List[Tuple[str, str]]:
+        """Functions an argument expression makes traceable: a direct
+        reference, a partial(...) wrapper, or a factory call whose
+        returned inner functions become the traced callable."""
+        out: List[Tuple[str, str]] = []
+        if isinstance(arg, ast.Name):
+            key = self._lookup(views, funcs, module, arg.id)
+            if key is not None:
+                out.append(key)
+        elif isinstance(arg, ast.Call):
+            cal = dotted_name(arg.func) or ""
+            if cal.split(".")[-1] == "partial":
+                if arg.args:
+                    out.extend(self._callable_arg_targets(
+                        views, funcs, module, arg.args[0]))
+            else:
+                key = self._resolve_callee(views, funcs, module, arg)
+                if key is not None:
+                    out.extend(self._returned_inners(funcs, key))
+        return out
+
+    def _returned_inners(self, funcs, key) -> List[Tuple[str, str]]:
+        """Nested functions a factory returns (``jax.jit(make_fn(cfg))``)."""
+        fn = funcs[key]
+        mod, q = key
+        inners = []
+        for node in ast.walk(fn.node):
+            if isinstance(node, ast.Return) \
+                    and isinstance(node.value, ast.Name):
+                ik = (mod, f"{q}.<locals>.{node.value.id}")
+                if ik in funcs:
+                    inners.append(ik)
+        return inners
+
+    # -- root discovery -----------------------------------------------------
+
+    def _static_params(self, fn: _Func, call: Optional[ast.Call],
+                       ) -> Set[str]:
+        """Param names jit treats as static at this entry point
+        (``static_argnames``/``static_argnums`` keywords): static params
+        arrive as concrete Python values, so branching on them is fine."""
+        out: Set[str] = set()
+        if call is None:
+            return out
+        a = fn.node.args
+        positional = [p.arg for p in (a.posonlyargs + a.args)]
+        for kw in call.keywords:
+            v = kw.value
+            if kw.arg == "static_argnames":
+                consts = [v] if isinstance(v, ast.Constant) else \
+                    list(getattr(v, "elts", ()))
+                out |= {c.value for c in consts
+                        if isinstance(c, ast.Constant)
+                        and isinstance(c.value, str)}
+            elif kw.arg == "static_argnums":
+                consts = [v] if isinstance(v, ast.Constant) else \
+                    list(getattr(v, "elts", ()))
+                for c in consts:
+                    if isinstance(c, ast.Constant) \
+                            and isinstance(c.value, int) \
+                            and 0 <= c.value < len(positional):
+                        out.add(positional[c.value])
+        return out
+
+    def _roots(self, views, funcs,
+               ) -> List[Tuple[Tuple[str, str], Set[str]]]:
+        roots: List[Tuple[Tuple[str, str], Set[str]]] = []
+        for (mod, q), fn in funcs.items():
+            for dec in getattr(fn.node, "decorator_list", ()):
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                name = (dotted_name(target) or "").split(".")[-1]
+                if name in TRACING_ENTRYPOINTS:
+                    call = dec if isinstance(dec, ast.Call) else None
+                    roots.append(((mod, q), self._static_params(fn, call)))
+                elif name == "partial" and isinstance(dec, ast.Call):
+                    inner = (dotted_name(dec.args[0]) if dec.args else
+                             None) or ""
+                    if inner.split(".")[-1] in TRACING_ENTRYPOINTS:
+                        roots.append(((mod, q),
+                                      self._static_params(fn, dec)))
+        for mod, view in views.items():
+            if view.pf.tree is None:
+                continue
+            for node in ast.walk(view.pf.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = (dotted_name(node.func) or "").split(".")[-1]
+                if name not in TRACING_ENTRYPOINTS:
+                    continue
+                for arg in list(node.args) + [kw.value
+                                              for kw in node.keywords]:
+                    for key in self._callable_arg_targets(
+                            views, funcs, mod, arg):
+                        roots.append(
+                            (key, self._static_params(funcs[key], node)))
+        return roots
+
+    # -- taint engine -------------------------------------------------------
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        views, funcs, parents = self._build(project)
+        if not funcs:
+            return
+        worklist = []
+        for key, static in self._roots(views, funcs):
+            fn = funcs[key]
+            new = set(fn.params) - static     # static_argnames stay Python
+            if not fn.traced or new - fn.tainted:
+                fn.traced = True
+                fn.tainted |= new
+                worklist.append(key)
+        seen_edges: Set[Tuple[Tuple[str, str], Tuple[str, str]]] = set()
+        steps = 0
+        while worklist and steps < 10_000:
+            steps += 1
+            key = worklist.pop()
+            fn = funcs[key]
+            local_taint = self._local_taint(fn)
+            for call in ast.walk(fn.node):
+                if not isinstance(call, ast.Call):
+                    continue
+                callee = self._resolve_callee(views, funcs, fn.module, call)
+                if callee is None:
+                    # function-valued args to lax control flow etc.
+                    name = (dotted_name(call.func) or "").split(".")[-1]
+                    if name in TRACING_ENTRYPOINTS:
+                        for arg in call.args:
+                            for t in self._callable_arg_targets(
+                                    views, funcs, fn.module, arg):
+                                tfn = funcs[t]
+                                if not tfn.traced or \
+                                        set(tfn.params) - tfn.tainted:
+                                    tfn.traced = True
+                                    tfn.tainted |= set(tfn.params)
+                                    worklist.append(t)
+                    continue
+                cfn = funcs[callee]
+                new = self._tainted_call_params(cfn, call, local_taint)
+                edge = (key, callee)
+                if not cfn.traced or (new - cfn.tainted) \
+                        or edge not in seen_edges:
+                    seen_edges.add(edge)
+                    grew = (new - cfn.tainted) or not cfn.traced
+                    cfn.traced = True
+                    cfn.tainted |= new
+                    if grew:
+                        worklist.append(callee)
+        for key, fn in funcs.items():
+            if fn.traced:
+                yield from self._check_function(fn)
+
+    def _tainted_call_params(self, cfn: _Func, call: ast.Call,
+                             local_taint: Set[str]) -> Set[str]:
+        """Callee param names receiving a tainted argument at this site."""
+        params = cfn.params
+        out: Set[str] = set()
+        for i, arg in enumerate(call.args):
+            if isinstance(arg, ast.Starred):
+                if self._tainted(arg.value, local_taint):
+                    out |= set(params)      # can't match positions — widen
+                continue
+            if i < len(params) and self._tainted(arg, local_taint):
+                out.add(params[i])
+        for kw in call.keywords:
+            if self._tainted(kw.value, local_taint):
+                out.add(kw.arg) if kw.arg is not None \
+                    else out.update(params)
+        return out & set(params)
+
+    def _local_taint(self, fn: _Func) -> Set[str]:
+        """Names tainted inside ``fn``: tainted params + derived locals
+        (two passes over the body cover loop-carried flows)."""
+        tainted = set(fn.tainted)
+        body = list(getattr(fn.node, "body", []))
+        for _ in range(2):
+            before = len(tainted)
+            for stmt in body:
+                for node in ast.walk(stmt):
+                    if isinstance(node, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)) \
+                            and node is not fn.node:
+                        continue     # nested defs analyzed separately
+                    if isinstance(node, ast.Assign):
+                        if self._tainted(node.value, tainted):
+                            for t in node.targets:
+                                tainted |= self._target_names(t)
+                    elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                        if node.value is not None \
+                                and self._tainted(node.value, tainted):
+                            tainted |= self._target_names(node.target)
+                    elif isinstance(node, ast.NamedExpr):
+                        if self._tainted(node.value, tainted):
+                            tainted |= self._target_names(node.target)
+                    elif isinstance(node, ast.For):
+                        if self._tainted(node.iter, tainted):
+                            tainted |= self._target_names(node.target)
+            if len(tainted) == before:
+                break
+        return tainted
+
+    def _target_names(self, target: ast.AST) -> Set[str]:
+        out: Set[str] = set()
+        for node in ast.walk(target):
+            if isinstance(node, ast.Name):
+                out.add(node.id)
+        return out
+
+    def _tainted(self, node: ast.AST, tainted: Set[str]) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in tainted
+        if isinstance(node, (ast.Constant, ast.Lambda)):
+            return False
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return False
+            return self._tainted(node.value, tainted)
+        if isinstance(node, ast.Compare):
+            # `x is None` / `x is not y`: Python identity on a tracer is a
+            # static answer, not a concretization
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False
+            # `"key" in batch`: dict/pytree membership of a static string
+            # key is a host-side container lookup, not a traced comparison
+            if all(isinstance(op, (ast.In, ast.NotIn)) for op in node.ops) \
+                    and isinstance(node.left, ast.Constant) \
+                    and isinstance(node.left.value, str):
+                return False
+            return any(self._tainted(c, tainted)
+                       for c in [node.left] + node.comparators)
+        if isinstance(node, ast.Call):
+            name = (dotted_name(node.func) or "").split(".")[-1]
+            if name in _STATIC_FUNCS:
+                return False
+            children: List[ast.AST] = list(node.args) + \
+                [kw.value for kw in node.keywords]
+            if not isinstance(node.func, ast.Name):
+                children.append(node.func)
+            return any(self._tainted(c, tainted) for c in children)
+        return any(self._tainted(c, tainted)
+                   for c in ast.iter_child_nodes(node)
+                   if isinstance(c, ast.expr))
+
+    # -- hazard checks ------------------------------------------------------
+
+    def _check_function(self, fn: _Func) -> Iterator[Finding]:
+        tainted = self._local_taint(fn)
+        rel = fn.pf.rel
+        where = f"{fn.qualname} (traced: reachable from a jit/shard_map/" \
+                "pallas entry point)"
+        for node in ast.walk(fn.node):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not fn.node:
+                continue             # nested defs get their own pass
+            if isinstance(node, (ast.If, ast.While)):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                yield from self._branch_findings(rel, node.test,
+                                                 node.lineno, kind,
+                                                 tainted, where)
+            elif isinstance(node, ast.Assert):
+                yield from self._branch_findings(rel, node.test,
+                                                 node.lineno, "assert",
+                                                 tainted, where)
+            elif isinstance(node, ast.Call):
+                yield from self._call_findings(rel, node, tainted, where, fn)
+
+    def _branch_findings(self, rel, test, lineno, kind, tainted, where,
+                         ) -> Iterator[Finding]:
+        if self._tainted(test, tainted):
+            yield Finding(
+                rel, lineno, "trace.python-branch",
+                f"Python `{kind}` on a traced value in {where} — "
+                "concretizes at trace time; use jnp.where / lax.cond")
+            return
+        for node in ast.walk(test):
+            if isinstance(node, ast.Attribute) \
+                    and node.attr in _SHAPE_ATTRS \
+                    and self._tainted_base(node.value, tainted):
+                yield Finding(
+                    rel, lineno, "trace.shape-branch",
+                    f"`{kind}` on a traced operand's .{node.attr} in "
+                    f"{where} — legal but compiles one program per "
+                    "distinct shape; suppress with a justification if "
+                    "the specialization is intentional",
+                    severity="warning")
+                return
+
+    def _tainted_base(self, node: ast.AST, tainted: Set[str]) -> bool:
+        """Tainted ignoring the static-attr exemption (x.shape has an
+        untainted *value* but a tainted *base operand*)."""
+        if isinstance(node, ast.Name):
+            return node.id in tainted
+        if isinstance(node, ast.Attribute):
+            return self._tainted_base(node.value, tainted)
+        if isinstance(node, ast.Subscript):
+            return self._tainted_base(node.value, tainted)
+        return self._tainted(node, tainted)
+
+    def _call_findings(self, rel, node: ast.Call, tainted, where, fn,
+                       ) -> Iterator[Finding]:
+        name = dotted_name(node.func)
+        last = (name or "").split(".")[-1]
+        args_tainted = any(self._tainted(a, tainted) for a in node.args)
+        if last in _CAST_FUNCS and name == last and args_tainted:
+            yield Finding(
+                rel, node.lineno, "trace.concretize",
+                f"{last}() cast of a traced value in {where} — forces "
+                "host concretization (trace-time error under jit)")
+        elif name is not None and "." in name and args_tainted:
+            base = name.split(".")[0]
+            if fn.pf.tree is not None \
+                    and imported_modules(fn.pf.tree).get(base) == "numpy":
+                yield Finding(
+                    rel, node.lineno, "trace.concretize",
+                    f"{name}() on a traced value in {where} — numpy "
+                    "pulls the array to host; use jnp/lax equivalents")
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _CONCRETIZING_METHODS \
+                and self._tainted(node.func.value, tainted):
+            yield Finding(
+                rel, node.lineno, "trace.concretize",
+                f".{node.func.attr}() on a traced value in {where} — "
+                "forces host concretization")
+
+
+register_rule(TraceSafetyRule)

@@ -28,7 +28,7 @@ always known at trace time) instead of querying the axis env.
 from __future__ import annotations
 
 import contextlib
-from typing import Dict, Optional, Sequence
+from typing import Dict, Sequence
 
 import jax
 

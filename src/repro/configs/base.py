@@ -8,7 +8,7 @@ config for CPU tests). ``repro.configs.get(name)`` resolves either.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 __all__ = ["ArchConfig", "ShapeSpec", "SHAPES", "shape_applicable"]
 
@@ -78,7 +78,6 @@ class ArchConfig:
         """Total parameter count (embeddings included once unless tied)."""
         d, hd = self.d_model, self.hd
         emb = self.vocab * d * (1 if self.tie_embeddings else 2)
-        per_layer = 0
         L = self.n_layers
         n_attn = self._n_attn_layers()
         # attention

@@ -19,7 +19,7 @@ swaps preserve the memory constraint; we do the same.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import List, Sequence
 
 import numpy as np
 

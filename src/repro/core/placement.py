@@ -44,7 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Callable, List, Optional, Sequence, Union
+from typing import Optional, Sequence, Union
 
 import numpy as np
 

@@ -147,7 +147,7 @@ class SolveContext:
         if self.perf_models is not None:
             pm = tuple(self.perf_models)
             if len(pm) != self.n_ranks:
-                raise ValueError(f"need one perf model per rank "
+                raise ValueError("need one perf model per rank "
                                  f"({len(pm)} != {self.n_ranks})")
             object.__setattr__(self, "perf_models", pm)
         if self.slot_budget is not None:
@@ -281,8 +281,8 @@ class _BuiltinPolicy:
             raise ValueError(
                 f"policy {self.name!r} places one expert per slot and "
                 f"cannot spread E={E} experts over {Gs} surviving ranks "
-                f"(E % survivors != 0) — elastic fail-over needs a "
-                f"replication-capable policy (e.g. vibe_r / vibe_h)")
+                "(E % survivors != 0) — elastic fail-over needs a "
+                "replication-capable policy (e.g. vibe_r / vibe_h)")
         if ctx.slot_budget is not None:
             budget = ctx.slot_budget[survivors]
         else:

@@ -70,12 +70,12 @@ class StealConfig:
         if self.headroom < 0:
             raise ValueError(f"headroom must be >= 0, got {self.headroom}")
         if not 0.0 < self.max_shift <= 1.0:
-            raise ValueError(f"max_shift must be in (0, 1], "
+            raise ValueError("max_shift must be in (0, 1], "
                              f"got {self.max_shift}")
         if self.interval < 1:
             raise ValueError(f"interval must be >= 1, got {self.interval}")
         if not 0.0 < self.smoothing <= 1.0:
-            raise ValueError(f"smoothing must be in (0, 1], "
+            raise ValueError("smoothing must be in (0, 1], "
                              f"got {self.smoothing}")
 
 

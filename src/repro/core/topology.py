@@ -279,12 +279,14 @@ def parse_topology(spec: str, ici_bw: float,
         try:
             n_nodes, per_node = (int(p) for p in s.split("x"))
         except ValueError:
-            raise ValueError(f"bad topology spec {spec!r} — want 'KxD'")
+            raise ValueError(
+                f"bad topology spec {spec!r} — want 'KxD'") from None
         return ClusterTopology.uniform(n_nodes, per_node, ici_bw, dcn_bw)
     try:
         n_ranks = int(s)
     except ValueError:
-        raise ValueError(f"bad topology spec {spec!r} — want 'KxD' or 'G'")
+        raise ValueError(
+            f"bad topology spec {spec!r} — want 'KxD' or 'G'") from None
     return ClusterTopology.flat(n_ranks, ici_bw)
 
 

@@ -11,11 +11,9 @@ they run in ``interpret=True`` mode, which executes the kernel body exactly
 
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 
 from .moe_ffn import fused_moe_ffn_pallas
 from .ragged_moe_ffn import ragged_moe_ffn_pallas

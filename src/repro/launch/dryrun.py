@@ -24,20 +24,18 @@ is a bug in the system, not in the run.
 """
 
 import argparse
-import dataclasses
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.configs import ALL_ARCHS, EXTRA_ARCHS, SHAPES, get, shape_applicable
-from repro.models import (ShardingRules, decode_fn, init_params, loss_fn,
+from repro.models import (decode_fn, init_params, loss_fn,
                           make_moe_tables, prefill_fn)
 from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update, \
     cosine_lr

@@ -98,7 +98,7 @@ def format_table(recs: List[Dict], mesh: str = "16x16") -> str:
         t = roofline_terms(rec)
         if t is None:
             lines.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
-                         f"ERROR | — | — | — |")
+                         "ERROR | — | — | — |")
             continue
         lines.append(
             f"| {rec['arch']} | {rec['shape']} "

@@ -61,7 +61,7 @@ def derive_slot_budget(n_ranks: int, n_experts: int, expert_bytes: int,
     if not isinstance(spec, str) or spec.lstrip("-").isdigit():
         return np.full(n_ranks, int(spec), dtype=np.int64)
     if spec != "auto":
-        raise ValueError(f"slots_per_rank must be 'auto', 'default' or an "
+        raise ValueError("slots_per_rank must be 'auto', 'default' or an "
                          f"integer, got {spec!r}")
     base = default_slots_per_rank(n_experts, n_ranks)
     stats = None
@@ -350,7 +350,7 @@ def main() -> int:
             print(f"[serve]   skipped {spec.kind}@{spec.at_step}: {why}")
         finished = sum(1 for r in records if np.isfinite(r.finished_at))
         print(f"[serve] chaos drill: {finished}/{len(records)} finished, "
-              f"token ledger prefill+decode="
+              "token ledger prefill+decode="
               f"{st.prefill_tokens + st.decode_tokens} vs useful+lost="
               f"{st.useful_tokens + st.lost_tokens}")
         if not report.ok:

@@ -18,17 +18,14 @@ leaf kind.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeSpec
 from repro.models import ShardingRules, init_cache, init_params
-from repro.training.optimizer import AdamWConfig, adamw_init
 
 __all__ = ["make_rules", "param_specs", "batch_specs", "cache_specs",
            "tree_shardings", "FSDP_THRESHOLD"]
@@ -172,7 +169,6 @@ def batch_specs(cfg: ArchConfig, rules: ShardingRules,
     dp = rules.dp
     dp_ok = B % max(rules.axis_size(dp), 1) == 0
     bspec = rules.spec(dp if dp_ok else None, None)
-    f32 = jnp.float32
     if cfg.frontend == "audio":
         structs = {"feats": jax.ShapeDtypeStruct((B, S, cfg.frontend_dim),
                                                  jnp.bfloat16),

@@ -103,7 +103,7 @@ def main() -> int:
     print(f"[train] done: loss {losses[0]:.4f} → {losses[-1]:.4f}")
     if tallies is not None:
         spread = tallies.sum(0)
-        print(f"[train] expert tally spread: max/min = "
+        print("[train] expert tally spread: max/min = "
               f"{spread.max() / max(spread.min(), 1):.2f}")
     return 0
 

@@ -523,7 +523,6 @@ def _block_body(cfg, rules, specs, bp, x, *, windows_blk, moe_tables_blk,
 
 def _embed(cfg, params, batch, rules):
     """Token/feature embedding → (x (B,S,D), labels_offset)."""
-    d = cfg.d_model
     if cfg.frontend == "audio":
         x = jnp.einsum("bsf,fd->bsd", batch["feats"],
                        params["frontend"])

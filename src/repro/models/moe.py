@@ -62,7 +62,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 
 from .common import dense_init
-from .sharding import ShardingRules, build_slots_of
+from .sharding import ShardingRules
 
 __all__ = [
     "moe_init", "moe_layer", "route", "expert_ffn_ref",
@@ -750,7 +750,6 @@ def moe_layer(
         ep_axes = rules.ep_all_axes
         ftp_axes = ()
     fleet = rules.axis_size(ep_axes)
-    e_loc = n_slots // max(fleet, 1)
     t = B * S
     capacity = _round_up(
         max(int(np.ceil(t * top_k / n_slots * max(cf, 2.0))), 4), 4)

@@ -13,8 +13,7 @@ tests) and on the production mesh (dry-run).
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 import jax

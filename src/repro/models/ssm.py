@@ -14,8 +14,7 @@ Numerics: states and gate accumulations in fp32, activations bf16.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -151,7 +150,6 @@ def mamba_step(p, x: jnp.ndarray, state):
 def mlstm_init(key, d: int, *, n_heads: int, expand: int = 2,
                dtype=jnp.bfloat16):
     di = expand * d
-    hd = di // n_heads
     ks = jax.random.split(key, 7)
     return {
         "up": dense_init(ks[0], d, 2 * di, dtype),

@@ -26,7 +26,10 @@ from __future__ import annotations
 import dataclasses
 import math
 import warnings
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
+
+if TYPE_CHECKING:
+    from repro.core.topology import ClusterTopology
 
 __all__ = ["KVCacheConfig", "SchedulerConfig", "ServingConfig",
            "EngineConfig", "SimConfig"]
@@ -52,7 +55,7 @@ class KVCacheConfig:
         if self.n_blocks < 1:
             raise ValueError(f"n_blocks must be >= 1, got {self.n_blocks}")
         if not 0.0 <= self.watermark < 1.0:
-            raise ValueError(f"watermark must be in [0, 1), "
+            raise ValueError("watermark must be in [0, 1), "
                              f"got {self.watermark}")
 
     def blocks_for(self, n_tokens: int) -> int:
@@ -98,19 +101,19 @@ class SchedulerConfig:
 
     def __post_init__(self):
         if self.prefill_chunk < 0:
-            raise ValueError(f"prefill_chunk must be >= 0, "
+            raise ValueError("prefill_chunk must be >= 0, "
                              f"got {self.prefill_chunk}")
         if self.max_prefill_tokens < 1:
-            raise ValueError(f"max_prefill_tokens must be >= 1, "
+            raise ValueError("max_prefill_tokens must be >= 1, "
                              f"got {self.max_prefill_tokens}")
         if self.decode_starvation_bound < 1:
-            raise ValueError(f"decode_starvation_bound must be >= 1, "
+            raise ValueError("decode_starvation_bound must be >= 1, "
                              f"got {self.decode_starvation_bound}")
         if not 0.0 <= self.shed_watermark <= 1.0:
-            raise ValueError(f"shed_watermark must be in [0, 1], "
+            raise ValueError("shed_watermark must be in [0, 1], "
                              f"got {self.shed_watermark}")
         if self.max_preemptions < 0:
-            raise ValueError(f"max_preemptions must be >= 0, "
+            raise ValueError("max_preemptions must be >= 0, "
                              f"got {self.max_preemptions}")
 
 
@@ -133,7 +136,7 @@ class ServingConfig:
         if self.max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
         if self.moe_impl not in (None, "ragged", "capacity"):
-            raise ValueError(f"moe_impl must be 'ragged' or 'capacity', "
+            raise ValueError("moe_impl must be 'ragged' or 'capacity', "
                              f"got {self.moe_impl!r}")
 
 
@@ -223,5 +226,5 @@ class SimConfig(ServingConfig):
     def __post_init__(self):
         super().__post_init__()
         if self.moe_impl not in ("ragged", "capacity"):
-            raise ValueError(f"moe_impl must be 'ragged' or 'capacity', "
+            raise ValueError("moe_impl must be 'ragged' or 'capacity', "
                              f"got {self.moe_impl!r}")

@@ -32,7 +32,6 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
-import numpy as np
 
 from .engine import Engine
 from .metrics import RequestRecord

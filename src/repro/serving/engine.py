@@ -124,7 +124,7 @@ class Engine:
         elif config is None:
             config = EngineConfig()
         if not isinstance(config, EngineConfig):
-            raise TypeError(f"config must be an EngineConfig, "
+            raise TypeError("config must be an EngineConfig, "
                             f"got {type(config).__name__}")
         self.config = config = config.resolve()
         self.cfg = cfg

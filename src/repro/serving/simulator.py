@@ -21,13 +21,12 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import heapq
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import (ClusterVariability, PerfModel, Placement,
+from repro.core import (ClusterVariability, Placement,
                         VariabilityEvent, ViBEController)
 from repro.core.placement import copy_enumeration, pad_phantom_column
 from .config import SimConfig
@@ -195,7 +194,7 @@ class EPSimulator:
         if not model.is_moe:
             raise ValueError("EPSimulator requires an MoE model config")
         if sim.moe_impl not in ("ragged", "capacity"):
-            raise ValueError(f"moe_impl must be 'ragged' or 'capacity', "
+            raise ValueError("moe_impl must be 'ragged' or 'capacity', "
                              f"got {sim.moe_impl!r}")
         self.model = model
         self.cluster = cluster

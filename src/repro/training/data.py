@@ -11,10 +11,8 @@ stable expert specialization (mirroring serving/workload.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig

@@ -84,9 +84,6 @@ def adamw_update(grads, state: OptState, params,
         new_master = base - lr * (upd + decay)
         return new_master.astype(p.dtype), mu, nu, new_master
 
-    masters = state.master if state.master is not None \
-        else jax.tree.map(lambda _: None, params,
-                          is_leaf=lambda x: x is None)
     flat_p, treedef = jax.tree.flatten(params)
     flat_g = treedef.flatten_up_to(grads)
     flat_mu = treedef.flatten_up_to(state.mu)

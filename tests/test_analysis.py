@@ -1,0 +1,524 @@
+"""repro.analysis: rule battery, suppressions, baseline, CLI, registry.
+
+Each rule family gets a positive fixture (the rule must fire) and a
+negative one (the rule must stay silent) — a linter that never fires and
+a linter that cries wolf are equally useless, so both directions are
+pinned. The final test runs the real analyzer over the real ``src/`` tree
+and requires zero findings: the committed code *is* the negative fixture
+for every rule at once.
+"""
+
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (Baseline, Finding, UnknownRuleError, analyze,
+                            get_rule, load_project, register_rule,
+                            registered_rules)
+from repro.analysis.cli import main as cli_main
+from repro.analysis.rules.clock_parity import ClockParityRule
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _write(root: Path, rel: str, body: str) -> Path:
+    p = root / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(body))
+    return p
+
+
+def _rules(report, family=None):
+    out = [f.rule for f in report.active]
+    return [r for r in out if family is None or r.startswith(family + ".")]
+
+
+# ---------------------------------------------------------------------------
+# findings + registry
+# ---------------------------------------------------------------------------
+
+class TestFindingAndRegistry:
+    def test_finding_validates_severity_and_rule_id(self):
+        with pytest.raises(ValueError, match="severity"):
+            Finding("a.py", 1, "det.x", "m", severity="fatal")
+        with pytest.raises(ValueError, match="family.check"):
+            Finding("a.py", 1, "nodot", "m")
+
+    def test_render_github_workflow_command(self):
+        f = Finding("src/a.py", 7, "det.wall-clock", "msg")
+        assert f.render_github() == \
+            "::error file=src/a.py,line=7,title=det.wall-clock::msg"
+        w = Finding("src/a.py", 7, "trace.shape-branch", "msg",
+                    severity="warning")
+        assert w.render_github().startswith("::warning ")
+
+    def test_builtin_families_registered(self):
+        assert set(registered_rules()) >= {"trace", "det", "parity",
+                                           "frozen", "imports"}
+
+    def test_duplicate_family_rejected_unless_replace(self):
+        class Dup:
+            family = "det"
+            scope = "file"
+
+            def check(self, pf):
+                return iter(())
+
+        with pytest.raises(ValueError, match="already"):
+            register_rule(Dup)
+        orig = get_rule("det")
+        try:
+            register_rule(Dup, replace=True)
+            assert isinstance(get_rule("det"), Dup)
+        finally:
+            register_rule(orig, replace=True)
+
+    def test_unknown_family_names_registered_ones(self):
+        with pytest.raises(UnknownRuleError, match="parity"):
+            get_rule("nope")
+
+    def test_non_conforming_rule_rejected(self):
+        with pytest.raises(ValueError, match="family"):
+            register_rule(object())
+
+
+# ---------------------------------------------------------------------------
+# suppressions + baseline + driver
+# ---------------------------------------------------------------------------
+
+class TestSuppressions:
+    BAD = """\
+        import time
+
+        def f():
+            return time.time()
+    """
+
+    def test_justified_suppression_silences_one_line(self, tmp_path):
+        _write(tmp_path, "repro/core/x.py",
+               self.BAD.replace(
+                   "return time.time()",
+                   "return time.time()  "
+                   "# viblint: ignore[det.wall-clock] -- test fixture"))
+        rep = analyze([tmp_path], root=tmp_path)
+        assert _rules(rep, "det") == []
+        assert [f.rule for f in rep.suppressed] == ["det.wall-clock"]
+        assert rep.suppression_count == 1
+
+    def test_family_prefix_suppresses_whole_family(self, tmp_path):
+        _write(tmp_path, "repro/core/x.py",
+               self.BAD.replace(
+                   "return time.time()",
+                   "return time.time()  # viblint: ignore[det] -- fixture"))
+        rep = analyze([tmp_path], root=tmp_path)
+        assert _rules(rep, "det") == []
+
+    def test_unjustified_suppression_is_a_finding_and_inert(self, tmp_path):
+        _write(tmp_path, "repro/core/x.py",
+               self.BAD.replace(
+                   "return time.time()",
+                   "return time.time()  # viblint: ignore[det.wall-clock]"))
+        rep = analyze([tmp_path], root=tmp_path)
+        # the original finding survives AND the bare marker is flagged
+        assert "det.wall-clock" in _rules(rep)
+        assert "suppress.unjustified" in _rules(rep)
+        assert rep.suppression_count == 0
+
+    def test_malformed_marker_flagged(self, tmp_path):
+        _write(tmp_path, "repro/core/x.py",
+               "x = 1  # viblint ignore[det.wall-clock] -- typo no colon\n")
+        rep = analyze([tmp_path], root=tmp_path)
+        assert "suppress.malformed" in _rules(rep)
+
+    def test_marker_in_docstring_is_inert(self, tmp_path):
+        _write(tmp_path, "repro/core/x.py", '''\
+            """Docs may quote `# viblint: ignore[det]` without effect."""
+            x = 1
+        ''')
+        rep = analyze([tmp_path], root=tmp_path)
+        assert rep.active == []
+        assert rep.suppression_count == 0
+
+    def test_syntax_error_reported_not_crashed(self, tmp_path):
+        _write(tmp_path, "repro/core/x.py", "def f(:\n")
+        rep = analyze([tmp_path], root=tmp_path)
+        assert "parse.syntax-error" in _rules(rep)
+
+
+class TestBaseline:
+    def test_baselined_finding_grandfathers(self, tmp_path):
+        _write(tmp_path, "repro/core/x.py", TestSuppressions.BAD)
+        rep = analyze([tmp_path], root=tmp_path)
+        (key,) = [f.key() for f in rep.active if f.family == "det"]
+        bl = Baseline(findings=[key])
+        rep2 = analyze([tmp_path], root=tmp_path, baseline=bl)
+        assert _rules(rep2, "det") == []
+        assert [f.key() for f in rep2.baselined] == [key]
+
+    def test_stale_baseline_entries_surfaced(self, tmp_path):
+        _write(tmp_path, "repro/core/x.py", "x = 1\n")
+        bl = Baseline(findings=[("repro/core/x.py", "det.wall-clock",
+                                 "long gone")])
+        rep = analyze([tmp_path], root=tmp_path, baseline=bl)
+        assert rep.ok
+        assert len(rep.stale_baseline) == 1
+
+    def test_dump_load_roundtrip(self, tmp_path):
+        bl = Baseline(suppression_budget=3)
+        f = Finding("a.py", 5, "det.wall-clock", "m")
+        bl.dump(tmp_path / "b.json", [f])
+        loaded = Baseline.load(tmp_path / "b.json")
+        assert loaded.findings == [f.key()]
+        assert loaded.suppression_budget == 3
+
+    def test_select_and_ignore_filter_by_family(self, tmp_path):
+        _write(tmp_path, "repro/core/x.py", """\
+            import time
+            import os
+
+            def f():
+                return time.time()
+        """)
+        rep = analyze([tmp_path], root=tmp_path, select=["imports"])
+        assert _rules(rep) == ["imports.unused"]
+        rep = analyze([tmp_path], root=tmp_path, ignore=["imports"])
+        assert "imports.unused" not in _rules(rep)
+        assert "det.wall-clock" in _rules(rep)
+
+
+class TestCLI:
+    def _fixture(self, tmp_path):
+        _write(tmp_path, "repro/core/x.py", TestSuppressions.BAD)
+        return tmp_path
+
+    def test_exit_one_on_findings_zero_when_clean(self, tmp_path, capsys):
+        root = self._fixture(tmp_path)
+        assert cli_main([str(root), "--root", str(root)]) == 1
+        assert "det.wall-clock" in capsys.readouterr().out
+        _write(tmp_path, "repro/core/x.py", "x = 1\n")
+        assert cli_main([str(root), "--root", str(root)]) == 0
+
+    def test_github_format(self, tmp_path, capsys):
+        root = self._fixture(tmp_path)
+        cli_main([str(root), "--root", str(root), "--format", "github"])
+        assert "::error file=" in capsys.readouterr().out
+
+    def test_write_baseline_then_clean(self, tmp_path, capsys):
+        root = self._fixture(tmp_path)
+        bl = tmp_path / "bl.json"
+        assert cli_main([str(root), "--root", str(root),
+                         "--baseline", str(bl), "--write-baseline"]) == 0
+        assert json.loads(bl.read_text())["findings"]
+        assert cli_main([str(root), "--root", str(root),
+                         "--baseline", str(bl)]) == 0
+
+
+# ---------------------------------------------------------------------------
+# rule battery: one positive + one negative fixture per family
+# ---------------------------------------------------------------------------
+
+class TestDeterminismRule:
+    def test_fires_on_unseeded_wallclock_and_set_iteration(self, tmp_path):
+        _write(tmp_path, "repro/core/bad.py", """\
+            import time
+            import random
+            import numpy as np
+
+            def f():
+                t = time.time()
+                x = np.random.rand(4)
+                g = np.random.default_rng()
+                r = random.random()
+                out = []
+                for v in {"a", "b"}:
+                    out.append(v)
+                return t, x, g, r, out
+        """)
+        rep = analyze([tmp_path], root=tmp_path, select=["det"])
+        rules = _rules(rep, "det")
+        assert rules.count("det.unseeded-rng") == 3
+        assert "det.wall-clock" in rules
+        assert "det.set-iteration" in rules
+
+    def test_silent_on_seeded_and_sorted(self, tmp_path):
+        _write(tmp_path, "repro/core/good.py", """\
+            import numpy as np
+
+            def f(seed):
+                rng = np.random.default_rng(seed)
+                x = rng.normal(size=4)
+                s = {"a", "b"}
+                out = [v for v in sorted(s)]
+                ok = "a" in s
+                return x, out, ok
+        """)
+        rep = analyze([tmp_path], root=tmp_path, select=["det"])
+        assert _rules(rep, "det") == []
+
+    def test_out_of_scope_dirs_exempt(self, tmp_path):
+        _write(tmp_path, "repro/launch/bench.py", """\
+            import time
+
+            def f():
+                return time.time()
+        """)
+        rep = analyze([tmp_path], root=tmp_path, select=["det"])
+        assert _rules(rep, "det") == []
+
+    def test_set_bindings_scoped_per_function(self, tmp_path):
+        # `dead` is a set in g() but a plain parameter in f(): iterating
+        # the f() parameter must not inherit g()'s set binding
+        _write(tmp_path, "repro/core/scoped.py", """\
+            def f(dead):
+                return tuple(sorted(set(int(x) for x in dead)))
+
+            def g(self):
+                dead = set([1, 2])
+                return len(dead)
+        """)
+        rep = analyze([tmp_path], root=tmp_path, select=["det"])
+        assert _rules(rep, "det") == []
+
+
+class TestFrozenConfigRule:
+    def test_fires_outside_post_init_and_on_registry_mutation(self,
+                                                              tmp_path):
+        _write(tmp_path, "repro/core/bad.py", """\
+            def get_policy(name):
+                return name
+
+            def tweak(cfg):
+                object.__setattr__(cfg, "seed", 1)
+
+            def hack():
+                p = get_policy("vibe")
+                p.solve = None
+                get_policy("eplb").name = "x"
+                setattr(get_policy("vibe"), "n", 2)
+        """)
+        rep = analyze([tmp_path], root=tmp_path, select=["frozen"])
+        rules = _rules(rep, "frozen")
+        assert "frozen.setattr-outside-post-init" in rules
+        assert rules.count("frozen.registry-mutation") == 3
+
+    def test_silent_inside_post_init(self, tmp_path):
+        _write(tmp_path, "repro/core/good.py", """\
+            import dataclasses
+
+            @dataclasses.dataclass(frozen=True)
+            class C:
+                x: int = 0
+
+                def __post_init__(self):
+                    object.__setattr__(self, "x", abs(self.x))
+        """)
+        rep = analyze([tmp_path], root=tmp_path, select=["frozen"])
+        assert _rules(rep, "frozen") == []
+
+
+class TestUnusedImportRule:
+    def test_fires_on_unused_silent_on_used(self, tmp_path):
+        _write(tmp_path, "pkg/mod.py", """\
+            import os
+            import sys
+
+            print(sys.argv)
+        """)
+        rep = analyze([tmp_path], root=tmp_path, select=["imports"])
+        (f,) = rep.active
+        assert f.rule == "imports.unused"
+        assert "'os'" in f.message
+
+    def test_init_reexports_and_future_and_annotations_exempt(self,
+                                                              tmp_path):
+        _write(tmp_path, "pkg/__init__.py", "from .mod import thing\n")
+        _write(tmp_path, "pkg/mod.py", """\
+            from __future__ import annotations
+            from typing import Optional
+
+            thing: "Optional[int]" = None
+        """)
+        rep = analyze([tmp_path], root=tmp_path, select=["imports"])
+        assert rep.active == []
+
+
+class TestTraceSafetyRule:
+    def test_fires_on_branch_and_cast_in_jitted_fn(self, tmp_path):
+        _write(tmp_path, "repro/kern.py", """\
+            import jax
+
+            @jax.jit
+            def f(x):
+                if x > 0:
+                    x = x + 1
+                n = int(x)
+                return x.item() + n
+        """)
+        rep = analyze([tmp_path], root=tmp_path, select=["trace"])
+        rules = _rules(rep, "trace")
+        assert "trace.python-branch" in rules
+        assert rules.count("trace.concretize") == 2
+
+    def test_taint_propagates_through_factory_and_callee(self, tmp_path):
+        # the repo's dominant pattern: jax.jit(make_fn(cfg)) — the inner
+        # closure is the traced function, and helpers it passes traced
+        # values to inherit the hazard
+        _write(tmp_path, "repro/fac.py", """\
+            import jax
+
+            def helper(v):
+                if v > 0:
+                    return v
+                return -v
+
+            def make_fn(cfg):
+                def inner(x):
+                    return helper(x) if cfg else x
+                return inner
+
+            step = jax.jit(make_fn(True))
+        """)
+        rep = analyze([tmp_path], root=tmp_path, select=["trace"])
+        assert "trace.python-branch" in _rules(rep, "trace")
+
+    def test_static_argnames_params_stay_python(self, tmp_path):
+        _write(tmp_path, "repro/kern.py", """\
+            import functools
+            import jax
+
+            @functools.partial(jax.jit, static_argnames=("bm", "flag"))
+            def f(x, bm, flag):
+                if bm > 8 and flag:
+                    x = x * 2
+                return x
+        """)
+        rep = analyze([tmp_path], root=tmp_path, select=["trace"])
+        assert _rules(rep, "trace") == []
+
+    def test_config_only_helpers_and_untraced_code_silent(self, tmp_path):
+        _write(tmp_path, "repro/app.py", """\
+            import jax
+
+            def pick(cfg):
+                if cfg.is_moe:
+                    return 1
+                return 2
+
+            def make_fn(cfg):
+                mode = pick(cfg)
+
+                def inner(x):
+                    return x * mode
+                return inner
+
+            step = jax.jit(make_fn(object()))
+
+            def host_side(x):
+                if x > 0:
+                    return int(x)
+                return 0
+        """)
+        rep = analyze([tmp_path], root=tmp_path, select=["trace"])
+        assert _rules(rep, "trace") == []
+
+    def test_shape_branch_is_a_warning(self, tmp_path):
+        _write(tmp_path, "repro/kern.py", """\
+            import jax
+
+            @jax.jit
+            def f(x):
+                if x.shape[0] > 8:
+                    return x * 2
+                return x
+        """)
+        rep = analyze([tmp_path], root=tmp_path, select=["trace"])
+        (f,) = rep.active
+        assert f.rule == "trace.shape-branch"
+        assert f.severity == "warning"
+
+    def test_string_key_membership_is_static(self, tmp_path):
+        _write(tmp_path, "repro/kern.py", """\
+            import jax
+
+            @jax.jit
+            def f(batch):
+                if "patches" in batch:
+                    return batch["patches"]
+                return batch["tokens"]
+        """)
+        rep = analyze([tmp_path], root=tmp_path, select=["trace"])
+        assert _rules(rep, "trace") == []
+
+
+class TestClockParityRule:
+    CFG = """\
+        import dataclasses
+
+        @dataclasses.dataclass(frozen=True)
+        class FakeCfg:
+            knob_a: float = 1.0
+            knob_b: float = 2.0
+            engine_only: float = 3.0
+
+            def __post_init__(self):
+                assert self.engine_only >= 0
+    """
+    ENG = "def price(cfg):\n    return cfg.knob_a + cfg.knob_b " \
+          "+ cfg.engine_only\n"
+    SIM = "def price(cfg):\n    return cfg.knob_a + cfg.knob_b\n"
+
+    def _rule(self):
+        return ClockParityRule(
+            shared_configs=(("FakeCfg", "fake/cfg.py"),),
+            engine_files=("fake/eng.py",), sim_files=("fake/sim.py",),
+            shared_files=("fake/helper.py",))
+
+    def _project(self, tmp_path, helper="x = 0\n"):
+        _write(tmp_path, "fake/cfg.py", self.CFG)
+        _write(tmp_path, "fake/eng.py", self.ENG)
+        _write(tmp_path, "fake/sim.py", self.SIM)
+        _write(tmp_path, "fake/helper.py", helper)
+        project, _ = load_project([tmp_path], root=tmp_path)
+        return project
+
+    def test_catches_engine_only_knob(self, tmp_path):
+        findings = list(self._rule().check(self._project(tmp_path)))
+        (f,) = findings
+        assert f.rule == "parity.one-clock"
+        assert "FakeCfg.engine_only" in f.message
+        assert "simulator" in f.message       # names the missing clock
+        assert f.path == "fake/cfg.py"        # anchored at the declaration
+
+    def test_shared_pricing_helper_counts_for_both_clocks(self, tmp_path):
+        project = self._project(
+            tmp_path, helper="def h(cfg):\n    return cfg.engine_only\n")
+        assert list(self._rule().check(project)) == []
+
+    def test_post_init_validation_is_not_pricing(self, tmp_path):
+        # engine_only is read in __post_init__ (validation) — that read
+        # alone must NOT make the knob look simulator-priced
+        project = self._project(tmp_path)
+        findings = list(self._rule().check(project))
+        assert [f.rule for f in findings] == ["parity.one-clock"]
+
+    def test_skips_silently_when_clocks_not_in_view(self, tmp_path):
+        _write(tmp_path, "fake/cfg.py", self.CFG)
+        project, _ = load_project([tmp_path], root=tmp_path)
+        assert list(self._rule().check(project)) == []
+
+
+# ---------------------------------------------------------------------------
+# the committed tree is the negative fixture for everything at once
+# ---------------------------------------------------------------------------
+
+class TestRepoIsClean:
+    def test_src_has_zero_unsuppressed_findings(self):
+        rep = analyze([REPO / "src"], root=REPO)
+        assert rep.active == [], "\n".join(f.render() for f in rep.active)
+
+    def test_committed_baseline_is_empty(self):
+        bl = Baseline.load(REPO / ".viblint-baseline.json")
+        assert bl.findings == []
+        assert bl.suppression_budget == 0

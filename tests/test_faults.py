@@ -15,7 +15,6 @@ Pins the PR's robustness invariants:
 * the simulator's injection path applies the same schedule vocabulary.
 """
 
-import dataclasses
 
 import numpy as np
 import pytest
@@ -23,9 +22,8 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.configs import get_smoke
-from repro.core import (ClusterTopology, DriftConfig, ViBEConfig,
-                        ViBEController, get_policy, make_cluster,
-                        registered_policies)
+from repro.core import (ClusterTopology, ViBEConfig, ViBEController,
+                        get_policy, make_cluster, registered_policies)
 from repro.serving import (Engine, EngineConfig, EPSimulator, FaultInjector,
                            FaultSchedule, FaultSpec, KVCacheConfig,
                            RejectReason, SchedulerConfig, SimConfig, SLO,

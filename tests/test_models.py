@@ -10,13 +10,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ALL_ARCHS, EXTRA_ARCHS, get, get_smoke, SHAPES, \
-    shape_applicable
+from repro.configs import ALL_ARCHS, EXTRA_ARCHS, get_smoke
 from repro.models import (block_layout, decode_fn, init_cache, init_params,
                           loss_fn, make_moe_tables, prefill_fn)
 from repro.models import ssm
 from repro.models.flash import flash_attention, flash_decode
-from repro.training import AdamWConfig, adamw_init, adamw_update
+from repro.training import adamw_init, adamw_update
 
 
 def _smoke_batch(cfg, B=2, S=16, seed=0):

@@ -10,8 +10,7 @@ from repro.core import (ReplicatedPlacement, default_slots_per_rank,
                         solve_model_placement, vibe_placement,
                         vibe_r_placement)
 from repro.core.placement import (_greedy_target_assign,
-                                  _greedy_target_assign_vec, _speed_targets,
-                                  eplb_placement)
+                                  _greedy_target_assign_vec, _speed_targets)
 
 
 def zipf_loads(rng, L, E, alpha=1.2, tokens=200_000.0):

@@ -1,0 +1,137 @@
+"""Runtime recompile tripwire: the engine's no-recompile contract, counted.
+
+The static ``trace`` rule proves no *code pattern* can trigger a
+recompile; this test proves the *running engine* doesn't: after a warmup
+that compiles each step function once per shape signature, a full
+production episode — chunked prefill, decode, a forced work-steal share
+refresh, and a forced recalibration — must add **zero** entries to any
+jit cache. ``PjitFunction._cache_size()`` counts compiled signatures
+directly, so a single silent recompile (a shape leak, a weak-type flip, a
+traced-value branch that specializes) fails the assert with the exact
+cache that grew.
+"""
+
+import dataclasses
+
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core import (DriftConfig, StealConfig, ViBEConfig,
+                        ViBEController, make_cluster)
+from repro.models import moe_perm_shape
+from repro.serving import (Engine, EngineConfig, SchedulerConfig,
+                           WORKLOADS, sample_requests)
+
+ARCH = "qwen3-moe-235b-a22b"
+
+
+def _engine():
+    """Adaptive controller + steal + chunked prefill: every moving part
+    that refreshes dispatch state between compiles is live at once."""
+    cfg = get_smoke(ARCH)
+    n_moe, E = moe_perm_shape(cfg, None, "train")
+    cluster = make_cluster(4, "mi325x", d_model=cfg.d_model,
+                           d_ff=cfg.moe_d_ff, experts_per_rank=E // 4)
+    rng = np.random.default_rng(9)
+    stale = rng.dirichlet(np.full(E, 0.15), size=n_moe) * 8192
+    ctl = ViBEController(
+        n_moe, E, 4, cluster.fit_models(),
+        ViBEConfig(policy="vibe_r", adaptive=True,
+                   drift=DriftConfig(window=8, interval=4, cooldown=4),
+                   steal=StealConfig(headroom=0.0, smoothing=1.0)),
+        initial_w=stale)
+    return Engine(
+        cfg,
+        EngineConfig(max_batch=2, max_seq=48, seed=0, weighted_routing=True,
+                     scheduler=SchedulerConfig(name="slo_edf",
+                                               prefill_chunk=8)),
+        controller=ctl, cluster=cluster)
+
+
+def _cache_sizes(eng):
+    out = {}
+    for name in ("_prefill", "_decode", "_prefill_chunk"):
+        fn = getattr(eng, name)
+        if fn is not None:
+            out[name] = fn._cache_size()
+    return out
+
+
+def _requests(n, seed, start_id=0):
+    reqs = sample_requests(WORKLOADS["sharegpt"], n, qps=100.0, seed=seed)
+    return [dataclasses.replace(r, req_id=start_id + i, prompt_len=20,
+                                output_len=6)
+            for i, r in enumerate(reqs)]
+
+
+def _force_steal(eng):
+    rs = eng.controller.rescheduler
+    rng = np.random.default_rng(4)
+    E = eng.controller.E
+    w = rng.dirichlet(np.full(E, 0.2), size=eng.n_moe) * 4096
+    for _ in range(5):
+        rs.observe(w)
+    assert rs.steals > 0, "fixture failed to trigger a steal"
+    assert eng._steal_dirty()
+    eng._apply_share()
+
+
+def _force_recalibration(eng):
+    ctl = eng.controller
+    rng = np.random.default_rng(7)
+    w0 = rng.dirichlet(np.full(ctl.E, 0.15), size=eng.n_moe) * 8192
+    upd = None
+    for k in range(64):
+        upd = upd or ctl.observe(
+            rng.poisson(np.roll(w0, 3 + k // 16, axis=1) / 5), tokens=1e4)
+        if upd is not None:
+            break
+    assert upd is not None, "fixture failed to trigger a recalibration"
+    eng._apply_perm(eng._controller_perm())
+
+
+class TestRecompileTripwire:
+    def test_zero_compiles_after_warmup(self):
+        eng = _engine()
+        assert all(s == 0 for s in _cache_sizes(eng).values())
+
+        # warmup episode: chunked prefill + decode compile once each
+        eng.submit(_requests(4, seed=0))
+        records = eng.run(max_steps=300)
+        assert sum(np.isfinite(r.finished_at) for r in records) == 4
+        assert eng.stats.chunk_steps >= 4 * 3   # 20 tokens / chunks of 8
+        warm = _cache_sizes(eng)
+        assert warm["_prefill_chunk"] >= 1
+        assert warm["_decode"] >= 1
+
+        # share refresh (work stealing) + recalibration (new placement) +
+        # a second full episode: all dispatch-state churn, zero compiles
+        _force_steal(eng)
+        assert eng.stats.steal_updates >= 1
+        _force_recalibration(eng)
+        assert eng.stats.migrations >= 1
+        eng.submit(_requests(4, seed=1, start_id=100))
+        records = eng.run(max_steps=300)   # cumulative: both episodes
+        assert sum(np.isfinite(r.finished_at) for r in records) == 8
+
+        after = _cache_sizes(eng)
+        grew = {k: (warm[k], after[k]) for k in warm if after[k] > warm[k]}
+        assert not grew, (
+            f"jit caches grew after warmup: {grew} — a recalibration, "
+            "share refresh or chunked-prefill step recompiled")
+
+    def test_cache_size_counter_is_live(self):
+        """Guard the tripwire's own instrument: _cache_size must actually
+        count compiles (a vacuous 0-forever counter would green-light
+        every recompile)."""
+        import jax
+        import jax.numpy as jnp
+
+        f = jax.jit(lambda x: x * 2)
+        assert f._cache_size() == 0
+        f(jnp.zeros(3))
+        assert f._cache_size() == 1
+        f(jnp.zeros(3))
+        assert f._cache_size() == 1
+        f(jnp.zeros(5))                 # new shape → one more compile
+        assert f._cache_size() == 2

@@ -11,7 +11,6 @@ to share-oblivious dispatch trips loudly.
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import PerfModel, vibe_r_placement
 from repro.models import build_copy_cdf, build_slots_of

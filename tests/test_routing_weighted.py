@@ -16,7 +16,6 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import PerfModel, reweight_shares_by_speed, vibe_r_placement
-from repro.models import build_copy_cdf, build_slots_of
 from repro.models.moe import _assignment_uniforms, _select_slots
 
 

@@ -8,7 +8,6 @@ record or stat mismatch. The matrix is registry-driven, so newly registered
 policies and schedulers are swept automatically.
 """
 
-import numpy as np
 import pytest
 
 from repro.configs import get_smoke

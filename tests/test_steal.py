@@ -517,7 +517,6 @@ class TestSimulatorSteal:
         wl = WORKLOADS["sonnet"]
         reqs = sample_requests(wl, 40, qps=20.0, seed=4)
         # serve a DIFFERENT routing mix than profiled → stale-plan regime
-        L = sim.cfg.ep_degree and sim.controller.L
         drift = routing_profile(WORKLOADS["sharegpt"],
                                 sim.controller.L, sim.controller.E)
         return sim.run(reqs, phase="prefill", drift_profile=drift,
@@ -525,7 +524,7 @@ class TestSimulatorSteal:
 
     def test_simulator_prices_steal_updates(self):
         sim, ctl = self._sim(steal=True)
-        recs = self._run(sim)
+        self._run(sim)
         assert ctl.rescheduler.steals > 0
         assert sim.steal_updates > 0
         assert not ctl.updates              # static controller: pure steal

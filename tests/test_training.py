@@ -15,7 +15,7 @@ from repro.training import (AdamWConfig, Checkpointer, DataConfig,
                             cosine_lr, elastic_targets, global_norm,
                             latest_step, load_checkpoint, replan_after_loss,
                             save_checkpoint, synthetic_batch)
-from repro.core import make_cluster, vibe_placement
+from repro.core import make_cluster
 
 
 def test_loss_decreases_on_moe_arch():
@@ -106,7 +106,7 @@ class TestCheckpoint:
     def test_restore_with_remesh_subprocess(self):
         """Checkpoint written on 1 device restores under an 8-device mesh
         with explicit NamedShardings (mesh A → mesh B)."""
-        import subprocess, sys, json
+        import subprocess, sys
         with tempfile.TemporaryDirectory() as d:
             tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
             save_checkpoint(d, 1, tree, n_shards=4)
